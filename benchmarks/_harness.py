@@ -1,0 +1,74 @@
+"""Shared benchmark harness.
+
+Benchmarks execute on N fake host devices (the CPU stand-in for a TPU slice)
+and measure wall-clock per operation.  Absolute numbers are CPU-emulation
+latencies; the *relative* numbers across RMA configurations are the
+reproduction targets (the paper's claims are all relative: thread- vs
+process-scope, ordered vs flush-separated, memhandle vs dynamic).
+
+Every module prints ``name,us_per_call,derived`` CSV rows (one per
+configuration point) so ``benchmarks.run`` can aggregate.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+N_DEV = 8
+
+
+def require_devices():
+    n = len(jax.devices())
+    if n < N_DEV:
+        raise SystemExit(
+            f"benchmarks need {N_DEV} host devices; run via benchmarks.run "
+            f"(sets XLA_FLAGS) — found {n}")
+
+
+def mesh1d(axis: str = "x"):
+    return jax.make_mesh((N_DEV,), (axis,),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def smap(f, mesh, in_specs=P("x"), out_specs=P("x")):
+    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+def scan_op(body, k_inner: int = 16):
+    """Wrap a window-op body into a K-iteration scan so per-call dispatch
+    overhead amortizes.  ``body(carry) -> carry``; carry is a pytree of
+    arrays."""
+    def wrapped(carry):
+        def step(c, _):
+            return body(c), None
+        out, _ = lax.scan(step, carry, None, length=k_inner)
+        return out
+    return wrapped, k_inner
+
+
+def time_fn(fn, args, *, iters: int = 30, warmup: int = 3, k_inner: int = 1):
+    """Median wall time per inner operation, in µs."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / k_inner)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+__all__ = ["N_DEV", "require_devices", "mesh1d", "smap", "scan_op",
+           "time_fn", "emit"]

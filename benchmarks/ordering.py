@@ -1,0 +1,91 @@
+"""Paper Fig. 10/11 — operation ordering (P2) vs flush-enforced ordering.
+
+Three variants of the producer→consumer pattern (paper Listings 1/2):
+
+* ``flush_between``  — put; **flush**; signal; flush   (Listing 1)
+* ``ordered``        — put; signal; flush              (Listing 2, P2)
+* ``unordered_burst``— n puts, one flush at the end (no ordering request —
+  the osu_put_latency-without-intermediate-synchronization baseline)
+
+And the Fig. 11 multi-stream variant: 8 streams issuing ordered sequences.
+"""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks._harness import (N_DEV, emit, mesh1d, require_devices,
+                                 scan_op, smap, time_fn)
+from repro.core.rma import Window, WindowConfig, put_signal
+
+SIZES = [2, 64, 1024, 4096]
+
+
+def main():
+    require_devices()
+    mesh = mesh1d()
+    perm = [(i, (i + 1) % N_DEV) for i in range(N_DEV)]
+    for size in SIZES:
+        nbytes = size * 4
+        data = jnp.ones((size,), jnp.float32)
+        pool = jnp.zeros((size + 8,), jnp.float32)
+
+        def flush_between(carry):
+            buf, d = carry
+            win = Window.allocate(buf, "x", N_DEV, WindowConfig(order=False))
+            win = put_signal(win, d, perm, data_offset=0, flag_offset=size)
+            win = win.flush()
+            return win.buffer, d
+
+        def ordered(carry):
+            buf, d = carry
+            win = Window.allocate(buf, "x", N_DEV, WindowConfig(order=True))
+            win = put_signal(win, d, perm, data_offset=0, flag_offset=size)
+            win = win.flush()
+            return win.buffer, d
+
+        def unordered_burst(carry):
+            buf, d = carry
+            win = Window.allocate(buf, "x", N_DEV, WindowConfig(order=False))
+            for _ in range(4):
+                win = win.put(d, perm, offset=0)
+            win = win.flush()
+            return win.buffer, d
+
+        for name, body in [("flush_between", flush_between),
+                           ("ordered", ordered),
+                           ("unordered_burst4", unordered_burst)]:
+            fn, k = scan_op(body, k_inner=8)
+            g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
+            us = time_fn(g, ((pool, data),), k_inner=k, iters=20)
+            emit(f"ordering/{name}/{nbytes}B", us, "fig10")
+
+    # Fig. 11: 8 worker streams, put+signal per stream, thread-scope flush
+    size = 256
+    data = jnp.ones((size,), jnp.float32)
+    pool = jnp.zeros((8 * (size + 8),), jnp.float32)
+    for order in (False, True):
+        cfg = WindowConfig(order=order, scope="thread", max_streams=8)
+
+        def body(carry, cfg=cfg, order=order):
+            buf, d = carry
+            win = Window.allocate(buf, "x", N_DEV, cfg)
+            for s in range(8):
+                base = s * (size + 8)
+                win = win.put(d, perm, offset=base, stream=s)
+                if not order:
+                    win = win.flush(stream=s)
+                win = win._accumulate_intrinsic(
+                    jnp.ones((1,), jnp.float32), perm, op="sum",
+                    offset=base + size, stream=s)
+            win = win.flush(stream=0)
+            return win.buffer, d
+
+        fn, k = scan_op(body, k_inner=4)
+        g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
+        us = time_fn(g, ((pool, data),), k_inner=k, iters=20)
+        emit(f"ordering/streams8_{'ordered' if order else 'flushed'}/1KiB", us,
+             "fig11 8 worker streams")
+
+
+if __name__ == "__main__":
+    main()

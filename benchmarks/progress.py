@@ -1,0 +1,79 @@
+"""Paper Fig. 5 — one-sided progress while the target is busy outside MPI.
+
+The origin issues ``n`` puts (each needing remote completion) while the
+target spends a fixed amount of compute "outside the runtime" before
+progressing.  On the true-RDMA paths (allocated window / memhandle) the
+transfers complete regardless of the target — per-op latency is independent
+of the target's busy time.  On the AM-emulation path the operations only
+apply when the target calls ``progress()``, so the origin's completion
+stalls behind the target's busy loop (paper: latency > t/n means no
+one-sided progress).
+"""
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from benchmarks._harness import (N_DEV, emit, mesh1d, require_devices,
+                                 smap, time_fn)
+from repro.core.rma import DynamicWindow, Window
+
+N_OPS = 16
+SIZE = 64
+
+
+def _busy(x, iters):
+    """A compute chain the target must finish before 'entering the runtime'."""
+    def step(c, _):
+        return c * 1.000001 + 0.5, None
+    out, _ = lax.scan(step, x, None, length=iters)
+    return out
+
+
+def main():
+    require_devices()
+    mesh = mesh1d()
+    perm = [(i, (i + 1) % N_DEV) for i in range(N_DEV)]
+    data = jnp.ones((SIZE,), jnp.float32)
+    pool = jnp.zeros((SIZE,), jnp.float32)
+
+    for busy_iters in (0, 20000, 80000):
+        def rdma(carry, busy_iters=busy_iters):
+            buf, d = carry
+            win = Window.allocate(buf, "x", N_DEV)
+            busy = _busy(jnp.float32(1.0), busy_iters)  # target-side work
+            for _ in range(N_OPS):
+                win = win.put(d, perm)
+                win = win.flush()
+            # RDMA completion does not depend on `busy`; it joins afterwards
+            return win.buffer + busy * 0, d
+
+        def am(carry, busy_iters=busy_iters):
+            buf, d = carry
+            win = DynamicWindow.create_dynamic(buf, "x", N_DEV, am_msg=SIZE,
+                                               am_slots=N_OPS + 1)
+            win = win.attach(0, offset=0, size=SIZE)
+            busy = _busy(jnp.float32(1.0), busy_iters)
+            for _ in range(N_OPS):
+                win = win.put_am(d, perm, slot=0)
+            # target only progresses after its busy phase
+            win = win._with_dyn(am_count=(win.am_count + jnp.int32(busy * 0)))
+            win = win.progress()
+            win = win.flush_am(perm)
+            return win.buffer, d
+
+        for name, body, onesided in [("rdma", rdma, True), ("am", am, False)]:
+            g = smap(body, mesh, in_specs=P(), out_specs=P("x"))
+            us = time_fn(g, ((pool, data),), k_inner=N_OPS, iters=15)
+            # NOTE: single-CPU emulation serializes target busy-work with the
+            # origin's transfers, so wall time inflates for BOTH paths; the
+            # one-sidedness claim (paper Fig. 5) is the structural column:
+            # on the AM path, completion *depends* on the target's progress
+            # call (asserted in tests/mdev/rma_semantics.py), on the RDMA
+            # path it does not.
+            emit(f"progress/{name}/busy{busy_iters}", us,
+                 f"fig5 one_sided_progress={onesided}")
+
+
+if __name__ == "__main__":
+    main()

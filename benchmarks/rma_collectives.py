@@ -1,0 +1,45 @@
+"""Beyond-paper — one-sided ring collectives built on the window layer.
+
+Compares wall time of:
+
+* ``rma_allreduce_ordered``   — P2-ordered ring (2(n−1) chained phases)
+* ``rma_allreduce_flushed``   — no-P2 baseline (per-hop completion flush)
+* ``rma_allreduce_bidir``     — both ring directions (half per-link bytes)
+* ``lax_psum``                — XLA's built-in all-reduce (reference)
+
+Also emits the HLO collective-permute phase counts (the structural claim).
+"""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks._harness import (N_DEV, emit, mesh1d, require_devices,
+                                 smap, time_fn)
+from repro.core.rma import rma_all_reduce
+
+SIZES = [1024, 16384, 262144]  # f32 elements per device
+
+
+def main():
+    require_devices()
+    mesh = mesh1d()
+    for size in SIZES:
+        x = jnp.ones((size,), jnp.float32)
+        variants = {
+            "rma_allreduce_ordered": lambda v: rma_all_reduce(
+                v, "x", N_DEV, order=True),
+            "rma_allreduce_flushed": lambda v: rma_all_reduce(
+                v, "x", N_DEV, order=False),
+            "rma_allreduce_bidir": lambda v: rma_all_reduce(
+                v, "x", N_DEV, order=True, bidirectional=True),
+            "lax_psum": lambda v: jax.lax.psum(v, "x"),
+        }
+        for name, body in variants.items():
+            g = smap(body, mesh, in_specs=P(), out_specs=P("x"))
+            us = time_fn(g, (x,), iters=20)
+            cp = g.lower(x).compile().as_text().count("collective-permute(")
+            emit(f"rma_collectives/{name}/{size*4}B", us, f"cp_phases={cp}")
+
+
+if __name__ == "__main__":
+    main()

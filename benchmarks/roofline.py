@@ -1,0 +1,106 @@
+"""Roofline table generator — reads dry-run JSONL, emits the §Roofline table.
+
+Usage:
+  python -m benchmarks.roofline [--jsonl benchmarks/results/dryrun_baseline.jsonl]
+                                [--mesh 16x16] [--md]
+
+Per (arch × shape): the three roofline terms (seconds, per-device ==
+global/chips), the dominant term, MODEL_FLOPS/HLO_FLOPs (useful-compute
+ratio), peak bytes/device, and a one-line mitigation note for the dominant
+term.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+MITIGATION = {
+    "compute": "increase arithmetic intensity (larger per-chip batch) or add chips",
+    "memory": "fuse/blockwise the attention+elementwise chain; cut remat traffic "
+              "(policy or offload); shard saved activations (SP)",
+    "collective": "reduce-scatter instead of all-reduce; overlap grads with bwd "
+                  "(P2-ordered ring); compress cross-pod traffic",
+}
+
+
+def load(jsonl: str, mesh: str | None = None):
+    rows = []
+    with open(jsonl) as f:
+        for line in f:
+            r = json.loads(line)
+            if mesh and r.get("mesh") != mesh:
+                continue
+            rows.append(r)
+    return rows
+
+
+def fmt_table(rows, *, md: bool = False) -> str:
+    hdr = ["arch", "shape", "mesh", "peak GiB/dev", "compute_s", "memory_s",
+           "collective_s", "dominant", "useful_flops", "note"]
+    lines = []
+    if md:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append(",".join(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r.get("mesh", "-"))):
+        if r["status"] == "skipped":
+            vals = [r["arch"], r["shape"], r.get("mesh", "-"), "-", "-", "-", "-",
+                    "SKIP", "-", r["why"][:60]]
+        elif r["status"] != "ok":
+            vals = [r["arch"], r["shape"], r.get("mesh", "-"), "-", "-", "-", "-",
+                    "FAIL", "-", r.get("error", "")[:60]]
+        else:
+            roof = r["roofline"]
+            vals = [
+                r["arch"], r["shape"], r["mesh"],
+                f"{r['bytes_per_device']['peak']/2**30:.2f}",
+                f"{roof['compute_s']:.4g}",
+                f"{roof['memory_s']:.4g}",
+                f"{roof['collective_s']:.4g}",
+                roof["dominant"],
+                f"{r['useful_flops_ratio']:.3f}" if r.get("useful_flops_ratio") else "-",
+                MITIGATION[roof["dominant"]][:80],
+            ]
+        if md:
+            lines.append("| " + " | ".join(str(v) for v in vals) + " |")
+        else:
+            lines.append(",".join(str(v) for v in vals))
+    return "\n".join(lines)
+
+
+def summarize(rows) -> str:
+    ok = [r for r in rows if r["status"] == "ok"]
+    dom = defaultdict(int)
+    for r in ok:
+        dom[r["roofline"]["dominant"]] += 1
+    worst = sorted(
+        (r for r in ok),
+        key=lambda r: (r["roofline"]["compute_fraction"]))[:5]
+    coll = sorted(
+        ok, key=lambda r: -r["roofline"]["collective_s"])[:5]
+    out = [f"cells ok={len(ok)} dominant terms: {dict(dom)}"]
+    out.append("worst compute-fraction cells: " + ", ".join(
+        f"{r['arch']}×{r['shape']}×{r['mesh']}"
+        f"({r['roofline']['compute_fraction']:.3f})" for r in worst))
+    out.append("most collective-bound cells: " + ", ".join(
+        f"{r['arch']}×{r['shape']}×{r['mesh']}"
+        f"({r['roofline']['collective_s']:.3g}s)" for r in coll))
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="benchmarks/results/dryrun_baseline.jsonl")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load(args.jsonl, args.mesh)
+    print(fmt_table(rows, md=args.md))
+    print()
+    print(summarize(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Each micro-benchmark module needs 8 fake host devices, which must be
+configured before JAX initializes; they therefore run as subprocesses with
+``XLA_FLAGS`` set.  Output: ``name,us_per_call,derived`` CSV rows.
+
+Sections:
+  put_latency      — paper Fig. 4 + Fig. 12 (window kinds)
+  flush_scope      — paper Fig. 8/9  (P1 thread-scope flushes)
+  ordering         — paper Fig. 10/11 (P2 ordered sequences)
+  progress         — paper Fig. 5   (one-sided progress)
+  rma_collectives  — beyond-paper: one-sided ring collectives
+  roofline         — §Roofline summary from the dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+MODULES = [
+    "benchmarks.put_latency",
+    "benchmarks.flush_scope",
+    "benchmarks.ordering",
+    "benchmarks.progress",
+    "benchmarks.rma_collectives",
+]
+
+
+def run_module(mod: str) -> int:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("PYTHONPATH", "src")
+    print(f"# === {mod} ===", flush=True)
+    proc = subprocess.run([sys.executable, "-m", mod], env=env)
+    return proc.returncode
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in MODULES:
+        failures += 1 if run_module(mod) else 0
+    jsonl = "benchmarks/results/dryrun_final.jsonl"
+    if not os.path.exists(jsonl):
+        jsonl = "benchmarks/results/dryrun_baseline.jsonl"
+    if os.path.exists(jsonl):
+        print("# === roofline (from dry-run artifacts) ===", flush=True)
+        from benchmarks import roofline
+        rows = roofline.load(jsonl)
+        print(roofline.summarize(rows))
+    else:
+        print(f"# roofline: {jsonl} not found — run repro.launch.dryrun first")
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end driver: train a ~100M-parameter qwen3-family model for a few
+hundred steps on synthetic data with checkpointing and straggler watch.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--params-check]
+
+The model is the qwen3-4b architecture scaled to ~100M params (same family:
+GQA kv=8 ratio, qk-norm, SwiGLU, RoPE 1e6).  Loss must drop well below the
+uniform baseline ln(vocab) on the structured synthetic stream.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, make_source
+from repro.ft.straggler import StragglerMonitor
+from repro.models import build_model
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.trainstep import make_train_step
+
+
+def model_100m():
+    return get_config("qwen3-4b").replace(
+        n_layers=6, d_model=512, n_heads=8, n_kv_heads=2, head_dim=64,
+        d_ff=2048, vocab=8192, max_seq=512,
+        dtype="float32", param_dtype="float32")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = model_100m()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train_lm] {cfg.name}-100m: {n_params/1e6:.1f}M params")
+
+    opt_cfg = OptimizerConfig(peak_lr=1e-3, warmup_steps=30,
+                              total_steps=args.steps)
+    opt_state = init_opt_state(params)
+    data = make_source(DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                                  global_batch=args.global_batch))
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    monitor = StragglerMonitor()
+
+    first = last = None
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        monitor.start()
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        jax.block_until_ready(m["loss"])
+        monitor.stop(step)
+        loss = float(m["loss"])
+        first = loss if first is None else first
+        last = loss
+        if step % 25 == 0 or step == args.steps - 1:
+            print(f"[train_lm] step={step:4d} loss={loss:.4f} "
+                  f"lr={float(m['lr']):.2e}", flush=True)
+        if (step + 1) % 100 == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt_state})
+    mgr.wait()
+    import math
+    uniform = math.log(cfg.vocab)
+    print(f"[train_lm] loss {first:.3f} -> {last:.3f} "
+          f"(uniform baseline {uniform:.3f}); stragglers={len(monitor.events)}")
+    assert last < first and last < uniform - 1.0, "model failed to learn"
+    print("TRAIN_LM OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro — 'Quo Vadis MPI RMA?' (EuroMPI'21) as a JAX/TPU framework substrate.
+
+Public entry points:
+  repro.core.rma      — the paper's window API (P1–P5) + one-sided collectives
+  repro.models        — build_model(cfg) for the ten assigned architectures
+  repro.configs       — get_config(arch) / SHAPES / tiny_config
+  repro.kernels       — Pallas TPU kernels (flash attention, SSD, RMA)
+  repro.launch        — mesh / dryrun / train / serve launchers
+"""
+__version__ = "1.0.0"

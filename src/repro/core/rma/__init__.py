@@ -1,0 +1,65 @@
+"""repro.core.rma — one-sided communication windows for JAX (the paper's API).
+
+Public surface:
+
+* :class:`Window`, :class:`WindowConfig` — allocated windows + info keys
+  (P1 scope, P2 order, P3 accumulate assertions, P4 dup_with_info).
+* :class:`DynamicWindow` — dynamic windows with the query / active-message
+  slow paths the paper measures.
+* :func:`memhandle_create` / :func:`win_from_memhandle` /
+  :func:`memhandle_release` — P5 memory handles (zero-overhead dynamic RMA).
+* :func:`win_op_intrinsic` — P3 hardware-accumulate capability query.
+* one-sided collectives: :func:`rma_all_reduce`, :func:`ring_reduce_scatter`,
+  :func:`ring_all_gather`, :func:`put_signal`, :func:`put_signal_pipelined`.
+"""
+from repro.core.rma.window import (
+    SCOPE_PROCESS,
+    SCOPE_THREAD,
+    Window,
+    WindowConfig,
+)
+from repro.core.rma.dynamic import DynamicWindow
+from repro.core.rma.memhandle import (
+    MAX_MEMHANDLE_SIZE,
+    MemhandleWindow,
+    memhandle_create,
+    memhandle_release,
+    win_from_memhandle,
+)
+from repro.core.rma.intrinsic import (
+    INTRINSIC_DTYPES,
+    INTRINSIC_MAX_COUNT,
+    INTRINSIC_OPS,
+    op_is_intrinsic,
+    win_op_intrinsic,
+)
+from repro.core.rma.collectives import (
+    put_signal,
+    put_signal_pipelined,
+    ring_all_gather,
+    ring_reduce_scatter,
+    rma_all_reduce,
+)
+
+__all__ = [
+    "Window",
+    "WindowConfig",
+    "SCOPE_PROCESS",
+    "SCOPE_THREAD",
+    "DynamicWindow",
+    "MemhandleWindow",
+    "MAX_MEMHANDLE_SIZE",
+    "memhandle_create",
+    "memhandle_release",
+    "win_from_memhandle",
+    "win_op_intrinsic",
+    "op_is_intrinsic",
+    "INTRINSIC_OPS",
+    "INTRINSIC_DTYPES",
+    "INTRINSIC_MAX_COUNT",
+    "rma_all_reduce",
+    "ring_reduce_scatter",
+    "ring_all_gather",
+    "put_signal",
+    "put_signal_pipelined",
+]

@@ -1,0 +1,283 @@
+"""Dynamic windows (paper §4) — attach/detach with the two slow paths.
+
+``MPI_Win_create_dynamic`` windows let a process expose memory *locally*,
+after collective window creation.  The price (paper §4, Fig. 3) is that the
+origin initially has **no registration information** for the target memory,
+so every operation must either
+
+* **query** the registration info from the target first (Fig. 3b) — here:
+  one extra request/response round-trip before the actual RDMA, or
+* fall back to **active-message emulation** (Fig. 3c) — here: the payload
+  lands in the target's AM queue and is only applied when the target calls
+  :meth:`DynamicWindow.progress` (or another synchronizing call), i.e. no
+  one-sided progress (the paper's Fig. 5 pathology).
+
+Memory handles (``memhandle.py``) remove both penalties by shipping the
+registration info to peers once, with explicit life-time guarantees.
+
+The device's attachable memory is modelled as one *pool* array (the process
+address space); a registration is (epoch, offset, size) in a fixed-slot
+table.  Epochs give the life-time semantics: detach/re-attach of the same
+address bumps the epoch, so stale cached registrations are detectable —
+exactly the hazard the paper describes ("the origin has to at least verify
+the validity of the cached registration information on every RMA operation").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.rma.window import (
+    Window,
+    WindowConfig,
+    _Group,
+    _inv,
+    _is_target,
+    _rtt,
+    _tie,
+    _write,
+)
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DynamicWindow(Window):
+    """``MPI_Win_create_dynamic`` analogue with query and AM fallback paths.
+
+    Array state (all per-device):
+      buffer:   the memory pool into which segments are attached.
+      regs:     (max_attach, 3) int32 — [epoch (0=invalid), offset, size].
+      am_data:  (am_slots, am_msg) pool-dtype — queued AM payloads.
+      am_meta:  (am_slots, 3) int32 — [valid, offset, size] per queued AM.
+      am_count: () int32 — number of queued AMs.
+      epoch:    () int32 — monotonically increasing registration epoch.
+    """
+
+    regs: Array = None
+    am_data: Array = None
+    am_meta: Array = None
+    am_count: Array = None
+    epoch: Array = None
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        children = (
+            self.buffer,
+            self.tokens,
+            self.regs,
+            self.am_data,
+            self.am_meta,
+            self.am_count,
+            self.epoch,
+        )
+        return children, (self.axis, self.axis_size, self.config, self.group)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        buffer, tokens, regs, am_data, am_meta, am_count, epoch = children
+        axis, axis_size, config, group = aux
+        return cls(
+            buffer, tokens, axis, axis_size, config, group,
+            regs, am_data, am_meta, am_count, epoch,
+        )
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def create_dynamic(
+        cls,
+        pool: Array,
+        axis: str,
+        axis_size: int,
+        config: WindowConfig | None = None,
+        *,
+        max_attach: int = 8,
+        am_slots: int = 16,
+        am_msg: int | None = None,
+    ) -> "DynamicWindow":
+        config = config or WindowConfig()
+        am_msg = am_msg if am_msg is not None else pool.shape[0]
+        return cls(
+            buffer=pool,
+            tokens=jnp.zeros((config.max_streams,), jnp.float32),
+            axis=axis,
+            axis_size=axis_size,
+            config=config,
+            group=_Group(),
+            regs=jnp.zeros((max_attach, 3), jnp.int32),
+            am_data=jnp.zeros((am_slots, am_msg), pool.dtype),
+            am_meta=jnp.zeros((am_slots, 3), jnp.int32),
+            am_count=jnp.zeros((), jnp.int32),
+            epoch=jnp.zeros((), jnp.int32),
+        )
+
+    def _with_dyn(self, **kw) -> "DynamicWindow":
+        fields = dict(
+            buffer=self.buffer, tokens=self.tokens, axis=self.axis,
+            axis_size=self.axis_size, config=self.config, group=self.group,
+            regs=self.regs, am_data=self.am_data, am_meta=self.am_meta,
+            am_count=self.am_count, epoch=self.epoch,
+        )
+        fields.update(kw)
+        return DynamicWindow(**fields)
+
+    # Rebind Window._with so inherited ops (put/flush/...) preserve dyn state.
+    def _with(self, *, buffer=None, tokens=None) -> "DynamicWindow":  # type: ignore[override]
+        return self._with_dyn(
+            buffer=self.buffer if buffer is None else buffer,
+            tokens=self.tokens if tokens is None else tokens,
+        )
+
+    # -- attach / detach (local operations) ----------------------------------
+    def attach(self, slot: int, offset: int, size: int) -> "DynamicWindow":
+        """``MPI_Win_attach``: local registration of pool[offset:offset+size].
+
+        ``slot`` is the registration slot (static).  The returned epoch-tagged
+        entry is what peers must learn — via address exchange (query path),
+        or via an explicit memory handle (fast path)."""
+        epoch = self.epoch + 1
+        regs = self.regs.at[slot].set(
+            jnp.stack([epoch, jnp.int32(offset), jnp.int32(size)])
+        )
+        return self._with_dyn(regs=regs, epoch=epoch)
+
+    def detach(self, slot: int) -> "DynamicWindow":
+        """``MPI_Win_detach``: invalidate the slot.  Peers holding cached
+        registration info for it must re-validate (epoch mismatch)."""
+        regs = self.regs.at[slot, 0].set(0)
+        return self._with_dyn(regs=regs)
+
+    # -- slow path 1: query registration info from the target (Fig. 3b) ------
+    def put_query(
+        self,
+        data: Array,
+        perm,
+        *,
+        slot: int,
+        seg_offset: int = 0,
+        stream: int = 0,
+    ) -> "DynamicWindow":
+        """Put into a dynamically attached segment, querying registration
+        info from the target first.  Three phases (1.5 RTT) vs. one phase for
+        an allocated window — the paper's measured 1.5–3x latency penalty."""
+        self._check_stream(stream)
+        data = self._ordered_payload(data, stream)
+        # Phase 1: registration-info request to the target.
+        req = lax.ppermute(jnp.float32(1.0), self.axis, perm)
+        # Target-side lookup, tied to request arrival.
+        entry = _tie(self.regs[slot], req)
+        # Phase 2: response back to the origin.
+        entry_at_origin = lax.ppermute(entry, self.axis, _inv(perm))
+        # Phase 3: the actual RDMA put, now carrying the resolved address.
+        off = entry_at_origin[1] + jnp.int32(seg_offset)
+        epoch = entry_at_origin[0]
+        sent = lax.ppermute(data, self.axis, perm)
+        sent_off = lax.ppermute(off, self.axis, perm)
+        sent_epoch = lax.ppermute(epoch, self.axis, perm)
+        valid = (sent_epoch == self.regs[slot, 0]) & (self.regs[slot, 0] > 0)
+        buf = _write(self.buffer, sent, sent_off, _is_target(self.axis, perm) & valid)
+        self.group.note_op(stream, perm)
+        return self._with_dyn(buffer=buf, tokens=self._bump(stream, sent))
+
+    def get_query(
+        self,
+        perm,
+        *,
+        slot: int,
+        seg_offset: int = 0,
+        size: int,
+        stream: int = 0,
+    ) -> tuple["DynamicWindow", Array]:
+        """Get from a dynamic segment via registration query: 2 RTT total."""
+        self._check_stream(stream)
+        req = lax.ppermute(jnp.float32(1.0), self.axis, perm)
+        entry = _tie(self.regs[slot], req)
+        entry_at_origin = lax.ppermute(entry, self.axis, _inv(perm))
+        req2 = lax.ppermute(entry_at_origin[1], self.axis, perm)  # resolved addr
+        start = req2 + jnp.int32(seg_offset)
+        chunk = lax.dynamic_slice_in_dim(self.buffer, start, size, axis=0)
+        data = lax.ppermute(chunk, self.axis, _inv(perm))
+        self.group.note_op(stream, perm)
+        return self._with(tokens=self._bump(stream, data)), data
+
+    # -- slow path 2: active-message emulation (Fig. 3c) ----------------------
+    def put_am(
+        self,
+        data: Array,
+        perm,
+        *,
+        slot: int,
+        seg_offset: int = 0,
+        stream: int = 0,
+    ) -> "DynamicWindow":
+        """Put emulated with an active message: one phase to the target's AM
+        queue, but the write only happens when the target *progresses* —
+        one-sided in name only (paper Fig. 5)."""
+        self._check_stream(stream)
+        data = self._ordered_payload(data, stream)
+        size = data.shape[0]
+        am_msg = self.am_data.shape[1]
+        if size > am_msg:
+            raise ValueError(f"AM payload {size} exceeds queue message size {am_msg}")
+        payload = jnp.zeros((am_msg,), self.buffer.dtype).at[:size].set(
+            data.astype(self.buffer.dtype)
+        )
+        hdr = jnp.stack([jnp.int32(1), jnp.int32(slot), jnp.int32(seg_offset)])
+        sent = lax.ppermute(payload, self.axis, perm)
+        sent_hdr = lax.ppermute(hdr, self.axis, perm)
+        sent_size = lax.ppermute(jnp.int32(size), self.axis, perm)
+        enq = _is_target(self.axis, perm) & (sent_hdr[0] > 0)
+        idx = self.am_count
+        meta = jnp.stack([sent_hdr[1] + 1, sent_hdr[2], sent_size])  # slot+1 as valid tag
+        am_data = jnp.where(enq, self.am_data.at[idx].set(sent), self.am_data)
+        am_meta = jnp.where(enq, self.am_meta.at[idx].set(meta), self.am_meta)
+        am_count = jnp.where(enq, idx + 1, idx)
+        self.group.note_op(stream, perm)
+        return self._with_dyn(
+            am_data=am_data, am_meta=am_meta, am_count=am_count,
+            tokens=self._bump(stream, sent),
+        )
+
+    def progress(self) -> "DynamicWindow":
+        """Target-side progress: drain the AM queue into the pool.
+
+        This is the *only* point where AM-path operations take effect — the
+        faithful model of implementations that rely on the target CPU
+        (paper §4.1.2: "both MPICH and MVAPICH lack progress for dynamic
+        windows").
+        """
+        buf = self.buffer
+        n = self.am_meta.shape[0]
+        am_msg = self.am_data.shape[1]
+        elem = jnp.arange(am_msg, dtype=jnp.int32)
+        for i in range(n):  # static unroll over fixed queue slots
+            valid = (jnp.int32(i) < self.am_count) & (self.am_meta[i, 0] > 0)
+            slot = self.am_meta[i, 0] - 1
+            reg_off = self.regs[slot, 1]
+            off = reg_off + self.am_meta[i, 1]
+            size = self.am_meta[i, 2]
+            # only the first `size` elements of the padded message are valid
+            current = lax.dynamic_slice_in_dim(buf, off, am_msg, axis=0)
+            masked = jnp.where(elem < size, self.am_data[i], current)
+            buf = _write(buf, masked, off, valid)
+        return self._with_dyn(
+            buffer=buf,
+            am_meta=jnp.zeros_like(self.am_meta),
+            am_count=jnp.zeros_like(self.am_count),
+        )
+
+    def flush_am(self, perm, stream: int = 0) -> "DynamicWindow":
+        """Flush for AM-path operations: completion additionally requires the
+        target to have progressed, so the ack is tied to the (post-progress)
+        target buffer state — an origin flush cannot complete while the target
+        sits outside the runtime."""
+        tok = _tie(self.tokens[stream], self.buffer)
+        tok = _rtt(tok, self.axis, perm)
+        return self._with(tokens=self.tokens.at[stream].set(tok))
+
+
+__all__ = ["DynamicWindow"]

@@ -1,0 +1,78 @@
+"""P3 — hardware-accumulate capability model and query (paper §2.3).
+
+``win_op_intrinsic`` answers: *will this set of accumulate operations, on up
+to max_count elements of this datatype, be executed by hardware intrinsic to
+the origin* (NIC / ICI atomics — no target-CPU participation)?
+
+The envelope below mirrors real NIC atomics (and the TPU ICI equivalent):
+
+* only 32/64-bit integral and floating point types — no bf16/f16 atomics;
+* a small set of ops (fetch-add-class, bitwise, replace, CAS);
+* a small element-count threshold: beyond it, the bandwidth-optimized
+  target-CPU (vector-unit) path wins and implementations switch to software
+  (the latency/bandwidth trade-off the paper describes).
+
+The numbers are configuration, not magic: they live here so tests and the
+serving/training runtime share one source of truth.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Ops the "NIC" executes natively (second half of MPI_Op names, paper §2.3).
+INTRINSIC_OPS = frozenset(
+    {"sum", "min", "max", "replace", "cas", "band", "bor", "bxor", "no_op"}
+)
+
+#: 32/64-bit types only: hardware atomics do not cover short floats.
+INTRINSIC_DTYPES = frozenset(
+    {
+        jnp.dtype(jnp.int32),
+        jnp.dtype(jnp.uint32),
+        jnp.dtype(jnp.int64),
+        jnp.dtype(jnp.uint64),
+        jnp.dtype(jnp.float32),
+        jnp.dtype(jnp.float64),
+    }
+)
+
+#: Element-count threshold for the latency->bandwidth switch.
+INTRINSIC_MAX_COUNT = 8
+
+
+def op_is_intrinsic(op: str, count: int, dtype) -> bool:
+    """Single-op form of the query used internally by ``Window.accumulate``."""
+    try:
+        dt = jnp.dtype(dtype)
+    except TypeError:
+        return False
+    return op in INTRINSIC_OPS and dt in INTRINSIC_DTYPES and count <= INTRINSIC_MAX_COUNT
+
+
+def win_op_intrinsic(ops: str, max_count: int, dtype, win=None) -> bool:
+    """``MPI_Win_op_intrinsic`` (paper Listing 3).
+
+    Args:
+      ops: comma-delimited list of operations (e.g. ``"sum,replace,cas"``).
+      max_count: maximum number of elements per accumulate the app will use.
+      dtype: the element datatype.
+      win: the window (reserved — capabilities here are platform-wide).
+
+    Returns:
+      True iff *all* listed operations on up to ``max_count`` elements of
+      ``dtype`` will be performed with hardware operations intrinsic to the
+      origin node.
+    """
+    parsed = [o.strip() for o in ops.split(",") if o.strip()]
+    if not parsed:
+        raise ValueError("empty operation list")
+    return all(op_is_intrinsic(o, max_count, dtype) for o in parsed)
+
+
+__all__ = [
+    "win_op_intrinsic",
+    "op_is_intrinsic",
+    "INTRINSIC_OPS",
+    "INTRINSIC_DTYPES",
+    "INTRINSIC_MAX_COUNT",
+]

@@ -1,0 +1,179 @@
+"""P5 — MPI memory handles (paper §4.2): zero-overhead dynamic windows.
+
+Instead of sending a peer the *virtual address* of attached memory (which
+forces the query / AM slow paths of ``dynamic.py``), the application extracts
+the **registration information itself** into an opaque, fixed-size handle and
+ships that.  A window created *from* a handle addresses the remote segment
+directly: the put path is bit-identical to an allocated window — one phase,
+no target involvement (paper Fig. 12: "the difference between allocated
+windows and windows created from memory handles is negligible").
+
+Life-time guarantees (the crux of the paper's argument): the handle embeds
+the registration *epoch*.  ``memhandle_release`` bumps the slot's epoch, so
+any later operation through a stale handle is dropped at the target and
+counted in an error counter — using the handle after release is erroneous
+(paper: "It is erroneous to release a memory more than once"; we extend the
+same rule to use-after-release), and the runtime makes the violation
+observable instead of corrupting memory.
+
+Restrictions faithfully carried over from paper §4.2/§6.5:
+
+* only put / get / accumulate / flush are allowed on memhandle windows;
+* synchronization (lock/unlock — here: fence/active-target) must go through
+  the **parent** dynamic window; calling :meth:`MemhandleWindow.fence` raises;
+* creation/destruction are local and cheap (the paper measures ~1 µs) —
+  here they build a dataclass and no communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.rma.dynamic import DynamicWindow
+from repro.core.rma.window import _inv, _is_target, _tie, _write
+
+Array = jax.Array
+
+#: ``MPI_MAX_MEMHANDLE_SIZE`` — implementation-specific handle size (int32s).
+MAX_MEMHANDLE_SIZE = 4
+
+
+def memhandle_create(win: DynamicWindow, slot: int) -> Array:
+    """``MPIX_Memhandle_create``: extract registration info for ``slot``.
+
+    Returns the opaque handle — a (MAX_MEMHANDLE_SIZE,) int32 array
+    ``[epoch, offset, size, slot]`` — to be distributed to peers (e.g. via a
+    collective, point-to-point, or a put through another window).  Local
+    operation; no communication."""
+    entry = win.regs[slot]  # [epoch, offset, size]
+    return jnp.stack([entry[0], entry[1], entry[2], jnp.int32(slot)])
+
+
+def memhandle_release(win: DynamicWindow, slot: int) -> DynamicWindow:
+    """``MPIX_Memhandle_release``: end the exposure of the registered memory.
+
+    Bumps the slot epoch so all outstanding handles become stale; subsequent
+    RMA through them is dropped and counted (see ``MemhandleWindow.put``)."""
+    epoch = win.epoch + 1
+    regs = win.regs.at[slot, 0].set(0)
+    return win._with_dyn(regs=regs, epoch=epoch)
+
+
+def win_from_memhandle(
+    parent: DynamicWindow,
+    memhandle: Array,
+    *,
+    disp_unit: int = 1,
+) -> "MemhandleWindow":
+    """``MPIX_Win_from_memhandle``: local creation of a single-target window
+    from a received handle.  The handle travels as runtime data (it may have
+    arrived via any transport); no registration traffic is needed ever after.
+    """
+    if memhandle.shape != (MAX_MEMHANDLE_SIZE,):
+        raise ValueError(
+            f"memhandle must be a ({MAX_MEMHANDLE_SIZE},) int32 array, got {memhandle.shape}"
+        )
+    return MemhandleWindow(parent=parent, handle=memhandle, disp_unit=disp_unit,
+                           err_count=jnp.zeros((), jnp.int32))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MemhandleWindow:
+    """A window created from a memory handle (paper Listing 5).
+
+    Functional wrapper around the parent dynamic window: operations return a
+    new ``MemhandleWindow`` whose ``parent`` carries the updated pool.  Only
+    passive-target operations are provided.
+    """
+
+    parent: DynamicWindow
+    handle: Array  # [epoch, offset, size, slot]
+    disp_unit: int
+    err_count: Array  # stale-handle violations observed at this device
+
+    def tree_flatten(self):
+        return (self.parent, self.handle, self.err_count), (self.disp_unit,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        parent, handle, err_count = children
+        return cls(parent, handle, aux[0], err_count)
+
+    # -- helpers ---------------------------------------------------------------
+    def _resolve(self, offset) -> tuple[Array, Array]:
+        """Origin-side address resolution: pure local arithmetic on the handle
+        — this is the entire 'registration lookup', which is why the path has
+        zero overhead over allocated windows."""
+        off = self.handle[1] + jnp.asarray(offset, jnp.int32) * self.disp_unit
+        return off, self.handle[0]
+
+    # -- RMA operations ----------------------------------------------------------
+    def put(self, data: Array, perm, *, offset=0, stream: int = 0) -> "MemhandleWindow":
+        """Direct RDMA put through the handle: ONE phase, same as allocated."""
+        p = self.parent
+        p._check_stream(stream)
+        data = p._ordered_payload(data, stream)
+        off, epoch = self._resolve(offset)
+        sent = lax.ppermute(data, p.axis, perm)
+        sent_off = lax.ppermute(off, p.axis, perm)
+        sent_epoch = lax.ppermute(epoch, p.axis, perm)
+        # Life-time guarantee: target-side epoch check (local compare, free).
+        slot = self.handle[3]
+        fresh = (sent_epoch == p.regs[slot, 0]) & (p.regs[slot, 0] > 0)
+        is_tgt = _is_target(p.axis, perm)
+        buf = _write(p.buffer, sent, sent_off, is_tgt & fresh)
+        errs = self.err_count + jnp.where(is_tgt & ~fresh, 1, 0).astype(jnp.int32)
+        p.group.note_op(stream, perm)
+        new_parent = p._with_dyn(buffer=buf, tokens=p._bump(stream, sent))
+        return MemhandleWindow(new_parent, self.handle, self.disp_unit, errs)
+
+    def get(self, perm, *, offset=0, size: int, stream: int = 0):
+        """Direct RDMA get: one request/response RTT, same as allocated."""
+        p = self.parent
+        p._check_stream(stream)
+        off, _ = self._resolve(offset)
+        req = lax.ppermute(off, p.axis, perm)  # request carries resolved addr
+        chunk = lax.dynamic_slice_in_dim(p.buffer, req, size, axis=0)
+        data = lax.ppermute(chunk, p.axis, _inv(perm))
+        p.group.note_op(stream, perm)
+        new_parent = p._with(tokens=p._bump(stream, data))
+        return MemhandleWindow(new_parent, self.handle, self.disp_unit, self.err_count), data
+
+    def accumulate(self, data: Array, perm, *, op: str = "sum", offset=0,
+                   stream: int = 0) -> "MemhandleWindow":
+        """Accumulate through the handle (same P3 path selection as Window)."""
+        off, _ = self._resolve(offset)
+        p = self.parent.accumulate(data, perm, op=op, offset=off, stream=stream)
+        return MemhandleWindow(p, self.handle, self.disp_unit, self.err_count)
+
+    def flush(self, stream: int | None = None) -> "MemhandleWindow":
+        """Flush through the parent's synchronization state (paper §4.2: lock
+        and unlock are applied on the parent dynamic window)."""
+        return MemhandleWindow(
+            self.parent.flush(stream), self.handle, self.disp_unit, self.err_count
+        )
+
+    def fence(self):
+        raise RuntimeError(
+            "memory handle windows are restricted to passive-target "
+            "synchronization; fence/lock must be applied to the parent "
+            "dynamic window (paper §4.2)"
+        )
+
+    def free(self) -> DynamicWindow:
+        """``MPI_Win_free`` on the memhandle window: the implementation stops
+        tracking the remote region; returns the parent for further use."""
+        return self.parent
+
+
+__all__ = [
+    "MAX_MEMHANDLE_SIZE",
+    "memhandle_create",
+    "memhandle_release",
+    "win_from_memhandle",
+    "MemhandleWindow",
+]

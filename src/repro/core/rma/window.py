@@ -1,0 +1,556 @@
+"""One-sided communication windows for JAX — the paper's MPI-RMA extensions on TPU.
+
+This module is the heart of the reproduction of *Quo Vadis MPI RMA?* (Schuchart
+et al., EuroMPI'21).  It models MPI RMA *windows* — registered, remotely
+accessible memory — as a JAX construct usable inside ``shard_map``, together
+with the paper's proposed extensions:
+
+* ``WindowConfig.scope``     — P1: thread(=stream)-scope vs process-scope flushes
+  (paper §2.1, ``mpi_win_scope`` info key).
+* ``WindowConfig.order``     — P2: a-priori *ordered operation sequences*
+  (paper §2.2, ``mpi_win_order`` info key).
+* accumulate-intrinsic keys  — P3: bidirectional signalling about hardware
+  accumulates (paper §2.3, ``MPI_Win_op_intrinsic`` +
+  ``mpi_assert_accumulate_intrinsic``).
+* ``Window.dup_with_info``   — P4: window duplication (paper §3,
+  ``MPIX_Win_dup_with_info``).
+
+Dynamic windows and memory handles (P5, paper §4) live in ``dynamic.py`` and
+``memhandle.py``.
+
+TPU mapping
+-----------
+MPI "processes" become mesh devices; MPI "threads" become numbered issue
+**streams** (the TPU analogue of a per-thread NIC endpoint is a DMA channel
+with its own completion semaphore).  Data movement is expressed with
+``jax.lax.ppermute`` (the SPMD projection of an ICI remote DMA; the Pallas
+kernel twin in ``repro/kernels/rma_put.py`` uses
+``pltpu.make_async_remote_copy``).  Completion tracking is expressed with
+*channel tokens*: tiny per-stream scalars threaded through
+``lax.optimization_barrier`` so that the lowered HLO carries exactly the
+dependences the RMA semantics require — and no more.
+
+Cost model (faithful to the paper's measurements):
+
+==========================  =============================================
+operation                   communication phases in lowered HLO
+==========================  =============================================
+put / intrinsic accumulate  1  (one ``collective-permute``)
+get / fetch_op / cas        2  (request + response = 1 RTT)
+flush of one stream         2  (ack round-trip = 1 RTT)
+process-scope flush         2 × (#streams with pending ops), serialized —
+                            the UCX endpoint-list walk of paper Fig. 7
+ordered put→put (P2)        2, chained, **no** ack in between
+unordered put→flush→put     4, with a full RTT barrier in the middle
+software (AM) accumulate    1 phase + target ``progress()`` dependence
+==========================  =============================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+Perm = Sequence[tuple[int, int]]
+
+# ---------------------------------------------------------------------------
+# Info keys / window configuration
+# ---------------------------------------------------------------------------
+
+SCOPE_PROCESS = "process"
+SCOPE_THREAD = "thread"
+
+#: Info keys an implementation may silently refuse to change on dup (paper §3:
+#: "An MPI implementation may not be able to change certain info keys during
+#: this call and may thus reject the change").  ``max_streams`` would require
+#: resizing the token array, which is not possible on an aliased window.
+_DUP_IMMUTABLE_KEYS = frozenset({"max_streams"})
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowConfig:
+    """The window *info object* — anticipated-usage declarations (paper §2).
+
+    Attributes:
+      scope: ``"process"`` (default, MPI-faithful) or ``"thread"``.  With
+        thread scope, a flush only completes operations issued on the calling
+        stream (paper P1).
+      order: if True, operations issued on the same stream to the same window
+        complete at the target in issue order without intermediate flushes
+        (paper P2, ``mpi_win_order``).
+      assert_accumulate_intrinsic: the application asserts it will only issue
+        accumulate configurations for which :func:`repro.core.rma.intrinsic.
+        win_op_intrinsic` returned True (paper P3).  Violations raise.
+      accumulate_ops: anticipated accumulate operations (paper §2.3 string
+        list, e.g. ``("sum", "replace")``).
+      accumulate_max_count: anticipated maximum element count per accumulate.
+      max_streams: number of issue streams (thread analogue).  Sizes the
+        token array; fixed at creation.
+    """
+
+    scope: str = SCOPE_PROCESS
+    order: bool = False
+    assert_accumulate_intrinsic: bool = False
+    accumulate_ops: tuple[str, ...] = ("sum",)
+    accumulate_max_count: int = 8
+    max_streams: int = 1
+
+    def __post_init__(self):
+        if self.scope not in (SCOPE_PROCESS, SCOPE_THREAD):
+            raise ValueError(f"invalid scope {self.scope!r}")
+        if self.max_streams < 1:
+            raise ValueError("max_streams must be >= 1")
+
+    def replace(self, **kw) -> "WindowConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Dup-family group state (trace-local, Python side)
+# ---------------------------------------------------------------------------
+
+_group_ids = itertools.count()
+
+
+class _Group:
+    """State shared by a window and all its duplicates within one trace.
+
+    Duplicated windows are "different handles to the same underlying memory
+    and network resources" (paper §3): synchronization applied to one applies
+    to all.  We realize that by keeping the *pending-operation* bookkeeping on
+    a single mutable object shared across the dup family, while the array
+    state (buffer, tokens) is aliased pytree leaves.
+    """
+
+    def __init__(self):
+        self.gid = next(_group_ids)
+        # stream id -> last perm used (route for the completion ack)
+        self.pending: dict[int, Perm] = {}
+        self.epoch_counter = 0  # for dynamic windows / memhandles
+
+    def note_op(self, stream: int, perm: Perm) -> None:
+        self.pending[stream] = tuple(perm)
+
+    def take_pending(self, streams: Sequence[int] | None) -> dict[int, Perm]:
+        if streams is None:
+            out, self.pending = self.pending, {}
+            return out
+        out = {s: self.pending.pop(s) for s in streams if s in self.pending}
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _inv(perm: Perm) -> Perm:
+    return tuple((t, s) for s, t in perm)
+
+
+def _is_target(axis: str, perm: Perm) -> Array:
+    """SPMD predicate: does *this* device receive data under ``perm``?"""
+    idx = lax.axis_index(axis)
+    tgts = jnp.asarray([t for _, t in perm], dtype=idx.dtype)
+    return jnp.any(idx == tgts)
+
+
+def _is_source(axis: str, perm: Perm) -> Array:
+    idx = lax.axis_index(axis)
+    srcs = jnp.asarray([s for s, _ in perm], dtype=idx.dtype)
+    return jnp.any(idx == srcs)
+
+
+def _tie(value, *deps):
+    """Make ``value`` depend on ``deps`` in the lowered HLO.
+
+    This is the TPU analogue of issuing on an ordered DMA channel: consumers
+    of the returned value transitively depend on every dep, so XLA must
+    schedule the dep's communication first.  We use an *arithmetic* tie —
+    ``value + 0.0 * probe(dep)`` — because ``lax.optimization_barrier``
+    operands get shrunk when a tuple output is dead, silently dropping the
+    ordering edge.  Float multiply-by-zero is not IEEE-safe to fold
+    (NaN/Inf), so XLA keeps the chain.
+    """
+    z = jnp.float32(0.0)
+    for d in deps:
+        probe = lax.convert_element_type(jnp.ravel(d)[0], jnp.float32)
+        z = z + probe
+    zero = z * jnp.float32(0.0)
+    if jnp.issubdtype(value.dtype, jnp.floating):
+        return value + zero.astype(value.dtype)
+    if jnp.issubdtype(value.dtype, jnp.integer):
+        return value + lax.convert_element_type(zero, value.dtype)
+    if value.dtype == jnp.bool_:
+        return value ^ (zero != 0.0)
+    return value + zero.astype(value.dtype)
+
+
+def _rtt(token: Array, axis: str, perm: Perm) -> Array:
+    """One completion round-trip (ack) along ``perm`` — the cost of a flush."""
+    t = lax.ppermute(token, axis, perm)
+    t = lax.ppermute(t, axis, _inv(perm))
+    return _tie(token, t)
+
+
+def _write(buffer: Array, update: Array, offset, apply_pred: Array) -> Array:
+    """Write ``update`` into ``buffer`` at ``offset`` where ``apply_pred``."""
+    offset = jnp.asarray(offset)
+    idx = (offset,) + (jnp.zeros((), offset.dtype),) * (buffer.ndim - 1)
+    updated = lax.dynamic_update_slice(buffer, update.astype(buffer.dtype), idx)
+    return jnp.where(apply_pred, updated, buffer)
+
+
+# ---------------------------------------------------------------------------
+# Window
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Window:
+    """An allocated RMA window over one mesh axis (MPI_Win_allocate analogue).
+
+    Use inside ``shard_map``: ``buffer`` is this device's exposed shard.  All
+    operations are functional — they return a new ``Window`` aliasing the
+    same dup-family group.  Typical SPMD usage issues symmetric operations
+    (every device puts to its ring neighbour); origin-restricted operations
+    (only rank 0 puts) are expressed with a one-pair ``perm``.
+    """
+
+    buffer: Array
+    tokens: Array  # (max_streams,) float32 channel tokens
+    axis: str
+    axis_size: int
+    config: WindowConfig
+    group: _Group
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.buffer, self.tokens), (
+            self.axis,
+            self.axis_size,
+            self.config,
+            self.group,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        buffer, tokens = children
+        axis, axis_size, config, group = aux
+        return cls(buffer, tokens, axis, axis_size, config, group)
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def allocate(
+        cls,
+        buffer: Array,
+        axis: str,
+        axis_size: int,
+        config: WindowConfig | None = None,
+    ) -> "Window":
+        """``MPI_Win_allocate``: expose ``buffer`` (this device's shard)."""
+        config = config or WindowConfig()
+        tokens = jnp.zeros((config.max_streams,), jnp.float32)
+        return cls(buffer, tokens, axis, axis_size, config, _Group())
+
+    # -- P4: window duplication ----------------------------------------------
+    def dup_with_info(self, **info) -> "Window":
+        """``MPIX_Win_dup_with_info`` (paper §3): same memory and network
+        resources, different info configuration.  Local, non-collective.
+
+        Immutable keys are silently retained (the paper allows implementations
+        to reject changes; users check via ``get_info``)."""
+        accepted = {k: v for k, v in info.items() if k not in _DUP_IMMUTABLE_KEYS}
+        cfg = self.config.replace(**accepted)
+        # Aliased leaves + shared group: synchronization on the dup applies to
+        # the parent and vice versa.
+        return Window(self.buffer, self.tokens, self.axis, self.axis_size, cfg, self.group)
+
+    def get_info(self) -> WindowConfig:
+        """``MPI_Win_get_info``: query the configuration actually in effect."""
+        return self.config
+
+    # -- internal ------------------------------------------------------------
+    def _token(self, stream: int) -> Array:
+        return self.tokens[stream]
+
+    def _with(self, *, buffer: Array | None = None, tokens: Array | None = None) -> "Window":
+        return Window(
+            self.buffer if buffer is None else buffer,
+            self.tokens if tokens is None else tokens,
+            self.axis,
+            self.axis_size,
+            self.config,
+            self.group,
+        )
+
+    def _ordered_payload(self, payload, stream: int):
+        """Under P2 (``order=True``) chain the payload on the stream token so
+        the lowered program issues it on the same ordered channel as the
+        stream's previous operation (NIC fence semantics)."""
+        if self.config.order:
+            return _tie(payload, self._token(stream))
+        return payload
+
+    def _bump(self, stream: int, dep) -> Array:
+        tok = _tie(self._token(stream), dep)
+        return self.tokens.at[stream].set(tok)
+
+    # -- one-sided operations --------------------------------------------------
+    def put(
+        self,
+        data: Array,
+        perm: Perm,
+        *,
+        offset=0,
+        stream: int = 0,
+    ) -> "Window":
+        """``MPI_Put``: write ``data`` into the target's window at ``offset``.
+
+        One communication phase.  Remote completion is only guaranteed after
+        :meth:`flush` (or, under ``order=True``, by a later operation on the
+        same stream completing).
+        """
+        self._check_stream(stream)
+        data = self._ordered_payload(data, stream)
+        off = jnp.asarray(offset, jnp.int32)
+        # RDMA semantics: the origin addresses remote memory directly — the
+        # target's CPU is not involved.  The packet carries (address, data).
+        sent_data = lax.ppermute(data, self.axis, perm)
+        sent_off = lax.ppermute(off, self.axis, perm)
+        new_buffer = _write(self.buffer, sent_data, sent_off, _is_target(self.axis, perm))
+        self.group.note_op(stream, perm)
+        return self._with(buffer=new_buffer, tokens=self._bump(stream, sent_data))
+
+    def get(
+        self,
+        perm: Perm,
+        *,
+        offset: int = 0,
+        size: int,
+        stream: int = 0,
+    ) -> tuple["Window", Array]:
+        """``MPI_Get``: read ``size`` elements at ``offset`` from the target.
+
+        ``perm`` maps origin→target; the data travels target→origin.  One
+        request/response round-trip (2 phases), as on real RDMA reads.
+        """
+        self._check_stream(stream)
+        req = self._ordered_payload(jnp.float32(1.0), stream)
+        req_at_tgt = lax.ppermute(req, self.axis, perm)  # phase 1: read request
+        chunk = lax.dynamic_slice_in_dim(self.buffer, offset, size, axis=0)
+        chunk = _tie(chunk, req_at_tgt)
+        data = lax.ppermute(chunk, self.axis, _inv(perm))  # phase 2: response
+        self.group.note_op(stream, perm)
+        return self._with(tokens=self._bump(stream, data)), data
+
+    def accumulate(
+        self,
+        data: Array,
+        perm: Perm,
+        *,
+        op: str = "sum",
+        offset=0,
+        stream: int = 0,
+    ) -> "Window":
+        """``MPI_Accumulate`` with element-wise atomicity.
+
+        Path selection is the paper's P3 contract:
+
+        * If the window asserts ``assert_accumulate_intrinsic`` and the
+          (op, count, dtype) tuple is inside the hardware envelope, the
+          operation uses the **origin-intrinsic** path: a single phase, no
+          target-CPU involvement (NIC/ICI atomic).
+        * Otherwise the **software** path is used: the operation is shipped
+          as an active message and only lands when the target calls
+          :meth:`progress` (or a synchronizing MPI call) — the behaviour the
+          paper measured in Fig. 5.
+        """
+        from repro.core.rma import intrinsic as _intr
+
+        self._check_stream(stream)
+        count = int(data.size)
+        inside = _intr.op_is_intrinsic(op, count, data.dtype)
+        if self.config.assert_accumulate_intrinsic:
+            if not inside:
+                raise ValueError(
+                    "window asserts accumulate-intrinsic usage but "
+                    f"op={op!r} count={count} dtype={data.dtype} is outside the "
+                    "hardware envelope (undefined behaviour per paper §2.3); "
+                    "query win_op_intrinsic() first"
+                )
+            return self._accumulate_intrinsic(data, perm, op=op, offset=offset, stream=stream)
+        # Conservative default: implementations cannot anticipate future ops,
+        # so they take the software path (paper §2.3).
+        return self._accumulate_software(data, perm, op=op, offset=offset, stream=stream)
+
+    def _apply_op(self, current: Array, update: Array, op: str) -> Array:
+        if op == "sum":
+            return current + update.astype(current.dtype)
+        if op == "min":
+            return jnp.minimum(current, update.astype(current.dtype))
+        if op == "max":
+            return jnp.maximum(current, update.astype(current.dtype))
+        if op == "replace":
+            return update.astype(current.dtype)
+        if op == "prod":
+            return current * update.astype(current.dtype)
+        if op in ("band", "bor", "bxor"):
+            u = update.astype(current.dtype)
+            return {"band": current & u, "bor": current | u, "bxor": current ^ u}[op]
+        raise ValueError(f"unsupported accumulate op {op!r}")
+
+    def _accumulate_intrinsic(self, data, perm, *, op, offset, stream) -> "Window":
+        data = self._ordered_payload(data, stream)
+        off = jnp.asarray(offset, jnp.int32)
+        sent = lax.ppermute(data, self.axis, perm)
+        sent_off = lax.ppermute(off, self.axis, perm)
+        idx = (sent_off,) + (jnp.zeros((), sent_off.dtype),) * (self.buffer.ndim - 1)
+        current = lax.dynamic_slice(self.buffer, idx, sent.shape)
+        new = self._apply_op(current, sent, op)
+        buf = _write(self.buffer, new, sent_off, _is_target(self.axis, perm))
+        self.group.note_op(stream, perm)
+        return self._with(buffer=buf, tokens=self._bump(stream, sent))
+
+    def _accumulate_software(self, data, perm, *, op, offset, stream) -> "Window":
+        # Software path == AM emulation; only DynamicWindow carries an AM
+        # queue.  For allocated windows we model the software path as a
+        # target-mediated two-phase operation: the data is shipped, and the
+        # result is applied under a dependence on the *target's* token, i.e.
+        # the target's participation in the runtime.
+        data = self._ordered_payload(data, stream)
+        off = jnp.asarray(offset, jnp.int32)
+        sent = lax.ppermute(data, self.axis, perm)
+        sent_off = lax.ppermute(off, self.axis, perm)
+        # target-CPU involvement: the application depends on the target's own
+        # channel token (its participation), not just packet arrival.
+        sent = _tie(sent, self._token(stream))
+        idx = (sent_off,) + (jnp.zeros((), sent_off.dtype),) * (self.buffer.ndim - 1)
+        current = lax.dynamic_slice(self.buffer, idx, sent.shape)
+        new = self._apply_op(current, sent, op)
+        # serialization through a mutual exclusion device at the target: an
+        # extra local ordering barrier.
+        new = _tie(new, self._token(stream))
+        buf = _write(self.buffer, new, sent_off, _is_target(self.axis, perm))
+        self.group.note_op(stream, perm)
+        return self._with(buffer=buf, tokens=self._bump(stream, sent))
+
+    def fetch_op(
+        self,
+        data: Array,
+        perm: Perm,
+        *,
+        op: str = "sum",
+        offset: int = 0,
+        stream: int = 0,
+    ) -> tuple["Window", Array]:
+        """``MPI_Fetch_and_op``: atomic read-modify-write, returns old value.
+
+        Always costs one RTT (the fetched value must travel back)."""
+        self._check_stream(stream)
+        data = self._ordered_payload(data, stream)
+        sent = lax.ppermute(data, self.axis, perm)  # phase 1
+        current = lax.dynamic_slice_in_dim(self.buffer, offset, sent.shape[0], axis=0)
+        new = self._apply_op(current, sent, op)
+        buf = _write(self.buffer, new, jnp.int32(offset), _is_target(self.axis, perm))
+        old = lax.ppermute(current, self.axis, _inv(perm))  # phase 2: fetched value
+        self.group.note_op(stream, perm)
+        return self._with(buffer=buf, tokens=self._bump(stream, old)), old
+
+    def compare_and_swap(
+        self,
+        compare: Array,
+        new: Array,
+        perm: Perm,
+        *,
+        offset: int = 0,
+        stream: int = 0,
+    ) -> tuple["Window", Array]:
+        """``MPI_Compare_and_swap`` on a single element; one RTT."""
+        self._check_stream(stream)
+        payload = self._ordered_payload(jnp.stack([compare, new]), stream)
+        sent = lax.ppermute(payload, self.axis, perm)
+        current = lax.dynamic_slice_in_dim(self.buffer, offset, 1, axis=0)[0]
+        swap = current == sent[0].astype(current.dtype)
+        value = jnp.where(swap, sent[1].astype(current.dtype), current)
+        buf = _write(
+            self.buffer, value[None], jnp.int32(offset), _is_target(self.axis, perm)
+        )
+        old = lax.ppermute(current, self.axis, _inv(perm))
+        self.group.note_op(stream, perm)
+        return self._with(buffer=buf, tokens=self._bump(stream, old)), old
+
+    # -- synchronization -------------------------------------------------------
+    def flush(self, stream: int | None = None) -> "Window":
+        """``MPI_Win_flush`` (remote completion).
+
+        Process scope (default): completes operations issued by **all**
+        streams.  The implementation walks every stream's endpoint and awaits
+        its ack — serialized, exactly the UCX worker-list walk of paper
+        Fig. 7.  Cost: one RTT per pending stream, chained.
+
+        Thread scope (P1): completes only the calling stream's operations —
+        one RTT, no cross-stream synchronization.  ``stream`` must be given.
+        """
+        if self.config.scope == SCOPE_THREAD and stream is not None:
+            pending = self.group.take_pending([stream])
+        else:
+            # process scope: the calling thread drains everyone (Fig. 1a/7).
+            pending = self.group.take_pending(None)
+        tokens = self.tokens
+        prev = None
+        for s, perm in sorted(pending.items()):
+            tok = tokens[s]
+            if prev is not None:
+                tok = _tie(tok, prev)  # serialized endpoint-list walk
+            tok = _rtt(tok, self.axis, perm)
+            tokens = tokens.at[s].set(tok)
+            prev = tok
+        buffer = self.buffer
+        if prev is not None:
+            # Remote completion: the window state observed after the flush
+            # depends on the acks (and cannot be dead-code-eliminated).
+            buffer = _tie(buffer, prev)
+        return self._with(buffer=buffer, tokens=tokens)
+
+    def flush_local(self, stream: int | None = None) -> "Window":
+        """``MPI_Win_flush_local``: local completion only — the origin buffers
+        may be reused but remote completion is not implied.  Local completion
+        needs no network round-trip; it is a local ordering point."""
+        if self.config.scope == SCOPE_THREAD and stream is not None:
+            streams = [stream]
+        else:
+            streams = list(self.group.pending)
+        tokens = self.tokens
+        for s in streams:
+            tokens = tokens.at[s].set(_tie(tokens[s], self.buffer))
+        return self._with(tokens=tokens)
+
+    def fence(self) -> "Window":
+        """Active-target ``MPI_Win_fence``: a collective barrier — all-reduce
+        of the token vector (always process scope; paper §2.1 notes the scope
+        key has no effect on active target synchronization)."""
+        self.group.take_pending(None)
+        summed = lax.psum(self.tokens, self.axis)
+        tokens = _tie(self.tokens, summed)
+        return self._with(tokens=tokens)
+
+    def _check_stream(self, stream: int) -> None:
+        if not (0 <= stream < self.config.max_streams):
+            raise ValueError(
+                f"stream {stream} out of range for max_streams={self.config.max_streams}"
+            )
+
+
+__all__ = [
+    "Window",
+    "WindowConfig",
+    "SCOPE_PROCESS",
+    "SCOPE_THREAD",
+]

@@ -1,0 +1,82 @@
+"""Straggler detection and mitigation policy.
+
+At pod scale the common failure mode is not death but *slowness* (one host at
+60 % speed stalls every synchronous collective).  The monitor keeps an EMA of
+step times, flags steps exceeding ``threshold × EMA``, and tracks repeat
+offenders per source; the policy layer decides between logging, raising (so
+the launcher restarts onto a healthy mesh slice), or — on real multi-host
+deployments — re-dispatching the slow host's shard.
+
+The monitor is deliberately runtime-agnostic (fed wall-clock step times), so
+it is unit-testable without hardware and usable unchanged in the launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    ema: float
+    ratio: float
+    source: str
+
+
+class StragglerMonitor:
+    def __init__(self, *, threshold: float = 2.0, ema_alpha: float = 0.1,
+                 warmup_steps: int = 5, escalate_after: int = 3,
+                 on_escalate: Callable[[StragglerEvent], None] | None = None):
+        self.threshold = threshold
+        self.alpha = ema_alpha
+        self.warmup = warmup_steps
+        self.escalate_after = escalate_after
+        self.on_escalate = on_escalate
+        self.ema: float | None = None
+        self.seen = 0
+        self.events: list[StragglerEvent] = []
+        self.offenders: dict[str, int] = defaultdict(int)
+        self._t0: float | None = None
+
+    # -- context-manager style per-step timing ------------------------------
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int, source: str = "local") -> StragglerEvent | None:
+        assert self._t0 is not None, "start() not called"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        return self.observe(step, dt, source)
+
+    # -- core logic -----------------------------------------------------------
+    def observe(self, step: int, duration: float,
+                source: str = "local") -> StragglerEvent | None:
+        """Feed one step time.  Returns an event iff it's a straggler step."""
+        self.seen += 1
+        if self.ema is None:
+            self.ema = duration
+            return None
+        event = None
+        if self.seen > self.warmup and duration > self.threshold * self.ema:
+            event = StragglerEvent(step, duration, self.ema,
+                                   duration / self.ema, source)
+            self.events.append(event)
+            self.offenders[source] += 1
+            if (self.offenders[source] >= self.escalate_after
+                    and self.on_escalate is not None):
+                self.on_escalate(event)
+        else:
+            # straggler steps do not poison the EMA
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * duration
+        return event
+
+    def chronic_offenders(self) -> list[str]:
+        return [s for s, n in self.offenders.items()
+                if n >= self.escalate_after]
+
+
+__all__ = ["StragglerMonitor", "StragglerEvent"]

@@ -1,0 +1,24 @@
+"""repro.kernels — Pallas TPU kernels (+ jit wrappers in ops, oracles in ref).
+
+Compute hot-spots: flash_attention (prefill), ssd_scan (Mamba2/SSD).
+Communication hot-spots (the paper's layer): rma_put (one-sided put via ICI
+remote DMA), ordered_put_signal (paper Listing 2 / P2 as a fused kernel),
+ring_allreduce (P2-ordered one-sided collective), accumulate (P3 bandwidth
+path).
+
+All kernels validate in the Mosaic TPU interpreter on CPU against ref.py.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    accumulate,
+    flash_attention,
+    put_signal,
+    ring_all_reduce,
+    ring_put,
+    ssd_scan,
+)
+
+__all__ = [
+    "ops", "ref", "flash_attention", "accumulate", "ring_put",
+    "put_signal", "ring_all_reduce", "ssd_scan",
+]

@@ -1,0 +1,66 @@
+"""Tiled accumulate kernel — the P3 "bandwidth path" (paper §2.3).
+
+When an accumulate is outside the NIC-atomic envelope (large element counts),
+the paper's trade-off flips: the target-side vector units win.  This kernel
+is that path on TPU: element-wise accumulate of an update into a window
+buffer, tiled through VMEM, vectorized on the VPU.  The intrinsic (small-
+count) path never reaches here — it rides the fused DMA in ``rma_put``.
+
+in-place semantics via input_output_aliasing (the window buffer is donated).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import cdiv, interpret_mode
+
+_OPS = ("sum", "min", "max", "replace", "prod")
+
+
+def _acc_kernel(buf_ref, upd_ref, out_ref, *, op: str):
+    cur = buf_ref[...]
+    upd = upd_ref[...].astype(cur.dtype)
+    if op == "sum":
+        out_ref[...] = cur + upd
+    elif op == "min":
+        out_ref[...] = jnp.minimum(cur, upd)
+    elif op == "max":
+        out_ref[...] = jnp.maximum(cur, upd)
+    elif op == "prod":
+        out_ref[...] = cur * upd
+    else:  # replace
+        out_ref[...] = upd
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block"))
+def accumulate(buffer, update, *, op: str = "sum", block: int = 1024):
+    """Element-wise ``buffer op= update`` (1-D, equal shapes), tiled in VMEM."""
+    if op not in _OPS:
+        raise ValueError(f"op {op!r} not in {_OPS}")
+    if buffer.shape != update.shape:
+        raise ValueError(f"shape mismatch {buffer.shape} vs {update.shape}")
+    n = buffer.shape[0]
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        buffer = jnp.pad(buffer, (0, pad))
+        update = jnp.pad(update, (0, pad))
+    grid = (cdiv(n + pad, block),)
+    out = pl.pallas_call(
+        functools.partial(_acc_kernel, op=op),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(buffer.shape, buffer.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret_mode(),
+    )(buffer, update)
+    return out[:n] if pad else out
+
+
+__all__ = ["accumulate"]

@@ -1,0 +1,31 @@
+"""Shared kernel utilities: interpret-mode selection, tiling helpers."""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+
+def interpret_mode():
+    """TPU → compiled Mosaic; anything else → the Mosaic TPU interpreter.
+
+    The interpreter executes the kernel body (including semaphores and
+    cross-device remote DMA) in Python with simulated shared memory, which is
+    how every kernel here is validated on CPU against its ref.py oracle.
+    """
+    if jax.default_backend() == "tpu":
+        return False
+    # eager DMA execution models hardware (transfers land when posted);
+    # the default "on_wait" defers execution to the wait and breaks
+    # multi-hop ring schedules.
+    return pltpu.InterpretParams(dma_execution_mode="eager")
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+__all__ = ["interpret_mode", "cdiv", "round_up"]

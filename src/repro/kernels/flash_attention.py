@@ -1,0 +1,105 @@
+"""Flash attention (forward) — Pallas TPU kernel.
+
+Blockwise online-softmax attention: grid (batch·heads, q-blocks, kv-blocks),
+kv fastest (TPU grids iterate sequentially, so VMEM scratch carries the
+running max/denominator/accumulator across kv steps).  BlockSpec tiling keeps
+the working set in VMEM: (block_q × head_dim) query tile, (block_kv ×
+head_dim) KV tiles, (block_q × block_kv) score tile — MXU-aligned when the
+blocks are multiples of 128.
+
+Oracle: ``repro.models.attention.blockwise_attention`` /
+``repro.kernels.ref.flash_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv, interpret_mode
+
+NEG_INF = -2.0**30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, block_q: int, block_kv: int,
+                  kv_len: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale        # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                   # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bkv)
+
+    qi = pl.program_id(1)
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "sm_scale"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, sm_scale: float | None = None):
+    """q/k/v: (batch, heads, seq, head_dim) — returns same-shaped output.
+
+    GQA callers expand KV heads before the call (or fold the group into
+    batch).  seq must divide by the block sizes.
+    """
+    b, h, sq, hd = q.shape
+    sk = k.shape[2]
+    if sq % block_q or sk % block_kv:
+        raise ValueError(f"seq {sq}/{sk} not divisible by blocks {block_q}/{block_kv}")
+    scale = sm_scale if sm_scale is not None else hd ** -0.5
+    bh = b * h
+    qf = q.reshape(bh, sq, hd)
+    kf = k.reshape(bh, sk, hd)
+    vf = v.reshape(bh, sk, hd)
+    grid = (bh, cdiv(sq, block_q), cdiv(sk, block_kv))
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, sm_scale=scale, causal=causal,
+                          block_q=block_q, block_kv=block_kv, kv_len=sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret_mode(),
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, hd)
+
+
+__all__ = ["flash_attention"]

@@ -1,0 +1,68 @@
+"""jit'd public wrappers around the Pallas kernels (the ``ops.py`` layer).
+
+These are the entry points the rest of the framework uses; each picks block
+sizes, handles padding/reshapes, and composes kernels with the cheap host-
+side glue (e.g. the SSD inter-chunk recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.accumulate import accumulate
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ordered_put_signal import put_signal
+from repro.kernels.ring_allreduce import ring_all_reduce
+from repro.kernels.rma_put import ring_put
+from repro.kernels.ssd_scan import ssd_intra_chunk
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "nheads", "headdim"))
+def ssd_scan(xdt, a, Bm, Cm, *, chunk: int, nheads: int, headdim: int,
+             initial_state=None):
+    """Full SSD scan = Pallas intra-chunk kernel + host inter-chunk combine.
+
+    xdt (B, L, H, P); a (B, L, H); Bm/Cm (B, L, N).
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    Bsz, L, H, P = xdt.shape
+    N = Bm.shape[-1]
+    x2 = xdt.reshape(Bsz, L, H * P)
+    y_intra, states, cum = ssd_intra_chunk(
+        x2, a, Bm, Cm, chunk=chunk, nheads=nheads, headdim=headdim)
+    nc = L // chunk
+
+    # inter-chunk recurrence over per-chunk input states (cheap, linear)
+    cum_c = cum.reshape(Bsz, nc, chunk, H)
+    total_decay = jnp.exp(cum_c[:, :, -1, :])  # (B, nc, H)
+    states = states.reshape(Bsz, nc, H, P, N)
+
+    def combine(carry, inp):
+        st_in, decay = inp  # (B, H, P, N), (B, H)
+        new = carry * decay[:, :, None, None] + st_in
+        return new, carry  # emit the state *entering* this chunk
+
+    init = (initial_state.astype(jnp.float32) if initial_state is not None
+            else jnp.zeros((Bsz, H, P, N), jnp.float32))
+    final, entering = lax.scan(
+        combine, init,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(total_decay, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)  # (B, nc, H, P, N)
+
+    # read-out: y_inter[t] = exp(cum_t) · C_t · state_entering(chunk of t)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    readout = jnp.einsum("bctn,bchpn->bcthp", Cc, entering)
+    y_inter = readout * jnp.exp(cum_c).transpose(0, 1, 2, 3)[..., None]
+    y_inter = y_inter.reshape(Bsz, L, H, P).astype(xdt.dtype)
+    y = y_intra.reshape(Bsz, L, H, P) + y_inter
+    return y, final.astype(xdt.dtype)
+
+
+__all__ = [
+    "flash_attention", "accumulate", "ring_put", "put_signal",
+    "ring_all_reduce", "ssd_scan", "ssd_intra_chunk",
+]

@@ -1,0 +1,70 @@
+"""Fused ordered put+signal — paper Listing 2 (P2) at the kernel level.
+
+The payload DMA and the completion-flag DMA are issued back-to-back on the
+same channel; the flag transfer *starts only after the payload transfer's
+send side completes* (``payload.wait_send()``), so the flag can never
+overtake the data — NIC-fence semantics without a full round-trip flush.
+A consumer polling the flag word therefore observes data-then-flag order,
+which is exactly what ``mpi_win_order=true`` buys the paper's Listing 2.
+
+Without P2 (``ordered=False``) the kernel degrades to the Listing-1 shape:
+payload, full completion wait (both semaphores — the "flush"), then flag.
+The cost difference is one blocking completion on the critical path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_mode
+
+
+def _put_signal_kernel(x_ref, flag_ref, o_ref, oflag_ref,
+                       dsend, drecv, fsend, frecv, *,
+                       axis: str, shift: int, axis_size: int, ordered: bool):
+    my = jax.lax.axis_index(axis)
+    target = jax.lax.rem(my + shift + axis_size, axis_size)
+    data = pltpu.make_async_remote_copy(
+        x_ref, o_ref, dsend, drecv,
+        device_id=(target,), device_id_type=pltpu.DeviceIdType.MESH)
+    data.start()
+    if ordered:
+        # P2: fence — flag issues once the payload's send is on the wire
+        # ordered behind it; no remote-completion round trip.
+        data.wait_send()
+    else:
+        # Listing 1: full flush (remote completion) before the signal.
+        data.wait()
+    flag = pltpu.make_async_remote_copy(
+        flag_ref, oflag_ref, fsend, frecv,
+        device_id=(target,), device_id_type=pltpu.DeviceIdType.MESH)
+    flag.start()
+    flag.wait()
+    if ordered:
+        data.wait_recv()  # drain before kernel exit
+
+
+def put_signal(x, flag, *, axis: str, axis_size: int, shift: int = 1,
+               ordered: bool = True):
+    """Ring put of ``x`` plus a flag word; returns (received, received_flag).
+
+    Call inside ``shard_map``.  ``ordered=True`` is the paper's P2 path."""
+    return pl.pallas_call(
+        functools.partial(_put_signal_kernel, axis=axis, shift=shift,
+                          axis_size=axis_size, ordered=ordered),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                   pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype),
+                   jax.ShapeDtypeStruct(flag.shape, flag.dtype)],
+        scratch_shapes=[pltpu.SemaphoreType.DMA] * 4,
+        interpret=interpret_mode(),
+    )(x, flag)
+
+
+__all__ = ["put_signal"]

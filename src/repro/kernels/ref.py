@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` of the layout).
+
+Each function mirrors one kernel's contract exactly; tests sweep shapes and
+dtypes asserting allclose between kernel (interpret mode) and oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0**30
+
+
+# -- flash_attention ---------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal=True, sm_scale=None):
+    """q/k/v (B, H, S, hd) — materialized-softmax oracle."""
+    b, h, sq, hd = q.shape
+    scale = sm_scale if sm_scale is not None else hd ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = np.tril(np.ones((sq, k.shape[2]), bool))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# -- accumulate ---------------------------------------------------------------
+
+def accumulate_ref(buffer, update, *, op="sum"):
+    u = update.astype(buffer.dtype)
+    return {
+        "sum": buffer + u,
+        "min": jnp.minimum(buffer, u),
+        "max": jnp.maximum(buffer, u),
+        "prod": buffer * u,
+        "replace": u,
+    }[op]
+
+
+# -- ring put / put+signal ----------------------------------------------------
+
+def ring_put_ref(x_global, *, axis_size, shift=1):
+    """x_global (n, ...) per-device shards stacked → what each device holds
+    after every device puts its shard to (rank+shift) % n."""
+    return jnp.roll(x_global, shift, axis=0)
+
+
+# -- ring all-reduce ------------------------------------------------------------
+
+def ring_all_reduce_ref(x_global):
+    """x_global (n, m, ...) → every device holds sum over devices."""
+    s = x_global.sum(axis=0, keepdims=True)
+    return jnp.broadcast_to(s, x_global.shape)
+
+
+# -- SSD ----------------------------------------------------------------------
+
+def ssd_scan_ref(xdt, a, Bm, Cm, *, initial_state=None):
+    """Sequential SSD recurrence (exact).  xdt (B, L, H, P)."""
+    from repro.models.ssm import ssd_ref
+    return ssd_ref(xdt, a, Bm, Cm, initial_state=initial_state)
+
+
+__all__ = [
+    "flash_attention_ref", "accumulate_ref", "ring_put_ref",
+    "ring_all_reduce_ref", "ssd_scan_ref",
+]

@@ -1,0 +1,87 @@
+"""Mamba2 SSD intra-chunk kernel (the SSM compute hot-spot).
+
+The chunked SSD algorithm splits into a quadratic *intra-chunk* part (this
+kernel: per (batch, chunk) grid cell, all heads) and a cheap linear
+*inter-chunk* recurrence (host-side scan in ``ops.ssd_scan``).  VMEM tiling:
+one chunk of x (chunk × H·P), B/C (chunk × N), decays (chunk × H) per cell;
+the (chunk × chunk) dual matrix never leaves VMEM — the memory win over the
+materialized form.
+
+Outputs per cell: y_intra, per-chunk input states, exp(cumsum) read-out
+decays (for the host combine).  Oracle: ``repro.models.ssm.ssd_chunked`` /
+``ssd_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_mode
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref, cum_ref, *,
+                nheads: int, headdim: int, chunk: int):
+    a = a_ref[0].astype(jnp.float32)          # (chunk, H)
+    cum = jnp.cumsum(a, axis=0)               # (chunk, H)
+    cum_ref[0] = cum
+    Bm = b_ref[0].astype(jnp.float32)         # (chunk, N)
+    Cm = c_ref[0].astype(jnp.float32)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (i, j)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = ii >= jj
+    x = x_ref[0].astype(jnp.float32)          # (chunk, H*P)
+    for h in range(nheads):                   # static unroll over heads
+        xh = jax.lax.dynamic_slice_in_dim(x, h * headdim, headdim, axis=1)
+        diff = cum[:, None, h] - cum[None, :, h]
+        Lh = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+        Mh = CB * Lh
+        yh = jax.lax.dot_general(Mh, xh, (((1,), (0,)), ((), ())))
+        y_ref[0, :, h * headdim:(h + 1) * headdim] = yh.astype(y_ref.dtype)
+        # chunk input-state: Σ_j exp(cum_last − cum_j) B_j x̃_j
+        decay = jnp.exp(cum[-1, h] - cum[:, h])          # (chunk,)
+        bw = Bm * decay[:, None]                          # (chunk, N)
+        st = jax.lax.dot_general(xh, bw, (((0,), (0,)), ((), ())))  # (P, N)
+        st_ref[0, h * headdim:(h + 1) * headdim, :] = st.astype(st_ref.dtype)
+
+
+def ssd_intra_chunk(xdt, a, Bm, Cm, *, chunk: int, nheads: int, headdim: int):
+    """Run the intra-chunk kernel.
+
+    xdt (B, L, H·P), a (B, L, H), Bm/Cm (B, L, N) →
+      y_intra (B, L, H·P), states (B, nc, H·P, N), cum (B, L, H)
+    """
+    Bsz, L, HP = xdt.shape
+    N = Bm.shape[-1]
+    H = nheads
+    nc = L // chunk
+    grid = (Bsz, nc)
+    y, st, cum = pl.pallas_call(
+        functools.partial(_ssd_kernel, nheads=nheads, headdim=headdim,
+                          chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, HP), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, HP), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, HP, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, c: (b, c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, L, HP), xdt.dtype),
+            jax.ShapeDtypeStruct((Bsz, nc * HP, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, L, H), jnp.float32),
+        ],
+        interpret=interpret_mode(),
+    )(xdt, a, Bm, Cm)
+    return y, st.reshape(Bsz, nc, HP, N), cum
+
+
+__all__ = ["ssd_intra_chunk"]

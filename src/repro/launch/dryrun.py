@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay the first statements of this module — JAX locks
+the device count at first init, and the production meshes need 512 host
+placeholder devices.  (Do not import this module from tests/benches.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --multi-pod --out out.json
+
+Per cell this prints/records: memory_analysis (proves it fits),
+cost_analysis FLOPs/bytes, the collective schedule (bytes by kind, loop-aware)
+and the three roofline terms.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, cell_is_runnable, get_config, list_archs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.launch.specs import build_cell
+from repro.sharding import use_rules
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             grad_sync: str = "gspmd", rules_override=None,
+             cfg_overrides: dict | None = None, rules_updates: dict | None = None,
+             save_hlo: str | None = None, tag: str = "", accum_steps: int = 1) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "tag": tag,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "why": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rules = rules_override or rules_for(cfg, shape)
+    if rules_updates:
+        rules = dict(rules, **rules_updates)
+    t0 = time.time()
+    with use_rules(mesh, rules) as R:
+        step, args, _ = build_cell(cfg, shape, R, grad_sync=grad_sync,
+                                   accum_steps=accum_steps)
+        lowered = jax.jit(step).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(text)
+    # loop-aware per-device analysis (cost_analysis ignores while trip counts)
+    stats = hlo_analysis.analyze(text)
+    flops = stats.flops
+    hbm_bytes = stats.hbm_bytes
+    roof = hlo_analysis.Roofline(flops=flops, hbm_bytes=hbm_bytes,
+                                 coll_bytes=stats.total_coll_bytes, chips=chips)
+    coll = stats
+    mflops = hlo_analysis.model_flops(cfg.replace(dtype="bfloat16",
+                                                  param_dtype="bfloat16"), shape)
+    rec = {
+        "arch": arch,
+        "tag": tag,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "status": "ok",
+        "grad_sync": grad_sync,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "bytes_per_device": {
+            "peak": int(mem.peak_memory_in_bytes),
+            "arguments": int(mem.argument_size_in_bytes),
+            "output": int(mem.output_size_in_bytes),
+            "temp": int(mem.temp_size_in_bytes),
+        },
+        "hlo_flops": flops,
+        "hlo_bytes": hbm_bytes,
+        "collectives": {
+            "bytes_by_kind": coll.coll_bytes,
+            "count_by_kind": coll.coll_count,
+            "total_bytes": coll.total_coll_bytes,
+        },
+        "xla_cost_flops_per_dev": float(ca.get("flops", 0.0)),
+        "model_flops": mflops,
+        "useful_flops_ratio": (mflops / (flops * chips)) if flops else None,
+        "roofline": roof.as_dict(),
+    }
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {sorted(SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--grad-sync", default="gspmd", choices=["gspmd", "rma_ring"])
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    ap.add_argument("--save-hlo", default=None, help="write compiled HLO here")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="model-config override, e.g. --set attn_impl=stub")
+    ap.add_argument("--rule", action="append", default=[], metavar="NAME=AXES",
+                    help="sharding-rule override, e.g. --rule seq=model or "
+                         "--rule batch=pod,data,model or --rule embed=none")
+    ap.add_argument("--tag", default="", help="label recorded with results")
+    ap.add_argument("--accum", type=int, default=1, help="grad-accum microbatches")
+    args = ap.parse_args(argv)
+
+    def parse_v(v):
+        if v.lower() in ("true", "false"):
+            return v.lower() == "true"
+        try:
+            return int(v)
+        except ValueError:
+            try:
+                return float(v)
+            except ValueError:
+                return v
+    cfg_overrides = dict(kv.split("=", 1) for kv in args.set)
+    cfg_overrides = {k: parse_v(v) for k, v in cfg_overrides.items()}
+    rules_updates = {}
+    for kv in args.rule:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("none", ""):
+            rules_updates[k] = None
+        elif "," in v:
+            rules_updates[k] = tuple(v.split(","))
+        else:
+            rules_updates[k] = v
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = sorted(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records, failures = [], 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   grad_sync=args.grad_sync,
+                                   cfg_overrides=cfg_overrides or None,
+                                   rules_updates=rules_updates or None,
+                                   save_hlo=args.save_hlo, tag=args.tag,
+                                   accum_steps=args.accum)
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                records.append(rec)
+                status = rec["status"]
+                if status == "ok":
+                    r = rec["roofline"]
+                    print(f"[dryrun] {tag}: OK peak={rec['bytes_per_device']['peak']/2**30:.2f}GiB/dev "
+                          f"flops/dev={rec['hlo_flops']:.3g} coll/dev={rec['collectives']['total_bytes']:.3g}B "
+                          f"dominant={r['dominant']} "
+                          f"(c={r['compute_s']*1e3:.2f}ms m={r['memory_s']*1e3:.2f}ms "
+                          f"n={r['collective_s']*1e3:.2f}ms) "
+                          f"compile={rec['compile_s']}s", flush=True)
+                elif status == "skipped":
+                    print(f"[dryrun] {tag}: SKIP ({rec['why']})", flush=True)
+                else:
+                    print(f"[dryrun] {tag}: FAILED {rec['error']}", flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    print(f"[dryrun] done: {len(records)} cells, {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

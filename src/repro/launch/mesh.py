@@ -1,0 +1,76 @@
+"""Production meshes and per-(arch × shape) sharding rules.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches JAX device state — required because the
+dry-run forces a 512-device host platform while tests/benches run on 1.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.sharding import DEFAULT_RULES
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2×16×16 = 512 chips for the two-pod mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host (CPU) devices for tests/examples."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+MODEL_AXIS_SIZE = 16  # both production meshes have model=16
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig, *, fsdp: bool = True) -> dict:
+    """Logical→mesh mapping for one dry-run cell (the GSPMD baseline).
+
+    * batch        → ("pod", "data")            (DP across pods and data axis)
+    * heads/mlp/vocab/expert → "model"          (TP / EP), *only when the
+      dimension divides the model-axis size* — e.g. whisper's 8 heads or
+      llama4's 40 heads cannot 16-way shard, so those weights stay TP-
+      replicated and FSDP carries them (documented per-arch in DESIGN.md).
+    * params' "embed" dim → ("pod","data")      (ZeRO-3/FSDP; activations'
+      embed name is consumed by batch first, so they stay data-sharded only)
+    * decode shapes: the KV cache's seq dim shards over "model"
+      (flash-decode style partial attention) — kv head counts (often 8) do
+      not divide 16, and the cache is the dominant allocation.
+    * long_500k (batch=1): batch unsharded; cache seq shards over
+      ("data","model"); params TP-only.
+    """
+    m = MODEL_AXIS_SIZE
+    rules = dict(DEFAULT_RULES)
+    rules["batch"] = ("pod", "data")
+    rules["heads"] = "model" if cfg.n_heads % m == 0 else None
+    rules["kv_heads"] = "model" if cfg.n_kv_heads % m == 0 else None
+    rules["vocab"] = "model"  # vocab_padded is a multiple of 256
+    rules["expert"] = "model" if (cfg.moe and cfg.moe.num_experts % m == 0) else None
+    # the fused mlp dim must divide for every projection that carries it
+    mlp_dims = {2 * cfg.d_ff, cfg.d_ff} if cfg.d_ff else set()
+    if cfg.ssm is not None:
+        d_inner = cfg.ssm.expand * cfg.d_model
+        nheads = d_inner // cfg.ssm.headdim
+        mlp_dims |= {2 * d_inner + 2 * cfg.ssm.d_state + nheads,
+                     d_inner + 2 * cfg.ssm.d_state, d_inner}
+    if cfg.moe is not None:
+        mlp_dims |= {2 * cfg.moe.d_ff_shared, cfg.moe.d_ff_shared} - {0}
+    rules["mlp"] = "model" if all(d % m == 0 for d in mlp_dims) else None
+    if fsdp:
+        rules["embed"] = ("pod", "data")
+    if shape.kind == "decode":
+        rules["kv_seq"] = "model"
+    if shape.name == "long_500k":
+        rules["batch"] = None
+        rules["kv_seq"] = ("data", "model")
+        rules["embed"] = None  # batch=1: params TP-only, data carries the cache
+    return rules
+
+
+__all__ = ["make_production_mesh", "make_host_mesh", "rules_for"]

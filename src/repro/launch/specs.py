@@ -1,0 +1,122 @@
+"""ShapeDtypeStruct stand-ins and step builders for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable
+ShapeDtypeStructs for every model input — no device allocation, exactly the
+shannon/kernels pattern.  ``build_cell`` assembles the (step_fn, arg_specs)
+pair that ``dryrun.py`` lowers and compiles.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model
+from repro.sharding import ShardingRules, spec_to_sharding
+from repro.train.optimizer import OptimizerConfig, init_opt_state, opt_state_specs
+from repro.train.trainstep import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _sds_like(shape_dtype_tree, sharding_tree):
+    return jax.tree.map(
+        lambda l, s: SDS(l.shape, l.dtype, sharding=s),
+        shape_dtype_tree, sharding_tree)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules) -> dict:
+    """ShapeDtypeStructs for the data batch of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    bsh = rules.sharding(("batch", None))
+    specs: dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = SDS((B, S), jnp.int32, sharding=bsh)
+        specs["labels"] = SDS((B, S), jnp.int32, sharding=bsh)
+    elif shape.kind == "prefill":
+        specs["tokens"] = SDS((B, S), jnp.int32, sharding=bsh)
+    else:  # decode: one new token against a seq_len cache
+        specs["tokens"] = SDS((B, 1), jnp.int32, sharding=bsh)
+    if cfg.enc_layers and shape.kind != "decode":
+        specs["frames"] = SDS((B, S, cfg.d_model), cfg.activation_dtype,
+                              sharding=rules.sharding(("batch", None, None)))
+    if cfg.vlm_prefix and shape.kind != "decode":
+        specs["patches"] = SDS((B, cfg.vlm_prefix, cfg.d_model),
+                               cfg.activation_dtype,
+                               sharding=rules.sharding(("batch", None, None)))
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules) -> dict:
+    """Public name required by the assignment: the model-input stand-ins."""
+    return batch_specs(cfg, shape, rules)
+
+
+def param_specs_sds(model, rules: ShardingRules):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shardings = spec_to_sharding(model.param_specs(), rules)
+    return _sds_like(shapes, shardings), shardings
+
+
+def opt_specs_sds(model, params_sds, rules: ShardingRules):
+    shapes = jax.eval_shape(init_opt_state, params_sds)
+    shardings = spec_to_sharding(
+        opt_state_specs(model.param_specs()), rules)
+    return _sds_like(shapes, shardings), shardings
+
+
+def cache_specs_sds(model, shape: ShapeConfig, rules: ShardingRules,
+                    enc_len: int = 0):
+    cfg = model.cfg
+    B = shape.global_batch
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(B, shape.seq_len, cfg.activation_dtype,
+                                 enc_len=enc_len))
+    shardings = spec_to_sharding(model.cache_specs(), rules)
+    return _sds_like(shapes, shardings), shardings
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules,
+               *, grad_sync: str = "gspmd", accum_steps: int = 1):
+    """Return (step_fn, args_sds tuple, out_shardings or None) for this cell.
+
+    train:   step(params, opt_state, batch)
+    prefill: step(params, batch, cache)
+    decode:  step(params, cache, tokens)
+    """
+    # production numerics: bf16 params+compute, fp32 optimizer moments
+    cfg = cfg.replace(dtype="bfloat16", param_dtype="bfloat16")
+    model = build_model(cfg)
+    enc_len = shape.seq_len if cfg.enc_layers else 0
+
+    params_sds, param_sh = param_specs_sds(model, rules)
+    if shape.kind == "train":
+        opt_sds, opt_sh = opt_specs_sds(model, params_sds, rules)
+        batch = batch_specs(cfg, shape, rules)
+        step = make_train_step(model, OptimizerConfig(), grad_sync=grad_sync,
+                               accum_steps=accum_steps)
+        return step, (params_sds, opt_sds, batch), None
+    if shape.kind == "prefill":
+        cache_sds, cache_sh = cache_specs_sds(model, shape, rules, enc_len)
+        batch = batch_specs(cfg, shape, rules)
+
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        return prefill_step, (params_sds, batch, cache_sds), None
+    # decode
+    cache_sds, cache_sh = cache_specs_sds(model, shape, rules, enc_len)
+    batch = batch_specs(cfg, shape, rules)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return serve_step, (params_sds, cache_sds, batch["tokens"]), None
+
+
+__all__ = [
+    "input_specs", "batch_specs", "build_cell",
+    "param_specs_sds", "opt_specs_sds", "cache_specs_sds",
+]

@@ -1,0 +1,4 @@
+"""repro.models — pure-JAX model zoo (layers, attention, MoE, SSM, stacks)."""
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model"]

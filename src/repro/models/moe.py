@@ -1,0 +1,145 @@
+"""Mixture-of-Experts: top-k routing with sort-based capacity dispatch.
+
+Dispatch strategy (pure JAX, GSPMD/EP-friendly):
+
+1. route: logits (T, E) → top-k expert ids + renormalized gates.
+2. sort the T·k assignments by expert id; compute each assignment's rank
+   within its expert (position = index − searchsorted(start of expert)).
+3. scatter tokens into a dense (E, C, d) buffer (capacity C, drop beyond) —
+   the buffer is the *expert-parallel* tensor: sharded over the "expert"
+   logical axis, so GSPMD inserts the all-to-all exchange exactly where the
+   RMA layer's pre-registered expert windows sit on real hardware.
+4. batched expert matmuls (E, C, d)·(E, d, ff) — MXU-shaped.
+5. gather back to token order and combine with gate weights.
+
+Shared experts (DeepSeek-style) are dense SwiGLU applied to every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+from repro.sharding import logical_constraint
+
+Array = jax.Array
+
+
+def init_moe(key, cfg) -> dict:
+    mo = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": layers.trunc_normal(ks[0], (d, mo.num_experts), 1.0, jnp.float32),
+        "wi": layers.trunc_normal(ks[1], (mo.num_experts, d, 2 * mo.d_ff_expert), 1.0,
+                                  cfg.param_dtype),
+        "wo": layers.trunc_normal(ks[2], (mo.num_experts, mo.d_ff_expert, d), 1.0,
+                                  cfg.param_dtype),
+    }
+    if mo.n_shared:
+        p["shared"] = layers.init_swiglu(ks[3], d, mo.d_ff_shared, cfg.param_dtype)
+    return p
+
+
+def moe_spec(cfg) -> dict:
+    p = {
+        "router": ("embed", None),
+        "wi": ("expert", "embed", "mlp_expert"),
+        "wo": ("expert", "mlp_expert", "embed"),
+    }
+    if cfg.moe.n_shared:
+        p["shared"] = layers.swiglu_spec()
+    return p
+
+
+def moe_apply(params: dict, x: Array, cfg, *, return_aux: bool = False):
+    """Apply the MoE layer to ``x`` (B, S, d).  Returns (out, aux_loss)."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    dt = x.dtype
+    T = B * S
+    E, k = mo.num_experts, mo.top_k
+    xt = x.reshape(T, d)
+
+    # --- routing (fp32 for numerics) ---------------------------------------
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = lax.top_k(probs, k)  # (T, k)
+    if mo.renorm_gates:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (T * k)
+    mean_prob = probs.mean(axis=0)
+    aux = E * jnp.sum(density * mean_prob)
+
+    # --- sort-based dispatch -------------------------------------------------
+    C = mo.capacity(T)
+    flat_e = eidx.reshape(-1)                       # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    tok_of = order // k
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos_in_e = jnp.arange(T * k) - starts[sorted_e]
+    keep = pos_in_e < C
+    dest = jnp.where(keep, sorted_e * C + pos_in_e, E * C)  # OOB = dropped
+
+    buf = jnp.zeros((E * C, d), dt).at[dest].set(xt[tok_of], mode="drop")
+    buf = buf.reshape(E, C, d)
+    # EP over "expert" (model axis) × feature dim over "fsdp"/data: the
+    # 2D-sharded dispatch measured best — §Perf D2/D2' tried expert-only
+    # (16x compute replication) and expert×capacity (GSPMD materializes the
+    # scatter: 264 GiB/dev peak, 9x collective bytes); both refuted.
+    buf = logical_constraint(buf, "expert", None, "embed")
+
+    # --- expert computation (batched, MXU-shaped) ----------------------------
+    h = jnp.einsum("ecd,edf->ecf", buf, params["wi"].astype(dt))
+    gate_h, up_h = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate_h.astype(jnp.float32)).astype(dt) * up_h
+    yb = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(dt))
+    yb = logical_constraint(yb, "expert", None, "embed")
+
+    # --- combine -----------------------------------------------------------
+    y_flat = yb.reshape(E * C, d)
+    safe_dest = jnp.where(keep, dest, 0)
+    y_sorted = y_flat[safe_dest] * keep[:, None].astype(dt)
+    gates_sorted = gates.reshape(-1)[order].astype(dt)
+    out = jnp.zeros((T, d), dt).at[tok_of].add(y_sorted * gates_sorted[:, None])
+
+    if mo.n_shared:
+        out = out + layers.swiglu(xt, params["shared"])
+
+    out = out.reshape(B, S, d)
+    if return_aux:
+        return out, aux
+    return out, aux
+
+
+def moe_ref(params: dict, x: Array, cfg) -> Array:
+    """Oracle: dense per-token loop over selected experts (no capacity drops).
+
+    Used by property tests: when capacity is ample, ``moe_apply`` must match.
+    """
+    mo = cfg.moe
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = lax.top_k(probs, mo.top_k)
+    if mo.renorm_gates:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    out = jnp.zeros_like(xt, dtype=jnp.float32)
+    for e in range(mo.num_experts):
+        wi, wo = params["wi"][e], params["wo"][e]
+        h = xt @ wi.astype(xt.dtype)
+        g, u = jnp.split(h, 2, axis=-1)
+        y = (jax.nn.silu(g.astype(jnp.float32)).astype(xt.dtype) * u) @ wo.astype(xt.dtype)
+        w_e = jnp.where(eidx == e, gates, 0.0).sum(-1)  # (T,)
+        out = out + y.astype(jnp.float32) * w_e[:, None]
+    if mo.n_shared:
+        out = out + layers.swiglu(xt, params["shared"]).astype(jnp.float32)
+    return out.reshape(B, S, d).astype(x.dtype)
+
+
+__all__ = ["init_moe", "moe_spec", "moe_apply", "moe_ref"]

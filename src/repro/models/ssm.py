@@ -1,0 +1,284 @@
+"""Mamba2 — state-space duality (SSD) layer, chunked scan + O(1) decode.
+
+Faithful to the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks; within a chunk the dual (attention-like) quadratic form is
+used, across chunks the linear recurrence carries the (h, p, n) state.  This
+pure-JAX implementation is the oracle for the Pallas ``ssd_scan`` kernel and
+the production path for dry-runs.
+
+Decode is the plain recurrence — O(1) state per token, which is what makes
+``long_500k`` runnable for SSM/hybrid architectures.
+
+Layout: d_inner = expand·d_model, nheads = d_inner/headdim, single B/C group.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+from repro.sharding import logical_constraint
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    nheads = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.d_state
+    ks = jax.random.split(key, 5)
+    pd = cfg.param_dtype
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": layers.trunc_normal(
+            ks[0], (d, 2 * d_inner + 2 * s.d_state + nheads), 1.0, pd),
+        "conv_w": layers.trunc_normal(ks[1], (conv_dim, s.d_conv), 1.0, pd),
+        "conv_b": jnp.zeros((conv_dim,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": layers.init_rmsnorm(d_inner, pd),
+        "out_proj": layers.trunc_normal(ks[2], (d_inner, d), 1.0, pd),
+    }
+
+
+def mamba2_spec(cfg) -> dict:
+    return {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": ("mlp", None),
+        "conv_b": ("mlp",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": {"scale": ("mlp",)},
+        "out_proj": ("mlp", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(u: Array, w: Array, b: Array) -> Array:
+    """u (B, L, C), w (C, K), b (C,) — causal depthwise conv."""
+    K = w.shape[1]
+    L = u.shape[1]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for k in range(K):  # K is 4: cheap static unroll
+        out = out + pad[:, k : k + L, :] * w[:, k].astype(u.dtype)
+    return out + b.astype(u.dtype)
+
+
+def causal_conv1d_step(u: Array, conv_state: Array, w: Array, b: Array):
+    """Single-token conv: u (B, 1, C); conv_state (B, K-1, C)."""
+    K = w.shape[1]
+    window = jnp.concatenate([conv_state, u], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,ck->bc", window, w.astype(u.dtype)) + b.astype(u.dtype)
+    return out[:, None, :], window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    xdt: Array,  # (B, L, H, P): inputs pre-multiplied by dt
+    a: Array,    # (B, L, H): dt * A  (negative)
+    Bm: Array,   # (B, L, N): input projection
+    Cm: Array,   # (B, L, N): output projection
+    *,
+    chunk: int,
+    initial_state: Array | None = None,  # (B, H, P, N)
+) -> tuple[Array, Array]:
+    """Chunked SSD scan.  Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    Bsz, L, H, Pd = xdt.shape
+    N = Bm.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        # zero-pad: a=0 (decay exp(0)=1) and x̃=0 leave the state untouched,
+        # so the final state stays exact; padded y rows are sliced off.
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        L_pad = L + pad
+    else:
+        L_pad = L
+    nc = L_pad // chunk
+
+    xc = xdt.reshape(Bsz, nc, chunk, H, Pd)
+    ac = a.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+    del L_pad
+
+    state0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+    )
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))  # i >= j
+
+    def step(state, inp):
+        x_q, a_q, B_q, C_q = inp  # (B, q, ...)
+        cum = jnp.cumsum(a_q, axis=1)  # (B, q, H)
+        # intra-chunk (dual / attention-like form)
+        CB = jnp.einsum("bin,bjn->bij", C_q.astype(jnp.float32),
+                        B_q.astype(jnp.float32))
+        # mask BEFORE exp: exp of a positive (i<j) difference overflows to
+        # inf, and inf*0 = NaN
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B, i, j, H)
+        Lij = jnp.exp(jnp.where(tri[None, :, :, None], diff, -jnp.inf))
+        M = CB[:, :, :, None] * Lij
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, x_q.astype(jnp.float32))
+        # inter-chunk: carry-in state read out at every position
+        y_inter = jnp.einsum(
+            "bin,bhpn,bih->bihp", C_q.astype(jnp.float32), state, jnp.exp(cum))
+        # state update: h_Q = Σ_j exp(cum_Q - cum_j) B_j x̃_j + exp(cum_Q) h_in
+        decay_out = jnp.exp(cum[:, -1, None, :] - cum)  # (B, q, H)
+        state_new = (
+            jnp.einsum("bjn,bjh,bjhp->bhpn", B_q.astype(jnp.float32),
+                       decay_out, x_q.astype(jnp.float32))
+            + state * jnp.exp(cum[:, -1])[:, :, None, None]
+        )
+        return state_new, (y_intra + y_inter).astype(xdt.dtype)
+
+    inputs = (
+        jnp.moveaxis(xc, 1, 0),
+        jnp.moveaxis(ac, 1, 0),
+        jnp.moveaxis(Bc, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+    )
+    final_state, ys = lax.scan(step, state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, -1, H, Pd)[:, :L]
+    return y, final_state.astype(xdt.dtype)
+
+
+def ssd_ref(xdt, a, Bm, Cm, *, initial_state=None):
+    """Sequential-recurrence oracle (exact, O(L) steps) for property tests."""
+    Bsz, L, H, Pd = xdt.shape
+    N = Bm.shape[-1]
+    state = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+    )
+    ys = []
+    for t in range(L):
+        decay = jnp.exp(a[:, t].astype(jnp.float32))  # (B, H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xdt[:, t].astype(jnp.float32), Bm[:, t].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", state, Cm[:, t].astype(jnp.float32))
+        ys.append(y)
+    return jnp.stack(ys, axis=1).astype(xdt.dtype), state.astype(xdt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(h: Array, cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.headdim
+    z, rest = h[..., :d_inner], h[..., d_inner:]
+    xbc, dt = rest[..., : d_inner + 2 * s.d_state], rest[..., d_inner + 2 * s.d_state:]
+    return z, xbc, dt, d_inner, nheads
+
+
+def mamba2_apply(
+    params: dict,
+    x: Array,
+    cfg,
+    *,
+    cache: dict | None = None,
+) -> tuple[Array, dict | None]:
+    """Mamba2 block over x (B, S, d).  With ``cache``: single-step decode."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    dt_ = x.dtype
+    h = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    z, xbc, dtr, d_inner, nheads = _split_proj(h, cfg)
+
+    if cache is not None and S == 1:
+        xbc, conv_state = causal_conv1d_step(
+            xbc, cache["conv"], params["conv_w"], params["conv_b"])
+        xbc_raw = None
+    else:
+        xbc_raw = xbc  # pre-conv inputs: the conv tail for decode
+        xbc = causal_conv1d(xbc, params["conv_w"], params["conv_b"])
+        conv_state = None
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(dt_)
+    xin = xbc[..., :d_inner]
+    Bm = xbc[..., d_inner : d_inner + s.d_state]
+    Cm = xbc[..., d_inner + s.d_state :]
+
+    A = -jnp.exp(params["A_log"])  # (H,)
+    dt_act = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    xh = xin.reshape(B, S, nheads, s.headdim)
+    xdt = xh * dt_act[..., None].astype(dt_)
+    a = dt_act * A  # (B,S,H)
+
+    if cache is not None and S == 1:
+        state = cache["ssm"].astype(jnp.float32)
+        decay = jnp.exp(a[:, 0].astype(jnp.float32))
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xdt[:, 0].astype(jnp.float32), Bm[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", state, Cm[:, 0].astype(jnp.float32))[:, None]
+        new_cache = dict(cache, conv=conv_state, ssm=state.astype(cache["ssm"].dtype))
+    else:
+        y, final_state = ssd_chunked(
+            xdt, a, Bm, Cm, chunk=s.chunk,
+            initial_state=cache["ssm"] if cache is not None else None)
+        if cache is not None:
+            # prefill: also save the conv tail for subsequent decode
+            new_conv = xbc_raw[:, -(s.d_conv - 1):, :]
+            new_cache = dict(cache, conv=new_conv.astype(cache["conv"].dtype),
+                             ssm=final_state.astype(cache["ssm"].dtype))
+        else:
+            new_cache = None
+
+    y = (y.astype(jnp.float32) + params["D"][None, None, :, None]
+         * xh.astype(jnp.float32)).astype(dt_)
+    y = y.reshape(B, S, d_inner)
+    y = logical_constraint(y, "batch", "seq", "mlp")
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    gated = layers.rms_norm(gated, params["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", gated, params["out_proj"].astype(dt_)), new_cache
+
+
+def init_mamba2_cache(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nheads, s.headdim, s.d_state), dtype),
+    }
+
+
+def mamba2_cache_spec(cfg) -> dict:
+    return {
+        "conv": ("batch", None, "mlp"),
+        "ssm": ("batch", None, None, "ssm_state"),
+    }
+
+
+__all__ = [
+    "init_mamba2", "mamba2_spec", "mamba2_apply",
+    "init_mamba2_cache", "mamba2_cache_spec",
+    "ssd_chunked", "ssd_ref", "causal_conv1d", "causal_conv1d_step",
+]

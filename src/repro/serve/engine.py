@@ -1,0 +1,143 @@
+"""Continuous-batching serving engine (decode slots + prefill insertion).
+
+A compact but real engine: fixed decode slots share one batched KV cache;
+requests are prefilled one at a time (prefill batch = 1 here; the dry-run
+exercises the big prefill shapes) and inserted into free slots; every decode
+step advances all live slots together.  Finished sequences free their slot.
+
+The engine is deliberately model-agnostic: it drives the ``Model`` API
+(prefill / decode_step) that every one of the ten architectures implements.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int
+    eos_id: int = -1            # -1: never stops early
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: list
+
+
+class ServeEngine:
+    """Greedy-decoding continuous-batching engine over ``n_slots`` slots."""
+
+    def __init__(self, model, params, *, n_slots: int, max_seq: int,
+                 enc_len: int = 0):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        cfg = model.cfg
+        self.cache = model.init_cache(n_slots, max_seq, enc_len=enc_len)
+        self.slot_free = [True] * n_slots
+        self.slot_req: dict[int, Request] = {}
+        self.slot_generated: dict[int, list] = {}
+        self.slot_pos: dict[int, int] = {}
+        self.pending: list[Request] = []
+        self.done: list[Completion] = []
+        self._decode = jax.jit(model.decode_step)
+        self._last_tokens = jnp.zeros((n_slots, 1), jnp.int32)
+
+        # single-sequence prefill that scatters into one cache slot
+        def prefill_into_slot(params, cache, tokens, slot):
+            sub = model.init_cache(1, max_seq, enc_len=enc_len)
+            logits, sub = model.prefill(params, {"tokens": tokens}, sub)
+
+            def insert(full, one):
+                # The batch axis is wherever `one` is 1 and `full` is
+                # n_slots with all other dims equal (scan-stacked leaves
+                # carry a leading layers dim, so it is not always axis 0).
+                if full.ndim != one.ndim:
+                    return full
+                for ax in range(full.ndim):
+                    rest_f = full.shape[:ax] + full.shape[ax + 1:]
+                    rest_o = one.shape[:ax] + one.shape[ax + 1:]
+                    if (one.shape[ax] == 1 and full.shape[ax] == n_slots
+                            and rest_f == rest_o):
+                        starts = [0] * full.ndim
+                        starts[ax] = slot
+                        return jax.lax.dynamic_update_slice(
+                            full, one.astype(full.dtype), tuple(starts))
+                return full
+            cache2 = jax.tree.map(insert, cache, sub)
+            return logits, cache2
+
+        self._prefill = jax.jit(prefill_into_slot, static_argnames=())
+
+    # -- public API --------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError("prompt longer than max_seq")
+        self.pending.append(req)
+
+    def step(self) -> None:
+        """One engine tick: admit pending requests, then one decode step."""
+        self._admit()
+        if not self.slot_req:
+            return
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self._last_tokens)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        nxt_np = np.asarray(nxt)
+        new_last = np.asarray(self._last_tokens).copy()
+        for slot, req in list(self.slot_req.items()):
+            tok = int(nxt_np[slot])
+            self.slot_generated[slot].append(tok)
+            self.slot_pos[slot] += 1
+            new_last[slot, 0] = tok
+            ended = (tok == req.eos_id or
+                     len(self.slot_generated[slot]) >= req.max_new_tokens or
+                     self.slot_pos[slot] >= self.max_seq - 1)
+            if ended:
+                self.done.append(Completion(req.rid, self.slot_generated[slot]))
+                self._release(slot)
+        self._last_tokens = jnp.asarray(new_last)
+
+    def run(self, max_ticks: int = 10_000) -> list[Completion]:
+        ticks = 0
+        while (self.pending or self.slot_req) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.done
+
+    # -- internals --------------------------------------------------------------
+    def _admit(self) -> None:
+        while self.pending and any(self.slot_free):
+            req = self.pending.pop(0)
+            slot = self.slot_free.index(True)
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, self.cache = self._prefill(self.params, self.cache,
+                                               tokens, slot)
+            first = int(np.asarray(jnp.argmax(logits[0, -1])))
+            self.slot_free[slot] = False
+            self.slot_req[slot] = req
+            self.slot_generated[slot] = [first]
+            self.slot_pos[slot] = len(req.prompt) + 1
+            lt = np.asarray(self._last_tokens).copy()
+            lt[slot, 0] = first
+            self._last_tokens = jnp.asarray(lt)
+
+    def _release(self, slot: int) -> None:
+        self.slot_free[slot] = True
+        del self.slot_req[slot]
+        del self.slot_generated[slot]
+        del self.slot_pos[slot]
+
+
+__all__ = ["ServeEngine", "Request", "Completion"]

@@ -1,0 +1,130 @@
+"""Paged KV-cache as a dynamic RMA window — the serving-side use of P5.
+
+The serving engine's KV pool is the TPU analogue of the paper's dynamic
+window: pages (fixed-size token blocks) are *attached* segments of a
+process-local pool, allocated and freed as sequences come and go — exactly
+the "communication requirements change over time" motivation of paper §4.
+
+Access paths, mirroring the paper's measurement taxonomy:
+
+* ``query``    — the page's registration (offset/epoch) is looked up
+  remotely per access (dynamic window without handles; Fig. 3b),
+* ``memhandle`` — page descriptors are exchanged once at allocation; decode-
+  time accesses are direct RDMA with zero lookup overhead (P5).  A page's
+  handle dies with ``free_page`` (epoch bump) — use-after-free is dropped
+  and counted, never corrupts (the life-time guarantee).
+
+A disaggregated prefill→decode deployment ships page handles instead of page
+contents; ``benchmarks.put_latency`` quantifies the per-access win.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rma import DynamicWindow, WindowConfig, memhandle_create
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PageSpec:
+    page_tokens: int          # tokens per page
+    kv_heads: int
+    head_dim: int
+    n_pages: int              # pool capacity
+
+    @property
+    def page_elems(self) -> int:
+        return self.page_tokens * self.kv_heads * self.head_dim * 2  # K and V
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVWindow:
+    """Fixed-capacity page pool exposed as a dynamic window.
+
+    ``window.buffer`` is the flat pool; page *p* occupies
+    ``[p·page_elems, (p+1)·page_elems)``.  ``page_map`` (host side) tracks
+    free pages; ``handles`` holds each live page's memory handle (what a
+    remote decode engine would receive).
+    """
+
+    window: DynamicWindow
+    handles: Array            # (n_pages, 4) int32 — live pages' memhandles
+    live: Array               # (n_pages,) bool
+    spec: PageSpec
+
+    def tree_flatten(self):
+        return (self.window, self.handles, self.live), (self.spec,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux[0])
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def create(cls, spec: PageSpec, axis: str, axis_size: int,
+               dtype=jnp.bfloat16) -> "PagedKVWindow":
+        pool = jnp.zeros((spec.n_pages * spec.page_elems,), dtype)
+        win = DynamicWindow.create_dynamic(
+            pool, axis, axis_size,
+            WindowConfig(scope="thread", order=True, max_streams=4),
+            max_attach=spec.n_pages, am_slots=1, am_msg=1)
+        return cls(
+            window=win,
+            handles=jnp.zeros((spec.n_pages, 4), jnp.int32),
+            live=jnp.zeros((spec.n_pages,), bool),
+            spec=spec,
+        )
+
+    # -- page lifecycle ---------------------------------------------------------
+    def alloc_page(self, page: int) -> "PagedKVWindow":
+        """Attach page ``page`` and create its memory handle (P5): local,
+        no communication — the handle is what peers get."""
+        s = self.spec
+        win = self.window.attach(page, offset=page * s.page_elems,
+                                 size=s.page_elems)
+        mh = memhandle_create(win, page)
+        return PagedKVWindow(win, self.handles.at[page].set(mh),
+                             self.live.at[page].set(True), s)
+
+    def free_page(self, page: int) -> "PagedKVWindow":
+        """Detach + epoch bump: all outstanding handles for the page become
+        stale; remote writes through them are dropped and counted."""
+        win = self.window.detach(page)
+        win = win._with_dyn(epoch=win.epoch + 1)
+        return PagedKVWindow(win, self.handles.at[page].set(0),
+                             self.live.at[page].set(False), self.spec)
+
+    # -- data paths ---------------------------------------------------------------
+    def write_page_local(self, page: int, kv: Array) -> "PagedKVWindow":
+        """Local fill (the prefill engine writing its own pool)."""
+        s = self.spec
+        buf = jax.lax.dynamic_update_slice_in_dim(
+            self.window.buffer, kv.reshape(-1).astype(self.window.buffer.dtype),
+            page * s.page_elems, axis=0)
+        return PagedKVWindow(self.window._with(buffer=buf), self.handles,
+                             self.live, self.spec)
+
+    def read_page(self, page: int) -> Array:
+        s = self.spec
+        flat = jax.lax.dynamic_slice_in_dim(
+            self.window.buffer, page * s.page_elems, s.page_elems, axis=0)
+        return flat.reshape(2, s.page_tokens, s.kv_heads, s.head_dim)
+
+    def put_page_remote(self, page: int, kv: Array, perm,
+                        stream: int = 0) -> "PagedKVWindow":
+        """Disaggregated path: push a filled page into a peer's pool through
+        its memory handle — one RDMA phase, no target involvement."""
+        from repro.core.rma import win_from_memhandle
+        mh = self.handles[page]
+        mhwin = win_from_memhandle(self.window, mh)
+        mhwin = mhwin.put(kv.reshape(-1), perm, stream=stream)
+        mhwin = mhwin.flush(stream)
+        return PagedKVWindow(mhwin.parent, self.handles, self.live, self.spec)
+
+
+__all__ = ["PageSpec", "PagedKVWindow"]

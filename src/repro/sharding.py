@@ -1,0 +1,139 @@
+"""Logical-axis sharding: the single place where names meet the mesh.
+
+Model code annotates arrays with *logical* axis names ("batch", "embed",
+"heads", "expert", ...).  The launch layer activates a :class:`ShardingRules`
+context mapping logical names to physical mesh axes; inside it,
+``logical_constraint`` lowers to ``jax.lax.with_sharding_constraint`` and
+``spec_to_sharding`` converts a parameter-spec tree into ``NamedSharding``s.
+Outside any context (unit tests, smoke tests on one device) everything is a
+no-op, so model code never needs a mesh to run.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+#: Default logical→mesh mapping for the production mesh ("data", "model").
+#: A logical name may map to a tuple of mesh axes (sharded over both).
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),       # data parallel over pods × data axis
+    "fsdp": ("pod", "data"),        # parameter sharding axis for FSDP/ZeRO-3
+    "embed": None,                  # activations' feature dim: replicated
+    "heads": "model",               # tensor parallel: attention heads
+    "kv_heads": "model",            # tensor parallel: KV heads
+    "mlp": "model",                 # tensor parallel: FFN hidden
+    "vocab": "model",               # tensor parallel: output vocab
+    "expert": "model",              # expert parallel
+    "seq": None,                    # sequence dim of activations
+    "kv_seq": None,                 # sequence dim of KV caches
+    "q_lora": None,
+    "kv_lora": None,
+    "ssm_state": None,
+    "conv": None,
+}
+
+
+class ShardingRules:
+    """An activated mapping from logical axis names to mesh axes."""
+
+    def __init__(self, mesh: Mesh, rules: Mapping[str, object]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+        # Drop mappings onto axes the mesh does not have (e.g. "pod" on the
+        # single-pod mesh).
+        axes = set(mesh.axis_names)
+
+        def _filter(v):
+            if v is None:
+                return None
+            if isinstance(v, str):
+                return v if v in axes else None
+            vv = tuple(a for a in v if a in axes)
+            return vv if vv else None
+
+        self.rules = {k: _filter(v) for k, v in self.rules.items()}
+
+    def partition_spec(self, names: Sequence[str | None]) -> P:
+        used: set[str] = set()
+        parts = []
+        for n in names:
+            if n is None:
+                parts.append(None)
+                continue
+            v = self.rules.get(n)
+            if v is None:
+                parts.append(None)
+                continue
+            axes = (v,) if isinstance(v, str) else tuple(v)
+            axes = tuple(a for a in axes if a not in used)
+            used.update(axes)
+            if not axes:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(axes)
+        return P(*parts)
+
+    def sharding(self, names: Sequence[str | None]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.partition_spec(names))
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Mapping[str, object] | None = None):
+    """Activate a logical→physical mapping for the enclosed region."""
+    prev = getattr(_state, "rules", None)
+    _state.rules = ShardingRules(mesh, rules if rules is not None else DEFAULT_RULES)
+    try:
+        yield _state.rules
+    finally:
+        _state.rules = prev
+
+
+def logical_constraint(x: jax.Array, *names: str | None) -> jax.Array:
+    """``with_sharding_constraint`` by logical names; no-op w/o active rules."""
+    r = current_rules()
+    if r is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(f"{len(names)} names for rank-{x.ndim} array")
+    return jax.lax.with_sharding_constraint(x, r.sharding(names))
+
+
+def spec_to_sharding(spec_tree, rules: ShardingRules):
+    """Map a tree of logical-name tuples to a tree of NamedShardings."""
+    return jax.tree.map(
+        lambda names: rules.sharding(names),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None,
+    )
+
+
+def spec_to_pspec(spec_tree, rules: ShardingRules):
+    return jax.tree.map(
+        lambda names: rules.partition_spec(names),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None,
+    )
+
+
+__all__ = [
+    "DEFAULT_RULES",
+    "ShardingRules",
+    "use_rules",
+    "current_rules",
+    "logical_constraint",
+    "spec_to_sharding",
+    "spec_to_pspec",
+]

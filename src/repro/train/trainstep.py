@@ -1,0 +1,106 @@
+"""Train-step builders: loss → grads → (optional RMA grad sync) → AdamW.
+
+Two gradient-synchronization modes:
+
+* ``"gspmd"`` (default): the step is jit-compiled with sharded params/batch;
+  XLA's partitioner inserts the reduce-scatter/all-gather/all-reduce
+  collectives implied by the shardings.  This is the baseline the roofline
+  analysis measures.
+* ``"rma_ring"``: data-parallel gradient sync through the paper's window
+  layer (one-sided ring all-reduce inside ``shard_map``), with P2 ordering —
+  see ``repro.core.rma.collectives``.  Used by benchmarks/examples and the
+  cross-pod put+signal exchange; optionally with error-feedback gradient
+  compression (``repro.train.compress``).
+
+Gradient accumulation scans over microbatches.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.train.optimizer import (
+    OptimizerConfig,
+    adamw_update,
+    init_opt_state,
+)
+
+Array = jax.Array
+
+
+def make_train_step(
+    model,
+    opt_cfg: OptimizerConfig,
+    *,
+    accum_steps: int = 1,
+    grad_sync: str = "gspmd",
+    data_axis: str | None = None,
+    data_axis_size: int = 1,
+    compressor=None,
+):
+    """Build ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    With ``accum_steps > 1`` the batch's leading dim must be divisible by it;
+    microbatches are scanned and gradients averaged.
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            return loss, metrics, grads
+        micro = jax.tree.map(
+            lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+            batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), _ = lax.scan(body, (zeros, jnp.zeros(())), micro)
+        grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+        return loss_sum / accum_steps, {"xent": loss_sum / accum_steps,
+                                        "aux": jnp.zeros(())}, grads
+
+    def sync_grads(grads):
+        if grad_sync == "gspmd" or data_axis is None or data_axis_size == 1:
+            return grads  # partitioner-inserted collectives
+        from repro.core.rma.collectives import rma_all_reduce
+
+        def ar(g):
+            flat = g.reshape(-1)
+            if compressor is not None:
+                return None  # handled at caller level with state
+            out = rma_all_reduce(flat.astype(jnp.float32), data_axis,
+                                 data_axis_size, order=True)
+            return (out / data_axis_size).reshape(g.shape)
+
+        return jax.tree.map(ar, grads)
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        grads = sync_grads(grads)
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        out = {"loss": loss, **{k: v for k, v in metrics.items()}, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step
+
+
+def init_train_state(model, key, opt_cfg: OptimizerConfig | None = None):
+    params = model.init(key)
+    return params, init_opt_state(params)
+
+
+__all__ = ["make_train_step", "init_train_state"]

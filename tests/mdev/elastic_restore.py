@@ -1,0 +1,43 @@
+"""Elastic restore: save params sharded over data=4, restore onto data=2.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=4.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.ckpt.checkpoint import CheckpointManager
+
+tmpdir = sys.argv[1]
+
+mesh4 = jax.make_mesh((4, 1), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+sh4 = NamedSharding(mesh4, P("data", None))
+state = {"w": jax.device_put(jnp.arange(64.0).reshape(8, 8), sh4),
+         "b": jax.device_put(jnp.ones((8,)), NamedSharding(mesh4, P()))}
+mgr = CheckpointManager(tmpdir)
+mgr.save(1, state, blocking=True)
+
+# restore onto a *different* mesh: data=2, model=2
+mesh2 = jax.make_mesh((2, 2), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+sh2 = {"w": NamedSharding(mesh2, P("data", "model")),
+       "b": NamedSharding(mesh2, P())}
+like = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}
+restored = mgr.restore(1, like, shardings=sh2)
+np.testing.assert_array_equal(np.asarray(restored["w"]),
+                              np.arange(64.0).reshape(8, 8))
+assert restored["w"].sharding.spec == P("data", "model"), restored["w"].sharding
+# and back up again: data=4 mesh with model replicated
+sh4b = {"w": NamedSharding(mesh4, P("data", None)),
+        "b": NamedSharding(mesh4, P())}
+restored2 = mgr.restore(1, like, shardings=sh4b)
+np.testing.assert_array_equal(np.asarray(restored2["w"]),
+                              np.arange(64.0).reshape(8, 8))
+print("ELASTIC OK")

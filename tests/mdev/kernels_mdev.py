@@ -1,0 +1,43 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys; sys.path.insert(0, __import__("os").path.join(__import__("os").path.dirname(__file__), "..", "..", "src"))
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+from repro.kernels import ring_put, put_signal, ring_all_reduce
+from repro.kernels import ref as R
+
+N = 8
+mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+def run(f, x, out_specs=P("x")):
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=out_specs, check_vma=False))(x)
+
+x = jnp.arange(N*32, dtype=jnp.float32)
+out = run(lambda s: ring_put(s, axis="x", axis_size=N), x)
+expect = R.ring_put_ref(np.arange(N*32, dtype=np.float32).reshape(N,32), axis_size=N)
+np.testing.assert_allclose(np.asarray(out).reshape(N,32), expect)
+print("ring_put OK")
+
+flag = jnp.arange(N, dtype=jnp.float32) + 100
+def ps(s):
+    f = jax.lax.axis_index("x").astype(jnp.float32)[None] + 100
+    d, fl = put_signal(s, f, axis="x", axis_size=N, ordered=True)
+    return jnp.concatenate([d, fl])
+out = np.asarray(run(ps, x)).reshape(N, 33)
+np.testing.assert_allclose(out[:, :32], expect)
+np.testing.assert_allclose(out[:, 32], np.roll(np.arange(N)+100, 1))
+print("put_signal ordered OK")
+def ps2(s):
+    f = jax.lax.axis_index("x").astype(jnp.float32)[None] + 100
+    d, fl = put_signal(s, f, axis="x", axis_size=N, ordered=False)
+    return jnp.concatenate([d, fl])
+out = np.asarray(run(ps2, x)).reshape(N, 33)
+np.testing.assert_allclose(out[:, :32], expect)
+print("put_signal unordered OK")
+
+xr = jax.random.normal(jax.random.PRNGKey(0), (N*13,))
+out = np.asarray(run(lambda s: ring_all_reduce(s, axis="x", axis_size=N), xr))
+expect = np.tile(np.asarray(xr).reshape(N,13).sum(0), (N,1)).reshape(-1)
+np.testing.assert_allclose(out, expect, rtol=1e-5)
+print("ring_all_reduce OK")
+print("RMA KERNELS OK")

@@ -1,0 +1,55 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+from repro.core.rma import Window, WindowConfig, rma_all_reduce, put_signal
+
+N = 8
+mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+
+def count_cp(f):
+    g = jax.jit(shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    txt = g.lower(jnp.zeros((N*4,), jnp.float32)).compile().as_text()
+    return txt.count("collective-permute(")  , txt.count("collective-permute-start(")
+
+# put_signal listing1 (no order) vs listing2 (order)
+def mk(order):
+    def f(x):
+        win = Window.allocate(x, "x", N, WindowConfig(order=order))
+        win = put_signal(win, jnp.full((2,), 3.0), [(0,1)], data_offset=0, flag_offset=3)
+        win = win.flush()
+        return win.buffer
+    return f
+l1 = count_cp(mk(False))[0]; l2 = count_cp(mk(True))[0]
+print("listing1 (flush between):", l1)
+print("listing2 (ordered):      ", l2)
+assert l2 < l1, "P2 ordering must remove the intermediate flush phases"
+
+# process vs thread flush with 4 streams
+def mkflush(scope):
+    def f(x):
+        win = Window.allocate(x, "x", N, WindowConfig(scope=scope, max_streams=4))
+        perm = [(i,(i+1)%N) for i in range(N)]
+        for s in range(4):
+            win = win.put(jnp.full((2,), 1.0+s), perm, offset=0, stream=s)
+        win = win.flush(stream=0)
+        return win.buffer
+    return f
+pf = count_cp(mkflush("process"))[0]; tf = count_cp(mkflush("thread"))[0]
+print("process-scope flush, 4 streams:", pf)
+print("thread-scope flush, 4 streams: ", tf)
+assert tf < pf, "P1 thread-scope flush must avoid the endpoint-list walk"
+
+# ring allreduce order vs not
+counts = {}
+for order in (True, False):
+    def f(x, order=order):
+        return rma_all_reduce(x, "x", N, order=order)
+    counts[order] = count_cp(f)[0]
+    print(f"rma_all_reduce order={order}:", counts[order])
+assert counts[True] == 2 * (N - 1), "ordered ring = 2(n-1) data phases"
+assert counts[False] > counts[True], "no-P2 baseline pays per-hop flush phases"
+print("ALL HLO COUNT CHECKS PASSED")

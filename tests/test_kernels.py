@@ -1,0 +1,134 @@
+"""Pallas kernel tests: interpret-mode execution vs ref.py oracles.
+
+Compute kernels sweep shapes/dtypes (hypothesis); the cross-device RMA
+kernels run in an 8-fake-device subprocess (tests/mdev/kernels_mdev.py).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import accumulate, flash_attention, ssd_scan
+from repro.kernels import ref as R
+
+HERE = os.path.dirname(__file__)
+key = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("b,h,s,hd,causal,bq,bkv", [
+    (2, 4, 256, 64, True, 64, 64),
+    (1, 2, 128, 32, False, 64, 32),
+    (1, 1, 512, 128, True, 128, 128),
+    (3, 2, 192, 64, True, 64, 64),   # grid not a power of two
+])
+def test_flash_attention_matches_ref(b, h, s, hd, causal, bq, bkv, dtype, atol):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), dtype)
+    k = jax.random.normal(ks[1], (b, h, s, hd), dtype)
+    v = jax.random.normal(ks[2], (b, h, s, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_kv=bkv)
+    ref = R.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol, rtol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3), h=st.integers(1, 3),
+    nq=st.integers(1, 4), hd=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(b, h, nq, hd, causal):
+    s = nq * 64
+    ks = jax.random.split(jax.random.PRNGKey(b * 100 + h * 10 + nq), 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64)
+    ref = R.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# accumulate (P3 bandwidth path)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    op=st.sampled_from(["sum", "min", "max", "replace", "prod"]),
+    dtype=st.sampled_from([jnp.float32, jnp.int32]),
+    block=st.sampled_from([64, 256, 1024]),
+)
+def test_accumulate_property(n, op, dtype, block):
+    k1, k2 = jax.random.split(jax.random.fold_in(key, n))
+    if dtype == jnp.int32:
+        buf = jax.random.randint(k1, (n,), -100, 100, dtype)
+        upd = jax.random.randint(k2, (n,), -100, 100, dtype)
+    else:
+        buf = jax.random.normal(k1, (n,), dtype)
+        upd = jax.random.normal(k2, (n,), dtype)
+    out = accumulate(buf, upd, op=op, block=block)
+    ref = R.accumulate_ref(buf, upd, op=op)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (Mamba2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,L,H,P,N,chunk", [
+    (2, 64, 4, 16, 32, 16),
+    (1, 128, 2, 32, 16, 32),
+    (1, 48, 8, 8, 64, 8),
+])
+def test_ssd_scan_matches_sequential_ref(B, L, H, P, N, chunk):
+    ks = jax.random.split(jax.random.fold_in(key, L), 4)
+    xdt = jax.random.normal(ks[0], (B, L, H, P)) * 0.5
+    a = -jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    Bm = jax.random.normal(ks[2], (B, L, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, L, N)) * 0.5
+    y, fs = ssd_scan(xdt, a, Bm, Cm, chunk=chunk, nheads=H, headdim=P)
+    yr, fsr = R.ssd_scan_ref(xdt, a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(fsr), atol=2e-4, rtol=1e-3)
+
+
+def test_ssd_scan_with_initial_state():
+    B, L, H, P, N, chunk = 1, 32, 2, 8, 16, 8
+    ks = jax.random.split(key, 5)
+    xdt = jax.random.normal(ks[0], (B, L, H, P)) * 0.5
+    a = -jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    Bm = jax.random.normal(ks[2], (B, L, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, L, N)) * 0.5
+    s0 = jax.random.normal(ks[4], (B, H, P, N)) * 0.3
+    y, fs = ssd_scan(xdt, a, Bm, Cm, chunk=chunk, nheads=H, headdim=P,
+                     initial_state=s0)
+    yr, fsr = R.ssd_scan_ref(xdt, a, Bm, Cm, initial_state=s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(fsr), atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# cross-device RMA kernels (subprocess: 8 fake devices + Mosaic interpreter)
+# ---------------------------------------------------------------------------
+
+def test_rma_kernels_multidevice():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "mdev", "kernels_mdev.py")],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert proc.returncode == 0, f"\n{proc.stdout}\n{proc.stderr}"
+    assert "RMA KERNELS OK" in proc.stdout

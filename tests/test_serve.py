@@ -1,0 +1,91 @@
+"""Serving tests: continuous-batching engine greedy-correctness + paged window."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.tiny import tiny_config
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+
+HERE = os.path.dirname(__file__)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = tiny_config("qwen3-4b")
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def test_engine_matches_reference_greedy(model_and_params):
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(0)
+    req = Request(rid=1, prompt=rng.randint(0, cfg.vocab, size=7),
+                  max_new_tokens=5)
+    eng = ServeEngine(m, params, n_slots=2, max_seq=64)
+    eng.submit(req)
+    out = eng.run()[0].tokens
+    toks = list(req.prompt)
+    ref = []
+    for _ in range(5):
+        logits, _ = m.forward(params, {"tokens": jnp.asarray(toks, jnp.int32)[None]})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        ref.append(nxt)
+        toks.append(nxt)
+    assert out == ref
+
+
+def test_engine_continuous_batching_all_complete(model_and_params):
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(1)
+    eng = ServeEngine(m, params, n_slots=3, max_seq=64)
+    for rid in range(7):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.randint(0, cfg.vocab, size=4 + rid % 5),
+                           max_new_tokens=3 + rid % 4))
+    done = eng.run()
+    assert sorted(c.rid for c in done) == list(range(7))
+    for c in done:
+        assert 3 <= len(c.tokens) <= 7
+
+
+def test_engine_batched_equals_sequential(model_and_params):
+    """Requests decoded concurrently in slots produce the same tokens as
+    decoded alone (slot isolation — per-row cache positions)."""
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(2)
+    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=5 + 3 * i),
+                    max_new_tokens=4) for i in range(3)]
+    eng = ServeEngine(m, params, n_slots=3, max_seq=64)
+    for r in reqs:
+        eng.submit(r)
+    together = {c.rid: c.tokens for c in eng.run()}
+    for r in reqs:
+        solo = ServeEngine(m, params, n_slots=1, max_seq=64)
+        solo.submit(Request(rid=r.rid, prompt=r.prompt, max_new_tokens=4))
+        assert solo.run()[0].tokens == together[r.rid], f"slot isolation rid={r.rid}"
+
+
+def test_engine_rejects_oversized_prompt(model_and_params):
+    cfg, m, params = model_and_params
+    eng = ServeEngine(m, params, n_slots=1, max_seq=16)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(Request(rid=0, prompt=np.zeros(16, np.int32),
+                           max_new_tokens=1))
+
+
+def test_paged_window_multidevice():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "mdev", "paged_window.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+        cwd=os.path.join(HERE, ".."))
+    assert proc.returncode == 0, f"{proc.stdout}\n{proc.stderr}"
+    assert "PAGED WINDOW OK" in proc.stdout
