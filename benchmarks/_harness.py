@@ -19,6 +19,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 N_DEV = 8
 
 
@@ -31,13 +33,12 @@ def require_devices():
 
 
 def mesh1d(axis: str = "x"):
-    return jax.make_mesh((N_DEV,), (axis,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((N_DEV,), (axis,))
 
 
 def smap(f, mesh, in_specs=P("x"), out_specs=P("x")):
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs, check_vma=False))
+    return jax.jit(compat.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs, check_vma=False))
 
 
 def scan_op(body, k_inner: int = 16):

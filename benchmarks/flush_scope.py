@@ -6,7 +6,24 @@ only stream 0's operation (one ack RTT).  With process scope it must drain
 every stream's endpoint, serialized — the UCX endpoint-list walk of paper
 Fig. 7 — so latency grows with S.  The paper measures 1–2 orders of
 magnitude at 32 threads; the ratio is the reproduction target.
+
+Both scopes exercise the *same* substrate epoch engine
+(``repro.core.rma.substrate.Substrate.flush``); the scope only selects which
+flush queues the epoch drains.
+
+Flags:
+  --streams 1,2,4     comma-separated stream counts (default: the Fig. 8 sweep)
+  --iters N           timing iterations per point (default 40)
+  --size N            f32 elements per stream payload (default 256 = 1 KiB)
+  --dup               additionally measure the P4 path: one window allocated
+                      with the default config, then *duplicated* per scope
+                      via ``dup_with_info`` — and assert that the dup'd
+                      window lowers to exactly the same communication phases
+                      as a natively-allocated one (duplication is free).
 """
+import argparse
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -15,27 +32,35 @@ from benchmarks._harness import (N_DEV, emit, mesh1d, require_devices,
                                  scan_op, smap, time_fn)
 from repro.core.rma import Window, WindowConfig
 
-STREAMS = [1, 2, 4, 8, 16, 32]
-SIZE = 256  # 1 KiB payload per stream
+DEFAULT_STREAMS = [1, 2, 4, 8, 16, 32]
+DEFAULT_SIZE = 256  # 1 KiB payload per stream
 
 
-def main():
-    require_devices()
+def run(streams, size, iters, dup: bool):
     mesh = mesh1d()
     perm = [(i, (i + 1) % N_DEV) for i in range(N_DEV)]
-    data = jnp.ones((SIZE,), jnp.float32)
+    data = jnp.ones((size,), jnp.float32)
     results = {}
-    for n_streams in STREAMS:
-        pool = jnp.zeros((SIZE * n_streams,), jnp.float32)
+    for n_streams in streams:
+        pool = jnp.zeros((size * n_streams,), jnp.float32)
         for scope in ("process", "thread", "noflush"):
             cfg = WindowConfig(scope="thread" if scope == "noflush" else scope,
                                max_streams=n_streams)
 
-            def body(carry, scope=scope, cfg=cfg, n_streams=n_streams):
+            def body(carry, scope=scope, cfg=cfg, n_streams=n_streams,
+                     via_dup=False):
                 buf, d = carry
-                win = Window.allocate(buf, "x", N_DEV, cfg)
+                if via_dup:
+                    # P4: allocate with the default config, configure the
+                    # scope on a zero-copy duplicate of the same substrate.
+                    base = Window.allocate(
+                        buf, "x", N_DEV,
+                        WindowConfig(max_streams=n_streams))
+                    win = base.dup_with_info(scope=cfg.scope)
+                else:
+                    win = Window.allocate(buf, "x", N_DEV, cfg)
                 for s in range(n_streams):
-                    win = win.put(d, perm, offset=s * SIZE, stream=s)
+                    win = win.put(d, perm, offset=s * size, stream=s)
                 if scope != "noflush":
                     # the measured completion: stream 0's flush
                     win = win.flush(stream=0)
@@ -43,15 +68,27 @@ def main():
 
             fn, k = scan_op(body, k_inner=32)
             g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
-            us = time_fn(g, ((pool, data),), k_inner=k, iters=40)
+            us = time_fn(g, ((pool, data),), k_inner=k, iters=iters)
             # deterministic structural cost: communication phases per op
             cp = g.lower((pool, data)).compile().as_text().count(
                 "collective-permute(")
             results[(scope, n_streams)] = (us, cp)
             if scope != "noflush":
                 emit(f"flush_scope/{scope}/{n_streams}streams", us,
-                     f"fig8+9 payload={SIZE*4}B phases={cp}")
-    for s in STREAMS:
+                     f"fig8+9 payload={size*4}B phases={cp}")
+            if dup and scope != "noflush":
+                fn_dup, _ = scan_op(functools.partial(body, via_dup=True),
+                                    k_inner=32)
+                g_dup = smap(fn_dup, mesh, in_specs=P(), out_specs=P("x"))
+                us_dup = time_fn(g_dup, ((pool, data),), k_inner=k, iters=iters)
+                cp_dup = g_dup.lower((pool, data)).compile().as_text().count(
+                    "collective-permute(")
+                assert cp_dup == cp, (
+                    f"dup'd window must lower to identical phases "
+                    f"(allocate={cp}, dup={cp_dup})")
+                emit(f"flush_scope/dup_{scope}/{n_streams}streams", us_dup,
+                     f"P4 dup path phases={cp_dup} (== allocate)")
+    for s in streams:
         # Wall-clock on a single emulation core is noisy (the S puts'
         # issue cost serializes into every variant), so the headline
         # reproduction metric is the *structural* one: communication phases
@@ -67,6 +104,21 @@ def main():
         emit(f"flush_scope/phase_ratio/{s}streams",
              (p_cp - base_cp) / max(t_cp - base_cp, 1),
              "process/thread flush phases (paper: ~S at S streams)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--streams", type=str, default=None,
+                    help="comma-separated stream counts, e.g. 1,2,4")
+    ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--size", type=int, default=DEFAULT_SIZE)
+    ap.add_argument("--dup", action="store_true",
+                    help="also measure dup_with_info-configured windows")
+    args = ap.parse_args()
+    require_devices()
+    streams = ([int(s) for s in args.streams.split(",")]
+               if args.streams else DEFAULT_STREAMS)
+    run(streams, args.size, args.iters, args.dup)
 
 
 if __name__ == "__main__":

@@ -11,7 +11,14 @@ Measures put+flush per-op latency for message sizes 8 B … 64 KiB on:
   expected ≈ allocated, the paper's Fig. 12 claim)
 * ``memhandle_create_put_free`` — includes per-op window creation/destruction
   from the handle (paper: ~1 µs extra, still far below dynamic)
+
+``--dup`` adds ``allocated_dup`` — the put issued through a
+``dup_with_info``-derived view of the allocated window (paper P4).  Dup is a
+zero-copy reconfiguration of the shared substrate, so the expected latency
+is ≈ ``allocated``.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -28,10 +35,18 @@ SIZES = [2, 16, 128, 1024, 4096, 16384]  # f32 elements: 8B ... 64KiB
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated f32 element counts")
+    ap.add_argument("--iters", type=int, default=30)
+    ap.add_argument("--dup", action="store_true",
+                    help="also measure the dup_with_info-configured put path")
+    args = ap.parse_args()
     require_devices()
     mesh = mesh1d()
     perm = [(i, (i + 1) % N_DEV) for i in range(N_DEV)]
-    for size in SIZES:
+    sizes = [int(s) for s in args.sizes.split(",")] if args.sizes else SIZES
+    for size in sizes:
         nbytes = size * 4
         data = jnp.ones((size,), jnp.float32)
         pool = jnp.zeros((2 * size,), jnp.float32)
@@ -42,6 +57,16 @@ def main():
             win = win.put(data, perm)
             win = win.flush()
             return win.buffer, data
+
+        def allocated_dup(carry):
+            # P4: the put travels through a zero-copy duplicate carrying a
+            # per-use config (ordered channel, thread-scope completion).
+            buf, data = carry
+            win = Window.allocate(buf, "x", N_DEV)
+            view = win.dup_with_info(order=True, scope="thread")
+            view = view.put(data, perm)
+            view = view.flush(stream=0)
+            return view.buffer, data
 
         def dynamic_query(carry):
             buf, data = carry
@@ -103,9 +128,11 @@ def main():
             "memhandle": (_memhandle_outer(True), 16),
             "memhandle_create_put_free": (_memhandle_outer(False), 16),
         }
+        if args.dup:
+            variants["allocated_dup"] = (scan_op(allocated_dup, 16)[0], 16)
         for name, (fn, k) in variants.items():
             g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
-            us = time_fn(g, ((pool, data),), k_inner=k)
+            us = time_fn(g, ((pool, data),), k_inner=k, iters=args.iters)
             emit(f"put_latency/{name}/{nbytes}B", us, f"fig4+12 size={nbytes}")
 
 

@@ -2,7 +2,9 @@
 
 Each micro-benchmark module needs 8 fake host devices, which must be
 configured before JAX initializes; they therefore run as subprocesses with
-``XLA_FLAGS`` set.  Output: ``name,us_per_call,derived`` CSV rows.
+``XLA_FLAGS`` set.  Output: ``name,us_per_call,derived`` CSV rows on stdout,
+plus one machine-readable ``benchmarks/results/BENCH_<section>.json`` per
+section (see ``benchmarks/README.md`` for how to read them).
 
 Sections:
   put_latency      — paper Fig. 4 + Fig. 12 (window kinds)
@@ -14,6 +16,7 @@ Sections:
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -26,13 +29,48 @@ MODULES = [
     "benchmarks.rma_collectives",
 ]
 
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _parse_rows(text: str) -> list[dict]:
+    rows = []
+    for line in text.splitlines():
+        if line.startswith("#") or "," not in line:
+            continue
+        name, us, *rest = line.split(",", 2)
+        try:
+            us_val = float(us)
+        except ValueError:
+            continue
+        rows.append({"name": name, "us_per_call": us_val,
+                     "derived": rest[0] if rest else ""})
+    return rows
+
 
 def run_module(mod: str) -> int:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env.setdefault("PYTHONPATH", "src")
     print(f"# === {mod} ===", flush=True)
-    proc = subprocess.run([sys.executable, "-m", mod], env=env)
+    # tee line-by-line: sections run for minutes emitting progressive CSV
+    # rows, so stream them live while accumulating for the JSON artifact
+    proc = subprocess.Popen([sys.executable, "-m", mod], env=env,
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+    lines = []
+    for line in proc.stdout:
+        sys.stdout.write(line)
+        sys.stdout.flush()
+        lines.append(line)
+    proc.wait()
+    rows = _parse_rows("".join(lines))
+    if rows:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        section = mod.rsplit(".", 1)[-1]
+        path = os.path.join(RESULTS_DIR, f"BENCH_{section}.json")
+        with open(path, "w") as f:
+            json.dump({"section": section, "rows": rows}, f, indent=1)
+        print(f"# wrote {path} ({len(rows)} rows)", flush=True)
     return proc.returncode
 
 

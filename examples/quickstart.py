@@ -3,6 +3,20 @@
 Runs on plain CPU (spawns itself with 8 fake devices for the RMA part).
 
   PYTHONPATH=src python examples/quickstart.py
+
+The five-minute tour, in the order the demo runs it:
+
+  win  = Window.allocate(buf, "x", N, WindowConfig(order=True, scope="thread"))
+  bulk = win.dup_with_info(order=False)    # P4: zero-copy duplicate — same
+                                           # memory & flush queues, its own
+                                           # config (here: unordered bulk)
+  win  = put_signal(win, data, perm, ...)  # P2: put + flag, no mid-flush
+  win  = win.flush(stream=0)               # P1: thread-scoped flush epoch
+  out  = rma_all_reduce(x, "x", N)         # one-sided ring on the substrate
+
+Window duplication is the cheapest tool in the box: configure *views* of one
+window per use case instead of allocating one window per configuration.  See
+docs/rma_architecture.md for the full P1–P5 map.
 """
 import os
 import subprocess
@@ -20,24 +34,31 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.rma import Window, WindowConfig, put_signal, rma_all_reduce
+from repro import compat
 
 N = 8
-mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((N,), ("x",))
 
 
 def demo_rma():
-    """The paper's Listing 2: ordered put + signal, no intermediate flush."""
+    """The paper's Listing 2: ordered put + signal, no intermediate flush —
+    issued through a dup_with_info view of an unordered base window (P4)."""
     perm = [(i, (i + 1) % N) for i in range(N)]
 
     def step(buf):
-        win = Window.allocate(buf, "x", N, WindowConfig(order=True, scope="thread"))
+        base = Window.allocate(buf, "x", N, WindowConfig(scope="thread"))
+        # zero-copy duplicate carrying the per-use config: ordered channel
+        # for the latency-critical put+signal; `base` stays available for
+        # differently-configured traffic over the same memory.
+        win = base.dup_with_info(order=True)
+        assert win.buffer is base.buffer and win.group is base.group
         rank = jax.lax.axis_index("x").astype(jnp.float32)
         win = put_signal(win, jnp.full((4,), rank), perm,
                          data_offset=0, flag_offset=4)
         win = win.flush(stream=0)
         return win.buffer
 
-    g = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=P(), out_specs=P("x"),
+    g = jax.jit(compat.shard_map(step, mesh=mesh, in_specs=P(), out_specs=P("x"),
                               check_vma=False))
     out = np.asarray(g(jnp.zeros((5,), jnp.float32))).reshape(N, 5)
     print("window contents after ring put+signal (col 4 = completion flags):")
@@ -47,7 +68,7 @@ def demo_rma():
     def allreduce(x):
         return rma_all_reduce(x, "x", N, order=True)
 
-    g2 = jax.jit(jax.shard_map(allreduce, mesh=mesh, in_specs=P("x"),
+    g2 = jax.jit(compat.shard_map(allreduce, mesh=mesh, in_specs=P("x"),
                                out_specs=P("x"), check_vma=False))
     x = jnp.arange(float(N * 4))
     out = np.asarray(g2(x)).reshape(N, 4)

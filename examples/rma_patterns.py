@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.rma import (
     Window,
     WindowConfig,
@@ -27,12 +28,12 @@ from repro.core.rma import (
 )
 
 N = 8
-mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((N,), ("x",))
 perm = [(i, (i + 1) % N) for i in range(N)]
 
 
 def phases(fn):
-    g = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P(), out_specs=P("x"),
+    g = jax.jit(compat.shard_map(fn, mesh=mesh, in_specs=P(), out_specs=P("x"),
                               check_vma=False))
     return g.lower(jnp.zeros((16,), jnp.float32)).compile().as_text().count(
         "collective-permute(")

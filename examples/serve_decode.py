@@ -48,9 +48,10 @@ sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.serve.paged import PagedKVWindow, PageSpec
+from repro import compat
 
 N = 8
-mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((N,), ("x",))
 spec = PageSpec(page_tokens=16, kv_heads=2, head_dim=32, n_pages=4)
 perm = [(i, (i + 1) % N) for i in range(N)]
 
@@ -69,7 +70,7 @@ def scenario(_):
     stale = pool.window
     return jnp.stack([received, stale.buffer[0]])
 
-g = jax.jit(jax.shard_map(scenario, mesh=mesh, in_specs=P(),
+g = jax.jit(compat.shard_map(scenario, mesh=mesh, in_specs=P(),
                           out_specs=P("x"), check_vma=False))
 out = np.asarray(g(jnp.zeros((1,)))).reshape(N, 2)
 assert (out[:, 0] == 14.0).all(), out   # peer's page arrived via handle

@@ -2,6 +2,9 @@
 
 Public surface:
 
+* :class:`Substrate`, :class:`FlushQueues` — the unified substrate every
+  window kind is a view over: backing buffer, channel tokens, and the
+  scope-aware flush-epoch engine (see ``docs/rma_architecture.md``).
 * :class:`Window`, :class:`WindowConfig` — allocated windows + info keys
   (P1 scope, P2 order, P3 accumulate assertions, P4 dup_with_info).
 * :class:`DynamicWindow` — dynamic windows with the query / active-message
@@ -12,9 +15,13 @@ Public surface:
 * one-sided collectives: :func:`rma_all_reduce`, :func:`ring_reduce_scatter`,
   :func:`ring_all_gather`, :func:`put_signal`, :func:`put_signal_pipelined`.
 """
-from repro.core.rma.window import (
+from repro.core.rma.substrate import (
     SCOPE_PROCESS,
     SCOPE_THREAD,
+    FlushQueues,
+    Substrate,
+)
+from repro.core.rma.window import (
     Window,
     WindowConfig,
 )
@@ -42,6 +49,8 @@ from repro.core.rma.collectives import (
 )
 
 __all__ = [
+    "Substrate",
+    "FlushQueues",
     "Window",
     "WindowConfig",
     "SCOPE_PROCESS",

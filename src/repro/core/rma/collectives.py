@@ -1,4 +1,4 @@
-"""One-sided collectives built on the window layer.
+"""One-sided collectives built on the shared RMA substrate.
 
 The paper motivates RMA as a way to decouple data movement from
 synchronization.  This module applies the paper's extensions at collective
@@ -6,12 +6,18 @@ scale — the integration point that makes the RMA layer a first-class feature
 of the training/serving runtime:
 
 * ``ring_reduce_scatter`` / ``ring_all_gather`` / ``rma_all_reduce``:
-  bandwidth-optimal rings expressed as chains of one-sided puts.  With
-  ``order=True`` (paper P2) consecutive hops are *chained on the DMA channel*
-  — no per-hop completion ack.  With ``order=False`` the MPI-faithful
-  baseline must flush between dependent hops, paying one ack round-trip per
-  hop: 2x the communication phases.  The difference is visible both in
-  lowered HLO (collective-permute count) and in wall-clock.
+  bandwidth-optimal rings expressed as chains of one-sided channel sends
+  **routed through a window substrate**.  Each ring direction is a
+  *duplicated view* of one window (paper P4) with its own issue stream and a
+  per-use config: with ``order=True`` (paper P2) consecutive hops are
+  chained on the stream's DMA channel — no per-hop completion ack; with
+  ``order=False`` the MPI-faithful baseline flushes through the substrate's
+  scope-aware epoch engine before every dependent hop, paying one ack
+  round-trip per hop.  Because the flushes are SCOPE_THREAD (P1), the two
+  directions of a bidirectional ring never serialize each other's
+  completion — the P1 × P4 composition the unified substrate exists for.
+  The difference is visible both in lowered HLO (collective-permute count)
+  and in wall-clock.
 
 * ``put_signal``: the paper's Listing 1 vs Listing 2 producer/consumer
   pattern — put data, then raise a flag at the target with an intrinsic
@@ -20,22 +26,139 @@ of the training/serving runtime:
 
 * ``put_signal_pipelined``: chunked put+signal for cross-pod gradient
   exchange (put each chunk, signal once), used by the pod-level DP sync.
+  Accepts a per-use ``order=`` override, applied by *duplicating* the
+  caller's window with the overridden info key instead of requiring the
+  caller to allocate a separate window per configuration.
 
 These functions run inside ``shard_map`` over a named mesh axis.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.rma.window import Window, WindowConfig, _rtt, _tie
+from repro.core.rma.substrate import SCOPE_THREAD, Substrate, _tie
+from repro.core.rma.window import Window, WindowConfig
 
 Array = jax.Array
 
 
 def _ring_perm(n: int, shift: int = 1):
     return tuple((i, (i + shift) % n) for i in range(n))
+
+
+def _ring_substrate(x: Array, axis: str, n: int, *, order: bool,
+                    win: Window | None, streams=(0,),
+                    ) -> tuple[Substrate, WindowConfig]:
+    """The substrate a ring runs on, plus the config in effect.
+
+    With a caller-supplied window the ring runs on a **duplicate** carrying
+    its per-use config (P4); the returned config is the dup's — what
+    ``dup_with_info`` actually accepted — and drives the ring's ordering
+    decisions.  A bidirectional ring needs one issue stream per direction,
+    and ``max_streams`` is dup-immutable, so a lent window must have been
+    allocated with enough streams.  Entering the collective also flushes
+    any of the caller's in-flight operations on the streams the ring is
+    about to use (their completion must not be silently absorbed into the
+    ring's bookkeeping).  Without ``win``, a one-off window over ``x`` is
+    allocated and the flushes are no-ops on its empty queues.
+    """
+    if win is not None:
+        if max(streams) >= win.config.max_streams:
+            raise ValueError(
+                f"ring needs streams {tuple(streams)} but the lent window "
+                f"has max_streams={win.config.max_streams} (dup-immutable); "
+                "allocate it with enough issue streams")
+        view = win.dup_with_info(order=order, scope=SCOPE_THREAD)
+    else:
+        view = Window.allocate(
+            x, axis, n,
+            WindowConfig(scope=SCOPE_THREAD, order=order,
+                         max_streams=len(streams)))
+    sub = view.substrate
+    for s in streams:
+        sub = sub.flush(scope=view.config.scope, stream=s)
+    return sub, view.config
+
+
+def _finish_lent(subs, out: Array, win: Window | None, streams) -> Array:
+    """Complete a collective that ran on a **lent** window.
+
+    When the caller supplied ``win``, the ring's operations sit in the
+    family's shared flush queues; returning with them still queued would
+    make the caller's next flush pay ack phases with no dependence on the
+    ring traffic.  Instead the collective behaves like an MPI blocking
+    collective: each direction's stream is flushed (thread-scoped epoch on
+    the ring's own token chain) and the result is tied to the acks, so the
+    lent window comes back with nothing in flight.  One-off internal
+    windows need none of this — their queues die with them."""
+    if win is None:
+        return out
+    for sub, s in zip(subs, streams):
+        sub = sub.flush(scope=SCOPE_THREAD, stream=s)
+        out = _tie(out, sub.token(s))
+    return out
+
+
+def _hop_flush(sub: Substrate, *, order: bool, stream: int,
+               dependent: bool) -> Substrate:
+    """The no-P2 baseline pays a completion ack (thread-scoped flush epoch)
+    before every hop that consumes remotely-written data."""
+    if order or not dependent:
+        return sub
+    return sub.flush(scope=SCOPE_THREAD, stream=stream)
+
+
+def _ring_reduce_scatter_dir(sub: Substrate, x: Array, axis: str, n: int, *,
+                             order: bool, shift: int, stream: int = 0,
+                             ) -> tuple[Substrate, Array]:
+    perm = _ring_perm(n, shift)
+    rank = lax.axis_index(axis)
+    chunk = x.shape[0] // n
+    acc = x
+    s = 1 if shift == 1 else -1
+    for k in range(n - 1):
+        # hop k sends a partial that incorporates hop k-1's received data:
+        # dependent for every k > 0.
+        sub = _hop_flush(sub, order=order, stream=stream, dependent=k > 0)
+        send_idx = ((rank - s * k) % n) * chunk
+        piece = lax.dynamic_slice_in_dim(acc, send_idx, chunk, axis=0)
+        sub, recvd = sub.channel_send(piece, perm, stream=stream)
+        recv_idx = ((rank - s * (k + 1)) % n) * chunk
+        cur = lax.dynamic_slice_in_dim(acc, recv_idx, chunk, axis=0)
+        acc = lax.dynamic_update_slice_in_dim(acc, cur + recvd, recv_idx, axis=0)
+    mine = lax.dynamic_slice_in_dim(acc, ((rank + s) % n) * chunk, chunk, axis=0)
+    return sub, mine
+
+
+def _ring_all_gather_dir(sub: Substrate, x: Array, axis: str, n: int, *,
+                         order: bool, shift: int, owner_shift: int = 0,
+                         stream: int = 0, entry_dep: bool = False,
+                         ) -> tuple[Substrate, Array]:
+    if n == 1:
+        return sub, x
+    perm = _ring_perm(n, shift)
+    rank = lax.axis_index(axis)
+    chunk = x.shape[0]
+    out = jnp.zeros((chunk * n,) + x.shape[1:], x.dtype)
+    own = (rank + owner_shift) % n
+    out = lax.dynamic_update_slice_in_dim(out, x, own * chunk, axis=0)
+    piece = x
+    s = 1 if shift == 1 else -1
+    for k in range(n - 1):
+        # every hop forwards the piece received in the previous one;
+        # entry_dep marks hop 0 depending on an earlier phase (RS → AG).
+        sub = _hop_flush(sub, order=order, stream=stream,
+                         dependent=k > 0 or entry_dep)
+        sub, piece = sub.channel_send(piece, perm, stream=stream)
+        # piece received at step k originated at rank (r - s*(k+1)), which
+        # owns chunk (origin + owner_shift) % n.
+        src = (rank - s * (k + 1) + owner_shift) % n
+        out = lax.dynamic_update_slice_in_dim(out, piece, src * chunk, axis=0)
+    return sub, out
 
 
 def ring_reduce_scatter(
@@ -45,15 +168,19 @@ def ring_reduce_scatter(
     *,
     order: bool = True,
     bidirectional: bool = False,
+    win: Window | None = None,
 ) -> Array:
     """Ring reduce-scatter of ``x`` (leading dim divisible by axis_size).
 
     Returns this device's reduced chunk (x.shape[0] // axis_size leading dim).
     ``order=False`` is the paper-faithful no-P2 baseline: a completion ack
     (flush) is required before each dependent hop.
-    ``bidirectional=True`` splits every chunk across both ring directions,
-    halving per-link bytes (beyond-paper optimization; TPU ICI links are
-    full-duplex in both ring directions).
+    ``bidirectional=True`` splits every chunk across both ring directions on
+    two issue streams of the same substrate, halving per-link bytes
+    (beyond-paper optimization; TPU ICI links are full-duplex in both ring
+    directions).
+    ``win``: run on this window's substrate (duplicated with the ring's
+    config) instead of allocating a throwaway one.
     """
     n = axis_size
     if n == 1:
@@ -62,36 +189,18 @@ def ring_reduce_scatter(
         raise ValueError(f"leading dim {x.shape[0]} not divisible by axis size {n}")
     if bidirectional:
         h = x.shape[0] // 2
-        lo = ring_reduce_scatter(x[:h], axis, n, order=order, bidirectional=False)
-        hi = _ring_reduce_scatter_dir(x[h:], axis, n, order=order, shift=-1)
-        return jnp.concatenate([lo, hi], axis=0)
-    return _ring_reduce_scatter_dir(x, axis, n, order=order, shift=1)
-
-
-def _ring_reduce_scatter_dir(x, axis, n, *, order, shift):
-    perm = _ring_perm(n, shift)
-    rank = lax.axis_index(axis)
-    chunk = x.shape[0] // n
-    acc = x
-    tok = jnp.float32(0.0)
-    s = 1 if shift == 1 else -1
-    for k in range(n - 1):
-        send_idx = ((rank - s * k) % n) * chunk
-        piece = lax.dynamic_slice_in_dim(acc, send_idx, chunk, axis=0)
-        if order:
-            # P2: chained on the ordered channel — no ack between hops.
-            piece = _tie(piece, tok)
-        else:
-            # no-P2 baseline: flush (ack RTT) before the dependent hop.
-            tok = _rtt(tok, axis, perm)
-            piece = _tie(piece, tok)
-        recvd = lax.ppermute(piece, axis, perm)
-        recv_idx = ((rank - s * (k + 1)) % n) * chunk
-        cur = lax.dynamic_slice_in_dim(acc, recv_idx, chunk, axis=0)
-        acc = lax.dynamic_update_slice_in_dim(acc, cur + recvd, recv_idx, axis=0)
-        tok = _tie(tok, recvd)
-    mine = lax.dynamic_slice_in_dim(acc, ((rank + s) % n) * chunk, chunk, axis=0)
-    return mine
+        base, cfg = _ring_substrate(x, axis, n, order=order, win=win,
+                                    streams=(0, 1))
+        s_lo, lo = _ring_reduce_scatter_dir(base, x[:h], axis, n,
+                                            order=cfg.order, shift=1, stream=0)
+        s_hi, hi = _ring_reduce_scatter_dir(base, x[h:], axis, n,
+                                            order=cfg.order, shift=-1, stream=1)
+        out = jnp.concatenate([lo, hi], axis=0)
+        return _finish_lent((s_lo, s_hi), out, win, (0, 1))
+    sub, cfg = _ring_substrate(x, axis, n, order=order, win=win)
+    sub, mine = _ring_reduce_scatter_dir(sub, x, axis, n, order=cfg.order,
+                                         shift=1)
+    return _finish_lent((sub,), mine, win, (0,))
 
 
 def ring_all_gather(
@@ -101,6 +210,7 @@ def ring_all_gather(
     *,
     order: bool = True,
     owner_shift: int = 0,
+    win: Window | None = None,
 ) -> Array:
     """Ring all-gather: each device contributes ``x``; returns the
     concatenation in chunk order (leading dim x.shape[0] * axis_size).
@@ -108,36 +218,10 @@ def ring_all_gather(
     ``owner_shift``: rank r's contribution is chunk ``(r + owner_shift) % n``
     of the output — after a ring reduce-scatter with shift s, rank r owns
     chunk (r+s) % n, so RS+AG composes with ``owner_shift=s``."""
-    return _ring_all_gather_dir(
-        x, axis, axis_size, order=order, shift=1, owner_shift=owner_shift
-    )
-
-
-def _ring_all_gather_dir(x, axis, n, *, order, shift, owner_shift=0):
-    if n == 1:
-        return x
-    perm = _ring_perm(n, shift)
-    rank = lax.axis_index(axis)
-    chunk = x.shape[0]
-    out = jnp.zeros((chunk * n,) + x.shape[1:], x.dtype)
-    own = (rank + owner_shift) % n
-    out = lax.dynamic_update_slice_in_dim(out, x, own * chunk, axis=0)
-    piece = x
-    tok = jnp.float32(0.0)
-    s = 1 if shift == 1 else -1
-    for k in range(n - 1):
-        if order:
-            piece = _tie(piece, tok)
-        else:
-            tok = _rtt(tok, axis, perm)
-            piece = _tie(piece, tok)
-        piece = lax.ppermute(piece, axis, perm)
-        # piece received at step k originated at rank (r - s*(k+1)), which
-        # owns chunk (origin + owner_shift) % n.
-        src = (rank - s * (k + 1) + owner_shift) % n
-        out = lax.dynamic_update_slice_in_dim(out, piece, src * chunk, axis=0)
-        tok = _tie(tok, piece)
-    return out
+    sub, cfg = _ring_substrate(x, axis, axis_size, order=order, win=win)
+    sub, out = _ring_all_gather_dir(sub, x, axis, axis_size, order=cfg.order,
+                                    shift=1, owner_shift=owner_shift)
+    return _finish_lent((sub,), out, win, (0,))
 
 
 def rma_all_reduce(
@@ -147,13 +231,18 @@ def rma_all_reduce(
     *,
     order: bool = True,
     bidirectional: bool = False,
+    win: Window | None = None,
 ) -> Array:
-    """One-sided ring all-reduce = reduce-scatter + all-gather.
+    """One-sided ring all-reduce = reduce-scatter + all-gather, on one
+    substrate.
 
-    2(n-1) data phases with P2 ordering; ~4(n-1) phases with per-hop flushes
-    (the no-P2 baseline).  Bandwidth-optimal: each device sends
-    2·(n-1)/n · |x| bytes; ``bidirectional`` halves per-link bytes by using
-    both ring directions (beyond-paper optimization).
+    2(n-1) data phases with P2 ordering; the no-P2 baseline additionally
+    pays a thread-scoped flush epoch (one ack RTT) before every dependent
+    hop.  Bandwidth-optimal: each device sends 2·(n-1)/n · |x| bytes;
+    ``bidirectional`` halves per-link bytes by running both ring directions
+    on separate issue streams of the same substrate (beyond-paper
+    optimization).  ``win``: reuse this window's substrate (via a dup'd view
+    carrying the ring's per-use config) instead of allocating.
     """
     n = axis_size
     if n == 1:
@@ -164,14 +253,27 @@ def rma_all_reduce(
         x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
     if bidirectional:
         h = x.shape[0] // 2
-        lo = _ring_reduce_scatter_dir(x[:h], axis, n, order=order, shift=1)
-        hi = _ring_reduce_scatter_dir(x[h:], axis, n, order=order, shift=-1)
-        lo_full = _ring_all_gather_dir(lo, axis, n, order=order, shift=1, owner_shift=1)
-        hi_full = _ring_all_gather_dir(hi, axis, n, order=order, shift=-1, owner_shift=-1)
+        base, cfg = _ring_substrate(x, axis, n, order=order, win=win,
+                                    streams=(0, 1))
+        s_lo, lo = _ring_reduce_scatter_dir(base, x[:h], axis, n,
+                                            order=cfg.order, shift=1, stream=0)
+        s_hi, hi = _ring_reduce_scatter_dir(base, x[h:], axis, n,
+                                            order=cfg.order, shift=-1, stream=1)
+        s_lo, lo_full = _ring_all_gather_dir(s_lo, lo, axis, n, order=cfg.order,
+                                             shift=1, owner_shift=1, stream=0,
+                                             entry_dep=True)
+        s_hi, hi_full = _ring_all_gather_dir(s_hi, hi, axis, n, order=cfg.order,
+                                             shift=-1, owner_shift=-1, stream=1,
+                                             entry_dep=True)
         out = jnp.concatenate([lo_full, hi_full], axis=0)
+        out = _finish_lent((s_lo, s_hi), out, win, (0, 1))
     else:
-        mine = _ring_reduce_scatter_dir(x, axis, n, order=order, shift=1)
-        out = _ring_all_gather_dir(mine, axis, n, order=order, shift=1, owner_shift=1)
+        sub, cfg = _ring_substrate(x, axis, n, order=order, win=win)
+        sub, mine = _ring_reduce_scatter_dir(sub, x, axis, n, order=cfg.order,
+                                             shift=1)
+        sub, out = _ring_all_gather_dir(sub, mine, axis, n, order=cfg.order,
+                                        shift=1, owner_shift=1, entry_dep=True)
+        out = _finish_lent((sub,), out, win, (0,))
     return out[:orig] if pad else out
 
 
@@ -220,31 +322,41 @@ def put_signal_pipelined(
     chunks: int,
     flag_offset: int,
     stream: int = 0,
+    order: bool | None = None,
 ) -> Window:
     """Chunked put + single signal: the cross-pod gradient-exchange pattern.
 
     All chunks are issued back-to-back (pipelined on the link); under P2 the
     signal chains behind the last chunk.  Without P2, a flush is needed
     before the signal (one ack RTT total — still amortized, but the flush
-    waits on *all* streams under process scope)."""
+    waits on *all* streams under process scope).
+
+    ``order``: per-use override of the ordering info key.  Applied by
+    **duplicating** the caller's window with the overridden config (paper
+    P4) — same memory, same flush queues, different anticipated usage — and
+    re-wrapping the result in the caller's original config, so one window
+    serves both the pipelined exchange and whatever the caller does next.
+    """
     n = data.shape[0]
     if n % chunks:
         raise ValueError(f"data length {n} not divisible by chunks={chunks}")
+    view = win if order is None else win.dup_with_info(order=order)
     step = n // chunks
     for c in range(chunks):
-        win = win.put(
+        view = view.put(
             lax.dynamic_slice_in_dim(data, c * step, step, axis=0),
             perm,
             offset=c * step,
             stream=stream,
         )
-    if not win.config.order:
-        win = win.flush(stream if win.config.scope == "thread" else None)
-    win = win._accumulate_intrinsic(
-        jnp.ones((1,), win.buffer.dtype), perm, op="sum",
+    if not view.config.order:
+        view = view.flush(stream if view.config.scope == "thread" else None)
+    view = view._accumulate_intrinsic(
+        jnp.ones((1,), view.buffer.dtype), perm, op="sum",
         offset=flag_offset, stream=stream,
     )
-    return win
+    # hand back the caller's configuration over the updated substrate
+    return view if order is None else dataclasses.replace(view, config=win.config)
 
 
 __all__ = [

@@ -15,6 +15,13 @@ so every operation must either
 Memory handles (``memhandle.py``) remove both penalties by shipping the
 registration info to peers once, with explicit life-time guarantees.
 
+``DynamicWindow`` is a view like ``Window``: the pool buffer, channel tokens
+and flush queues live in the shared :class:`~repro.core.rma.substrate.
+Substrate`; this class adds only the dynamic-registration array state
+(registration table, AM queue, epoch) on top.  Flush/fence therefore go
+through the exact same scope-aware epoch engine as allocated windows — the
+consolidation that lets P1/P2 configs apply unchanged to dynamic memory.
+
 The device's attachable memory is modelled as one *pool* array (the process
 address space); a registration is (epoch, offset, size) in a fixed-slot
 table.  Epochs give the life-time semantics: detach/re-attach of the same
@@ -30,16 +37,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.rma.window import (
-    Window,
-    WindowConfig,
-    _Group,
+from repro.core.rma.substrate import (
+    Substrate,
     _inv,
     _is_target,
     _rtt,
     _tie,
     _write,
 )
+from repro.core.rma.window import Window, WindowConfig
 
 Array = jax.Array
 
@@ -49,13 +55,14 @@ Array = jax.Array
 class DynamicWindow(Window):
     """``MPI_Win_create_dynamic`` analogue with query and AM fallback paths.
 
-    Array state (all per-device):
-      buffer:   the memory pool into which segments are attached.
+    Array state beyond the substrate (all per-device):
       regs:     (max_attach, 3) int32 — [epoch (0=invalid), offset, size].
       am_data:  (am_slots, am_msg) pool-dtype — queued AM payloads.
       am_meta:  (am_slots, 3) int32 — [valid, offset, size] per queued AM.
       am_count: () int32 — number of queued AMs.
       epoch:    () int32 — monotonically increasing registration epoch.
+
+    The pool itself is ``substrate.buffer``.
     """
 
     regs: Array = None
@@ -67,24 +74,19 @@ class DynamicWindow(Window):
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
         children = (
-            self.buffer,
-            self.tokens,
+            self.substrate,
             self.regs,
             self.am_data,
             self.am_meta,
             self.am_count,
             self.epoch,
         )
-        return children, (self.axis, self.axis_size, self.config, self.group)
+        return children, (self.config,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        buffer, tokens, regs, am_data, am_meta, am_count, epoch = children
-        axis, axis_size, config, group = aux
-        return cls(
-            buffer, tokens, axis, axis_size, config, group,
-            regs, am_data, am_meta, am_count, epoch,
-        )
+        substrate, regs, am_data, am_meta, am_count, epoch = children
+        return cls(substrate, aux[0], regs, am_data, am_meta, am_count, epoch)
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -101,13 +103,10 @@ class DynamicWindow(Window):
     ) -> "DynamicWindow":
         config = config or WindowConfig()
         am_msg = am_msg if am_msg is not None else pool.shape[0]
+        sub = Substrate.allocate(pool, axis, axis_size, config.max_streams)
         return cls(
-            buffer=pool,
-            tokens=jnp.zeros((config.max_streams,), jnp.float32),
-            axis=axis,
-            axis_size=axis_size,
+            substrate=sub,
             config=config,
-            group=_Group(),
             regs=jnp.zeros((max_attach, 3), jnp.int32),
             am_data=jnp.zeros((am_slots, am_msg), pool.dtype),
             am_meta=jnp.zeros((am_slots, 3), jnp.int32),
@@ -116,21 +115,12 @@ class DynamicWindow(Window):
         )
 
     def _with_dyn(self, **kw) -> "DynamicWindow":
-        fields = dict(
-            buffer=self.buffer, tokens=self.tokens, axis=self.axis,
-            axis_size=self.axis_size, config=self.config, group=self.group,
-            regs=self.regs, am_data=self.am_data, am_meta=self.am_meta,
-            am_count=self.am_count, epoch=self.epoch,
-        )
+        sub = self.substrate.replace(
+            buffer=kw.pop("buffer", None), tokens=kw.pop("tokens", None))
+        fields = dict(regs=self.regs, am_data=self.am_data, am_meta=self.am_meta,
+                      am_count=self.am_count, epoch=self.epoch)
         fields.update(kw)
-        return DynamicWindow(**fields)
-
-    # Rebind Window._with so inherited ops (put/flush/...) preserve dyn state.
-    def _with(self, *, buffer=None, tokens=None) -> "DynamicWindow":  # type: ignore[override]
-        return self._with_dyn(
-            buffer=self.buffer if buffer is None else buffer,
-            tokens=self.tokens if tokens is None else tokens,
-        )
+        return DynamicWindow(sub, self.config, **fields)
 
     # -- attach / detach (local operations) ----------------------------------
     def attach(self, slot: int, offset: int, size: int) -> "DynamicWindow":
@@ -166,20 +156,21 @@ class DynamicWindow(Window):
         an allocated window — the paper's measured 1.5–3x latency penalty."""
         self._check_stream(stream)
         data = self._ordered_payload(data, stream)
+        axis = self.axis
         # Phase 1: registration-info request to the target.
-        req = lax.ppermute(jnp.float32(1.0), self.axis, perm)
+        req = lax.ppermute(jnp.float32(1.0), axis, perm)
         # Target-side lookup, tied to request arrival.
         entry = _tie(self.regs[slot], req)
         # Phase 2: response back to the origin.
-        entry_at_origin = lax.ppermute(entry, self.axis, _inv(perm))
+        entry_at_origin = lax.ppermute(entry, axis, _inv(perm))
         # Phase 3: the actual RDMA put, now carrying the resolved address.
         off = entry_at_origin[1] + jnp.int32(seg_offset)
         epoch = entry_at_origin[0]
-        sent = lax.ppermute(data, self.axis, perm)
-        sent_off = lax.ppermute(off, self.axis, perm)
-        sent_epoch = lax.ppermute(epoch, self.axis, perm)
+        sent = lax.ppermute(data, axis, perm)
+        sent_off = lax.ppermute(off, axis, perm)
+        sent_epoch = lax.ppermute(epoch, axis, perm)
         valid = (sent_epoch == self.regs[slot, 0]) & (self.regs[slot, 0] > 0)
-        buf = _write(self.buffer, sent, sent_off, _is_target(self.axis, perm) & valid)
+        buf = _write(self.buffer, sent, sent_off, _is_target(axis, perm) & valid)
         self.group.note_op(stream, perm)
         return self._with_dyn(buffer=buf, tokens=self._bump(stream, sent))
 
@@ -194,13 +185,14 @@ class DynamicWindow(Window):
     ) -> tuple["DynamicWindow", Array]:
         """Get from a dynamic segment via registration query: 2 RTT total."""
         self._check_stream(stream)
-        req = lax.ppermute(jnp.float32(1.0), self.axis, perm)
+        axis = self.axis
+        req = lax.ppermute(jnp.float32(1.0), axis, perm)
         entry = _tie(self.regs[slot], req)
-        entry_at_origin = lax.ppermute(entry, self.axis, _inv(perm))
-        req2 = lax.ppermute(entry_at_origin[1], self.axis, perm)  # resolved addr
+        entry_at_origin = lax.ppermute(entry, axis, _inv(perm))
+        req2 = lax.ppermute(entry_at_origin[1], axis, perm)  # resolved addr
         start = req2 + jnp.int32(seg_offset)
         chunk = lax.dynamic_slice_in_dim(self.buffer, start, size, axis=0)
-        data = lax.ppermute(chunk, self.axis, _inv(perm))
+        data = lax.ppermute(chunk, axis, _inv(perm))
         self.group.note_op(stream, perm)
         return self._with(tokens=self._bump(stream, data)), data
 
@@ -219,6 +211,7 @@ class DynamicWindow(Window):
         one-sided in name only (paper Fig. 5)."""
         self._check_stream(stream)
         data = self._ordered_payload(data, stream)
+        axis = self.axis
         size = data.shape[0]
         am_msg = self.am_data.shape[1]
         if size > am_msg:
@@ -227,10 +220,10 @@ class DynamicWindow(Window):
             data.astype(self.buffer.dtype)
         )
         hdr = jnp.stack([jnp.int32(1), jnp.int32(slot), jnp.int32(seg_offset)])
-        sent = lax.ppermute(payload, self.axis, perm)
-        sent_hdr = lax.ppermute(hdr, self.axis, perm)
-        sent_size = lax.ppermute(jnp.int32(size), self.axis, perm)
-        enq = _is_target(self.axis, perm) & (sent_hdr[0] > 0)
+        sent = lax.ppermute(payload, axis, perm)
+        sent_hdr = lax.ppermute(hdr, axis, perm)
+        sent_size = lax.ppermute(jnp.int32(size), axis, perm)
+        enq = _is_target(axis, perm) & (sent_hdr[0] > 0)
         idx = self.am_count
         meta = jnp.stack([sent_hdr[1] + 1, sent_hdr[2], sent_size])  # slot+1 as valid tag
         am_data = jnp.where(enq, self.am_data.at[idx].set(sent), self.am_data)
@@ -275,7 +268,7 @@ class DynamicWindow(Window):
         target to have progressed, so the ack is tied to the (post-progress)
         target buffer state — an origin flush cannot complete while the target
         sits outside the runtime."""
-        tok = _tie(self.tokens[stream], self.buffer)
+        tok = _tie(self.substrate.token(stream), self.buffer)
         tok = _rtt(tok, self.axis, perm)
         return self._with(tokens=self.tokens.at[stream].set(tok))
 

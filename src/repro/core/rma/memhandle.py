@@ -8,13 +8,22 @@ directly: the put path is bit-identical to an allocated window — one phase,
 no target involvement (paper Fig. 12: "the difference between allocated
 windows and windows created from memory handles is negligible").
 
-Life-time guarantees (the crux of the paper's argument): the handle embeds
-the registration *epoch*.  ``memhandle_release`` bumps the slot's epoch, so
-any later operation through a stale handle is dropped at the target and
-counted in an error counter — using the handle after release is erroneous
-(paper: "It is erroneous to release a memory more than once"; we extend the
-same rule to use-after-release), and the runtime makes the violation
-observable instead of corrupting memory.
+Life-time guarantees (the crux of the paper's argument) are enforced at two
+levels since the substrate refactor:
+
+* **Traced** (always on): the handle embeds the registration *epoch*.
+  ``memhandle_release`` bumps the slot's epoch, so any later operation
+  through a stale handle is dropped at the target and counted in an error
+  counter — the runtime makes the violation observable instead of
+  corrupting memory.
+* **Static** (when the slot is known at trace time): ``win_from_memhandle``
+  accepts an optional ``slot=`` hint and records the slot's release count
+  from the dup family's shared :class:`~repro.core.rma.substrate.FlushQueues`.
+  If ``memhandle_release`` runs between window creation and a later
+  operation, the mismatch is detected *at trace time* and the operation
+  **raises** — "It is erroneous to release a memory more than once" (paper
+  §4.2); we extend the same rule to use-after-release and fail fast where
+  the program structure makes it provable.
 
 Restrictions faithfully carried over from paper §4.2/§6.5:
 
@@ -33,7 +42,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.rma.dynamic import DynamicWindow
-from repro.core.rma.window import _inv, _is_target, _tie, _write
+from repro.core.rma.substrate import _inv, _is_target, _tie, _write
 
 Array = jax.Array
 
@@ -56,9 +65,13 @@ def memhandle_release(win: DynamicWindow, slot: int) -> DynamicWindow:
     """``MPIX_Memhandle_release``: end the exposure of the registered memory.
 
     Bumps the slot epoch so all outstanding handles become stale; subsequent
-    RMA through them is dropped and counted (see ``MemhandleWindow.put``)."""
+    RMA through them is dropped and counted (see ``MemhandleWindow.put``).
+    The release is also recorded in the dup family's shared flush-queue
+    state, so handle windows created with a static ``slot=`` hint raise on
+    use-after-release at trace time."""
     epoch = win.epoch + 1
     regs = win.regs.at[slot, 0].set(0)
+    win.group.note_release(slot)
     return win._with_dyn(regs=regs, epoch=epoch)
 
 
@@ -67,17 +80,25 @@ def win_from_memhandle(
     memhandle: Array,
     *,
     disp_unit: int = 1,
+    slot: int | None = None,
 ) -> "MemhandleWindow":
     """``MPIX_Win_from_memhandle``: local creation of a single-target window
     from a received handle.  The handle travels as runtime data (it may have
     arrived via any transport); no registration traffic is needed ever after.
+
+    ``slot``: optional trace-time statement of which registration slot the
+    handle refers to.  When given, use-after-release is detected statically
+    and raises (see module docstring); when omitted, only the traced epoch
+    check applies.
     """
     if memhandle.shape != (MAX_MEMHANDLE_SIZE,):
         raise ValueError(
             f"memhandle must be a ({MAX_MEMHANDLE_SIZE},) int32 array, got {memhandle.shape}"
         )
+    births = parent.group.release_count(slot) if slot is not None else 0
     return MemhandleWindow(parent=parent, handle=memhandle, disp_unit=disp_unit,
-                           err_count=jnp.zeros((), jnp.int32))
+                           err_count=jnp.zeros((), jnp.int32),
+                           slot_hint=slot, birth_releases=births)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -86,22 +107,27 @@ class MemhandleWindow:
     """A window created from a memory handle (paper Listing 5).
 
     Functional wrapper around the parent dynamic window: operations return a
-    new ``MemhandleWindow`` whose ``parent`` carries the updated pool.  Only
-    passive-target operations are provided.
+    new ``MemhandleWindow`` whose ``parent`` carries the updated pool — and
+    therefore shares the parent's substrate (tokens, scope-aware flush
+    queues).  Only passive-target operations are provided.
     """
 
     parent: DynamicWindow
     handle: Array  # [epoch, offset, size, slot]
     disp_unit: int
     err_count: Array  # stale-handle violations observed at this device
+    slot_hint: int | None = None
+    birth_releases: int = 0
 
     def tree_flatten(self):
-        return (self.parent, self.handle, self.err_count), (self.disp_unit,)
+        return (self.parent, self.handle, self.err_count), (
+            self.disp_unit, self.slot_hint, self.birth_releases)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         parent, handle, err_count = children
-        return cls(parent, handle, aux[0], err_count)
+        disp_unit, slot_hint, birth_releases = aux
+        return cls(parent, handle, disp_unit, err_count, slot_hint, birth_releases)
 
     # -- helpers ---------------------------------------------------------------
     def _resolve(self, offset) -> tuple[Array, Array]:
@@ -111,16 +137,40 @@ class MemhandleWindow:
         off = self.handle[1] + jnp.asarray(offset, jnp.int32) * self.disp_unit
         return off, self.handle[0]
 
+    def _check_lifetime(self) -> None:
+        """Static half of the P5 lifetime guarantee (see module docstring)."""
+        if self.slot_hint is None:
+            return
+        now = self.parent.group.release_count(self.slot_hint)
+        if now != self.birth_releases:
+            raise RuntimeError(
+                f"memory handle for slot {self.slot_hint} used after "
+                f"memhandle_release ({now - self.birth_releases} release(s) "
+                "since the window was created) — erroneous per paper §4.2; "
+                "create a fresh handle after re-attaching"
+            )
+
+    def _rewrap(self, parent: DynamicWindow, *, err_count=None) -> "MemhandleWindow":
+        return dataclasses.replace(
+            self, parent=parent,
+            err_count=self.err_count if err_count is None else err_count)
+
     # -- RMA operations ----------------------------------------------------------
     def put(self, data: Array, perm, *, offset=0, stream: int = 0) -> "MemhandleWindow":
-        """Direct RDMA put through the handle: ONE phase, same as allocated."""
+        """Direct RDMA put through the handle: one communication *phase*,
+        same as allocated.  The handle-resolved address and epoch are
+        runtime data, so they ride the packet as one extra header word
+        (a second HLO ``ppermute`` alongside the payload — the same
+        physical transfer, unlike the extra *round-trips* of the dynamic
+        slow paths)."""
+        self._check_lifetime()
         p = self.parent
         p._check_stream(stream)
         data = p._ordered_payload(data, stream)
         off, epoch = self._resolve(offset)
         sent = lax.ppermute(data, p.axis, perm)
-        sent_off = lax.ppermute(off, p.axis, perm)
-        sent_epoch = lax.ppermute(epoch, p.axis, perm)
+        hdr = lax.ppermute(jnp.stack([off, epoch]), p.axis, perm)
+        sent_off, sent_epoch = hdr[0], hdr[1]
         # Life-time guarantee: target-side epoch check (local compare, free).
         slot = self.handle[3]
         fresh = (sent_epoch == p.regs[slot, 0]) & (p.regs[slot, 0] > 0)
@@ -129,10 +179,11 @@ class MemhandleWindow:
         errs = self.err_count + jnp.where(is_tgt & ~fresh, 1, 0).astype(jnp.int32)
         p.group.note_op(stream, perm)
         new_parent = p._with_dyn(buffer=buf, tokens=p._bump(stream, sent))
-        return MemhandleWindow(new_parent, self.handle, self.disp_unit, errs)
+        return self._rewrap(new_parent, err_count=errs)
 
     def get(self, perm, *, offset=0, size: int, stream: int = 0):
         """Direct RDMA get: one request/response RTT, same as allocated."""
+        self._check_lifetime()
         p = self.parent
         p._check_stream(stream)
         off, _ = self._resolve(offset)
@@ -141,21 +192,21 @@ class MemhandleWindow:
         data = lax.ppermute(chunk, p.axis, _inv(perm))
         p.group.note_op(stream, perm)
         new_parent = p._with(tokens=p._bump(stream, data))
-        return MemhandleWindow(new_parent, self.handle, self.disp_unit, self.err_count), data
+        return self._rewrap(new_parent), data
 
     def accumulate(self, data: Array, perm, *, op: str = "sum", offset=0,
                    stream: int = 0) -> "MemhandleWindow":
         """Accumulate through the handle (same P3 path selection as Window)."""
+        self._check_lifetime()
         off, _ = self._resolve(offset)
         p = self.parent.accumulate(data, perm, op=op, offset=off, stream=stream)
-        return MemhandleWindow(p, self.handle, self.disp_unit, self.err_count)
+        return self._rewrap(p)
 
     def flush(self, stream: int | None = None) -> "MemhandleWindow":
         """Flush through the parent's synchronization state (paper §4.2: lock
-        and unlock are applied on the parent dynamic window)."""
-        return MemhandleWindow(
-            self.parent.flush(stream), self.handle, self.disp_unit, self.err_count
-        )
+        and unlock are applied on the parent dynamic window) — i.e. through
+        the dup family's shared scope-aware epoch engine."""
+        return self._rewrap(self.parent.flush(stream))
 
     def fence(self):
         raise RuntimeError(

@@ -1,0 +1,417 @@
+"""The unified RMA substrate — one epoch engine under every window kind.
+
+Every window flavour in this package — allocated (``window.Window``), dynamic
+(``dynamic.DynamicWindow``), and memory-handle (``memhandle.MemhandleWindow``)
+— is a *view* over the state defined here:
+
+* :class:`Substrate` owns the **backing buffer** (the device's exposed
+  memory), the **channel tokens** (one per issue stream — the HLO-level
+  stand-in for a per-thread NIC endpoint), and the transport primitives
+  (put/get/rmw and the raw :meth:`Substrate.channel_send` used by the ring
+  collectives).  It is a pytree: the buffer and tokens are traced leaves,
+  everything else is static.
+* :class:`FlushQueues` owns the **scope-aware flush queues** — the
+  trace-local bookkeeping of which streams have operations in flight and
+  which route their completion ack must take.  It is *shared by reference*
+  across a whole dup family (paper §3: duplicated windows are "different
+  handles to the same underlying memory and network resources";
+  synchronization on one applies to all), and it is the single place where
+  the paper's P1 scope semantics live:
+
+  - ``SCOPE_THREAD``  — each stream has its own queue; a flush drains
+    exactly one queue and pays exactly one ack round-trip (paper Fig. 8/9,
+    the cheap multi-threaded flush).
+  - ``SCOPE_PROCESS`` — a flush *coalesces* all queues and walks them
+    serialized, one ack round-trip per pending stream — the UCX
+    endpoint-list walk of paper Fig. 7 that makes process-scope flushes
+    grow linearly with thread count.
+
+Window duplication (paper P4, ``MPIX_Win_dup_with_info``) falls out of this
+split for free: a dup is a new view object holding a different
+``WindowConfig`` but the *same* ``Substrate`` instance — zero-copy by
+construction, since the view owns no arrays.
+
+The lifetime side of P5 (memory handles) also hangs off :class:`FlushQueues`:
+``memhandle_release`` records a per-slot release count here, so a handle
+window whose slot is statically known can detect use-after-release at trace
+time and raise, while handles that travel as runtime data fall back to the
+traced epoch check (dropped + counted at the target).
+
+Wire-level helpers (``_tie``, ``_rtt``, ``_write`` …) live here too: they are
+the shared vocabulary in which all views express their communication phases.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+Perm = Sequence[tuple[int, int]]
+
+SCOPE_PROCESS = "process"
+SCOPE_THREAD = "thread"
+
+
+# ---------------------------------------------------------------------------
+# Wire-level helpers
+# ---------------------------------------------------------------------------
+
+
+def _inv(perm: Perm) -> Perm:
+    return tuple((t, s) for s, t in perm)
+
+
+def _is_target(axis: str, perm: Perm) -> Array:
+    """SPMD predicate: does *this* device receive data under ``perm``?"""
+    idx = lax.axis_index(axis)
+    tgts = jnp.asarray([t for _, t in perm], dtype=idx.dtype)
+    return jnp.any(idx == tgts)
+
+
+def _is_source(axis: str, perm: Perm) -> Array:
+    idx = lax.axis_index(axis)
+    srcs = jnp.asarray([s for s, _ in perm], dtype=idx.dtype)
+    return jnp.any(idx == srcs)
+
+
+def _tie(value, *deps):
+    """Make ``value`` depend on ``deps`` in the lowered HLO.
+
+    This is the TPU analogue of issuing on an ordered DMA channel: consumers
+    of the returned value transitively depend on every dep, so XLA must
+    schedule the dep's communication first.  We use an *arithmetic* tie —
+    ``value + 0.0 * probe(dep)`` — because ``lax.optimization_barrier``
+    operands get shrunk when a tuple output is dead, silently dropping the
+    ordering edge.  Float multiply-by-zero is not IEEE-safe to fold
+    (NaN/Inf), so XLA keeps the chain.
+    """
+    z = jnp.float32(0.0)
+    for d in deps:
+        probe = lax.convert_element_type(jnp.ravel(d)[0], jnp.float32)
+        z = z + probe
+    zero = z * jnp.float32(0.0)
+    if jnp.issubdtype(value.dtype, jnp.floating):
+        return value + zero.astype(value.dtype)
+    if jnp.issubdtype(value.dtype, jnp.integer):
+        return value + lax.convert_element_type(zero, value.dtype)
+    if value.dtype == jnp.bool_:
+        return value ^ (zero != 0.0)
+    return value + zero.astype(value.dtype)
+
+
+def _rtt(token: Array, axis: str, perm: Perm) -> Array:
+    """One completion round-trip (ack) along ``perm`` — the cost of a flush."""
+    t = lax.ppermute(token, axis, perm)
+    t = lax.ppermute(t, axis, _inv(perm))
+    return _tie(token, t)
+
+
+def _write(buffer: Array, update: Array, offset, apply_pred: Array) -> Array:
+    """Write ``update`` into ``buffer`` at ``offset`` where ``apply_pred``."""
+    offset = jnp.asarray(offset)
+    idx = (offset,) + (jnp.zeros((), offset.dtype),) * (buffer.ndim - 1)
+    updated = lax.dynamic_update_slice(buffer, update.astype(buffer.dtype), idx)
+    return jnp.where(apply_pred, updated, buffer)
+
+
+def _is_static(offset) -> bool:
+    """True when ``offset`` is a trace-time constant known on every device.
+
+    A static displacement needs no wire traffic of its own: the RDMA packet's
+    address field is origin-computed, and when it is a Python constant every
+    target can reconstruct it locally — so the put costs exactly one
+    communication phase in HLO, matching the cost model's "put = 1 phase".
+    Traced displacements ride a second ``ppermute`` (same physical packet,
+    two HLO ops).
+    """
+    return isinstance(offset, int) and not isinstance(offset, bool)
+
+
+# ---------------------------------------------------------------------------
+# Scope-aware flush queues (trace-local, shared across a dup family)
+# ---------------------------------------------------------------------------
+
+_family_ids = itertools.count()
+
+
+class FlushQueues:
+    """Per-scope flush queues for one dup family.
+
+    One mutable Python object per window family, aliased by every view
+    (window, dup, dynamic, memhandle) so that synchronization applied through
+    one handle completes operations issued through all of them.
+
+    State:
+      pending:        stream id → route (perm) of that stream's in-flight
+                      operations — the per-stream flush queue.
+      slot_releases:  registration slot → number of ``memhandle_release``
+                      calls — the static side of the P5 lifetime guarantee.
+      epoch_counter:  Python-side mirror of the dynamic-window registration
+                      epoch (diagnostics only; the traced epoch lives in
+                      ``DynamicWindow.epoch``).
+    """
+
+    def __init__(self):
+        self.gid = next(_family_ids)
+        self.pending: dict[int, Perm] = {}
+        self.slot_releases: dict[int, int] = {}
+        self.epoch_counter = 0
+
+    # -- flush-queue protocol -------------------------------------------------
+    def note_op(self, stream: int, perm: Perm) -> None:
+        self.pending[stream] = tuple(perm)
+
+    def take(self, scope: str, stream: int | None) -> dict[int, Perm]:
+        """Drain queues according to the flush scope.
+
+        ``SCOPE_THREAD`` with a stream: pop exactly that stream's queue.
+        Anything else (``SCOPE_PROCESS``, or a thread-scope flush with no
+        stream named): coalesce — pop *every* queue, the MPI-faithful
+        drain-all semantics.
+        """
+        if scope == SCOPE_THREAD and stream is not None:
+            out = {}
+            if stream in self.pending:
+                out[stream] = self.pending.pop(stream)
+            return out
+        out, self.pending = self.pending, {}
+        return out
+
+    def queued_streams(self, scope: str, stream: int | None) -> list[int]:
+        """Streams a local-completion point covers (no dequeue).
+
+        Thread scope always covers the calling stream (a local ordering
+        point is valid even with nothing in flight); process scope covers
+        whatever is pending."""
+        if scope == SCOPE_THREAD and stream is not None:
+            return [stream]
+        return list(self.pending)
+
+    # -- P5 lifetime bookkeeping ----------------------------------------------
+    def note_release(self, slot: int) -> None:
+        self.slot_releases[slot] = self.slot_releases.get(slot, 0) + 1
+        self.epoch_counter += 1
+
+    def release_count(self, slot: int) -> int:
+        return self.slot_releases.get(slot, 0)
+
+
+# ---------------------------------------------------------------------------
+# Substrate
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Substrate:
+    """Backing buffer + channel tokens + the epoch engine, for one dup family.
+
+    All methods are functional: they return a new ``Substrate`` aliasing the
+    same :class:`FlushQueues`.  Views (``Window`` & friends) hold a substrate
+    plus their own ``WindowConfig`` and delegate every transport and
+    synchronization operation here.
+    """
+
+    buffer: Array
+    tokens: Array  # (n_streams,) float32 channel tokens
+    axis: str
+    axis_size: int
+    queues: FlushQueues
+
+    # -- pytree protocol ------------------------------------------------------
+    def tree_flatten(self):
+        return (self.buffer, self.tokens), (self.axis, self.axis_size, self.queues)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        buffer, tokens = children
+        axis, axis_size, queues = aux
+        return cls(buffer, tokens, axis, axis_size, queues)
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def allocate(cls, buffer: Array, axis: str, axis_size: int,
+                 n_streams: int = 1) -> "Substrate":
+        return cls(buffer, jnp.zeros((n_streams,), jnp.float32), axis,
+                   axis_size, FlushQueues())
+
+    def replace(self, *, buffer: Array | None = None,
+                tokens: Array | None = None) -> "Substrate":
+        return Substrate(
+            self.buffer if buffer is None else buffer,
+            self.tokens if tokens is None else tokens,
+            self.axis, self.axis_size, self.queues,
+        )
+
+    # -- channel-token bookkeeping --------------------------------------------
+    @property
+    def n_streams(self) -> int:
+        return self.tokens.shape[0]
+
+    def token(self, stream: int) -> Array:
+        return self.tokens[stream]
+
+    def bump(self, stream: int, dep) -> Array:
+        """Advance a stream's channel token past ``dep`` (issue-order edge)."""
+        tok = _tie(self.token(stream), dep)
+        return self.tokens.at[stream].set(tok)
+
+    def ordered_payload(self, payload, stream: int, order: bool):
+        """Under P2 (``order=True``) chain the payload on the stream token so
+        the lowered program issues it on the same ordered channel as the
+        stream's previous operation (NIC fence semantics)."""
+        if order:
+            return _tie(payload, self.token(stream))
+        return payload
+
+    # -- transport primitives -------------------------------------------------
+    def put(self, data: Array, perm: Perm, *, offset=0, stream: int = 0,
+            order: bool = False) -> "Substrate":
+        """Origin-addressed RDMA write (``MPI_Put``). One communication phase
+        for static displacements; a traced displacement adds a second HLO
+        ``ppermute`` for the address word."""
+        data = self.ordered_payload(data, stream, order)
+        sent = lax.ppermute(data, self.axis, perm)
+        if _is_static(offset):
+            sent_off = jnp.int32(offset)
+        else:
+            sent_off = lax.ppermute(jnp.asarray(offset, jnp.int32), self.axis, perm)
+        buf = _write(self.buffer, sent, sent_off, _is_target(self.axis, perm))
+        self.queues.note_op(stream, perm)
+        return self.replace(buffer=buf, tokens=self.bump(stream, sent))
+
+    def get(self, perm: Perm, *, offset: int = 0, size: int,
+            stream: int = 0, order: bool = False) -> tuple["Substrate", Array]:
+        """RDMA read (``MPI_Get``): request + response = 1 RTT (2 phases)."""
+        req = self.ordered_payload(jnp.float32(1.0), stream, order)
+        req_at_tgt = lax.ppermute(req, self.axis, perm)  # phase 1: request
+        chunk = lax.dynamic_slice_in_dim(self.buffer, offset, size, axis=0)
+        chunk = _tie(chunk, req_at_tgt)
+        data = lax.ppermute(chunk, self.axis, _inv(perm))  # phase 2: response
+        self.queues.note_op(stream, perm)
+        return self.replace(tokens=self.bump(stream, data)), data
+
+    def rmw(self, data: Array, perm: Perm, combine: Callable[[Array, Array], Array],
+            *, offset=0, stream: int = 0, order: bool = False,
+            software: bool = False) -> "Substrate":
+        """Remote read-modify-write (the accumulate transport).
+
+        ``software=True`` models the active-message path of paper §2.3: the
+        landing additionally depends on the *target's* channel token (its
+        participation in the runtime) and a target-side mutual-exclusion
+        barrier — the Fig. 5 pathology.
+        """
+        data = self.ordered_payload(data, stream, order)
+        sent = lax.ppermute(data, self.axis, perm)
+        if _is_static(offset):
+            sent_off = jnp.int32(offset)
+        else:
+            sent_off = lax.ppermute(jnp.asarray(offset, jnp.int32), self.axis, perm)
+        if software:
+            sent = _tie(sent, self.token(stream))
+        idx = (jnp.asarray(sent_off),) + (jnp.zeros((), jnp.int32),) * (self.buffer.ndim - 1)
+        current = lax.dynamic_slice(self.buffer, idx, sent.shape)
+        new = combine(current, sent)
+        if software:
+            new = _tie(new, self.token(stream))
+        buf = _write(self.buffer, new, sent_off, _is_target(self.axis, perm))
+        self.queues.note_op(stream, perm)
+        return self.replace(buffer=buf, tokens=self.bump(stream, sent))
+
+    def fetch_rmw(self, data: Array, perm: Perm,
+                  combine: Callable[[Array, Array], Array], *, offset: int = 0,
+                  stream: int = 0, order: bool = False,
+                  ) -> tuple["Substrate", Array]:
+        """Atomic fetch-and-op: always one RTT (the old value travels back)."""
+        data = self.ordered_payload(data, stream, order)
+        sent = lax.ppermute(data, self.axis, perm)  # phase 1
+        current = lax.dynamic_slice_in_dim(self.buffer, offset, sent.shape[0], axis=0)
+        new = combine(current, sent)
+        buf = _write(self.buffer, new, jnp.int32(offset), _is_target(self.axis, perm))
+        old = lax.ppermute(current, self.axis, _inv(perm))  # phase 2
+        self.queues.note_op(stream, perm)
+        return self.replace(buffer=buf, tokens=self.bump(stream, old)), old
+
+    def compare_swap(self, compare: Array, new: Array, perm: Perm, *,
+                     offset: int = 0, stream: int = 0, order: bool = False,
+                     ) -> tuple["Substrate", Array]:
+        """``MPI_Compare_and_swap`` on a single element; one RTT."""
+        payload = self.ordered_payload(jnp.stack([compare, new]), stream, order)
+        sent = lax.ppermute(payload, self.axis, perm)
+        current = lax.dynamic_slice_in_dim(self.buffer, offset, 1, axis=0)[0]
+        swap = current == sent[0].astype(current.dtype)
+        value = jnp.where(swap, sent[1].astype(current.dtype), current)
+        buf = _write(self.buffer, value[None], jnp.int32(offset),
+                     _is_target(self.axis, perm))
+        old = lax.ppermute(current, self.axis, _inv(perm))
+        self.queues.note_op(stream, perm)
+        return self.replace(buffer=buf, tokens=self.bump(stream, old)), old
+
+    def channel_send(self, payload: Array, perm: Perm, *, stream: int = 0,
+                     ) -> tuple["Substrate", Array]:
+        """Raw one-phase transfer on a stream's issue channel.
+
+        The building block the ring collectives use: the payload is tied to
+        the stream's channel token (issue order on that channel), exactly one
+        ``ppermute`` moves it, and the operation is queued for the next
+        scoped flush.  Returns the data received by *this* device.
+        """
+        payload = _tie(payload, self.token(stream))
+        recvd = lax.ppermute(payload, self.axis, perm)
+        self.queues.note_op(stream, perm)
+        return self.replace(tokens=self.bump(stream, recvd)), recvd
+
+    # -- the epoch engine -----------------------------------------------------
+    def flush(self, *, scope: str = SCOPE_PROCESS,
+              stream: int | None = None) -> "Substrate":
+        """``MPI_Win_flush`` (remote completion) — THE shared epoch engine.
+
+        Thread scope (P1) with a stream: drain one queue, one ack RTT.
+        Process scope: coalesce every stream's queue and walk the endpoints
+        serialized — one chained RTT per pending stream (paper Fig. 7)."""
+        pending = self.queues.take(scope, stream)
+        tokens = self.tokens
+        prev = None
+        for s, perm in sorted(pending.items()):
+            tok = tokens[s]
+            if prev is not None:
+                tok = _tie(tok, prev)  # serialized endpoint-list walk
+            tok = _rtt(tok, self.axis, perm)
+            tokens = tokens.at[s].set(tok)
+            prev = tok
+        buffer = self.buffer
+        if prev is not None:
+            # Remote completion: the state observed after the flush depends
+            # on the acks (and cannot be dead-code-eliminated).
+            buffer = _tie(buffer, prev)
+        return self.replace(buffer=buffer, tokens=tokens)
+
+    def flush_local(self, *, scope: str = SCOPE_PROCESS,
+                    stream: int | None = None) -> "Substrate":
+        """``MPI_Win_flush_local``: local completion only — no round-trip,
+        just a local ordering point on the covered streams."""
+        tokens = self.tokens
+        for s in self.queues.queued_streams(scope, stream):
+            tokens = tokens.at[s].set(_tie(tokens[s], self.buffer))
+        return self.replace(tokens=tokens)
+
+    def fence(self) -> "Substrate":
+        """Active-target fence: collective barrier over the token vector.
+        Always process scope (paper §2.1: the scope key has no effect on
+        active-target synchronization)."""
+        self.queues.take(SCOPE_PROCESS, None)
+        summed = lax.psum(self.tokens, self.axis)
+        return self.replace(tokens=_tie(self.tokens, summed))
+
+
+__all__ = [
+    "SCOPE_PROCESS",
+    "SCOPE_THREAD",
+    "FlushQueues",
+    "Substrate",
+]

@@ -15,8 +15,15 @@ with the paper's proposed extensions:
 * ``Window.dup_with_info``   — P4: window duplication (paper §3,
   ``MPIX_Win_dup_with_info``).
 
-Dynamic windows and memory handles (P5, paper §4) live in ``dynamic.py`` and
-``memhandle.py``.
+Since the substrate refactor, :class:`Window` is a **thin view**: the backing
+buffer, the per-stream channel tokens, and the scope-aware flush queues all
+live in :class:`repro.core.rma.substrate.Substrate`, which is shared across a
+whole dup family.  The view owns exactly two things — the substrate reference
+and its :class:`WindowConfig` — which is what makes ``dup_with_info`` a true
+zero-copy operation: a dup is a new view object over the *same* substrate
+instance with a different config.  ``DynamicWindow`` (dynamic memory, paper
+§4) and ``MemhandleWindow`` (P5) are further views over the same core; see
+``dynamic.py`` and ``memhandle.py``.
 
 TPU mapping
 -----------
@@ -26,16 +33,17 @@ with its own completion semaphore).  Data movement is expressed with
 ``jax.lax.ppermute`` (the SPMD projection of an ICI remote DMA; the Pallas
 kernel twin in ``repro/kernels/rma_put.py`` uses
 ``pltpu.make_async_remote_copy``).  Completion tracking is expressed with
-*channel tokens*: tiny per-stream scalars threaded through
-``lax.optimization_barrier`` so that the lowered HLO carries exactly the
-dependences the RMA semantics require — and no more.
+*channel tokens*: tiny per-stream scalars threaded through arithmetic ties so
+that the lowered HLO carries exactly the dependences the RMA semantics
+require — and no more.
 
 Cost model (faithful to the paper's measurements):
 
 ==========================  =============================================
 operation                   communication phases in lowered HLO
 ==========================  =============================================
-put / intrinsic accumulate  1  (one ``collective-permute``)
+put / intrinsic accumulate  1  (one ``collective-permute``; a *traced*
+                            displacement adds one more for the address)
 get / fetch_op / cas        2  (request + response = 1 RTT)
 flush of one stream         2  (ack round-trip = 1 RTT)
 process-scope flush         2 × (#streams with pending ops), serialized —
@@ -48,12 +56,23 @@ software (AM) accumulate    1 phase + target ``progress()`` dependence
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Any, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import lax
+
+from repro.core.rma.substrate import (  # noqa: F401  (re-exported for views)
+    SCOPE_PROCESS,
+    SCOPE_THREAD,
+    FlushQueues,
+    Substrate,
+    _inv,
+    _is_source,
+    _is_target,
+    _rtt,
+    _tie,
+    _write,
+)
 
 Array = jax.Array
 Perm = Sequence[tuple[int, int]]
@@ -61,9 +80,6 @@ Perm = Sequence[tuple[int, int]]
 # ---------------------------------------------------------------------------
 # Info keys / window configuration
 # ---------------------------------------------------------------------------
-
-SCOPE_PROCESS = "process"
-SCOPE_THREAD = "thread"
 
 #: Info keys an implementation may silently refuse to change on dup (paper §3:
 #: "An MPI implementation may not be able to change certain info keys during
@@ -111,103 +127,7 @@ class WindowConfig:
 
 
 # ---------------------------------------------------------------------------
-# Dup-family group state (trace-local, Python side)
-# ---------------------------------------------------------------------------
-
-_group_ids = itertools.count()
-
-
-class _Group:
-    """State shared by a window and all its duplicates within one trace.
-
-    Duplicated windows are "different handles to the same underlying memory
-    and network resources" (paper §3): synchronization applied to one applies
-    to all.  We realize that by keeping the *pending-operation* bookkeeping on
-    a single mutable object shared across the dup family, while the array
-    state (buffer, tokens) is aliased pytree leaves.
-    """
-
-    def __init__(self):
-        self.gid = next(_group_ids)
-        # stream id -> last perm used (route for the completion ack)
-        self.pending: dict[int, Perm] = {}
-        self.epoch_counter = 0  # for dynamic windows / memhandles
-
-    def note_op(self, stream: int, perm: Perm) -> None:
-        self.pending[stream] = tuple(perm)
-
-    def take_pending(self, streams: Sequence[int] | None) -> dict[int, Perm]:
-        if streams is None:
-            out, self.pending = self.pending, {}
-            return out
-        out = {s: self.pending.pop(s) for s in streams if s in self.pending}
-        return out
-
-
-# ---------------------------------------------------------------------------
-# Helpers
-# ---------------------------------------------------------------------------
-
-
-def _inv(perm: Perm) -> Perm:
-    return tuple((t, s) for s, t in perm)
-
-
-def _is_target(axis: str, perm: Perm) -> Array:
-    """SPMD predicate: does *this* device receive data under ``perm``?"""
-    idx = lax.axis_index(axis)
-    tgts = jnp.asarray([t for _, t in perm], dtype=idx.dtype)
-    return jnp.any(idx == tgts)
-
-
-def _is_source(axis: str, perm: Perm) -> Array:
-    idx = lax.axis_index(axis)
-    srcs = jnp.asarray([s for s, _ in perm], dtype=idx.dtype)
-    return jnp.any(idx == srcs)
-
-
-def _tie(value, *deps):
-    """Make ``value`` depend on ``deps`` in the lowered HLO.
-
-    This is the TPU analogue of issuing on an ordered DMA channel: consumers
-    of the returned value transitively depend on every dep, so XLA must
-    schedule the dep's communication first.  We use an *arithmetic* tie —
-    ``value + 0.0 * probe(dep)`` — because ``lax.optimization_barrier``
-    operands get shrunk when a tuple output is dead, silently dropping the
-    ordering edge.  Float multiply-by-zero is not IEEE-safe to fold
-    (NaN/Inf), so XLA keeps the chain.
-    """
-    z = jnp.float32(0.0)
-    for d in deps:
-        probe = lax.convert_element_type(jnp.ravel(d)[0], jnp.float32)
-        z = z + probe
-    zero = z * jnp.float32(0.0)
-    if jnp.issubdtype(value.dtype, jnp.floating):
-        return value + zero.astype(value.dtype)
-    if jnp.issubdtype(value.dtype, jnp.integer):
-        return value + lax.convert_element_type(zero, value.dtype)
-    if value.dtype == jnp.bool_:
-        return value ^ (zero != 0.0)
-    return value + zero.astype(value.dtype)
-
-
-def _rtt(token: Array, axis: str, perm: Perm) -> Array:
-    """One completion round-trip (ack) along ``perm`` — the cost of a flush."""
-    t = lax.ppermute(token, axis, perm)
-    t = lax.ppermute(t, axis, _inv(perm))
-    return _tie(token, t)
-
-
-def _write(buffer: Array, update: Array, offset, apply_pred: Array) -> Array:
-    """Write ``update`` into ``buffer`` at ``offset`` where ``apply_pred``."""
-    offset = jnp.asarray(offset)
-    idx = (offset,) + (jnp.zeros((), offset.dtype),) * (buffer.ndim - 1)
-    updated = lax.dynamic_update_slice(buffer, update.astype(buffer.dtype), idx)
-    return jnp.where(apply_pred, updated, buffer)
-
-
-# ---------------------------------------------------------------------------
-# Window
+# Window — a view (substrate, config)
 # ---------------------------------------------------------------------------
 
 
@@ -217,33 +137,45 @@ class Window:
     """An allocated RMA window over one mesh axis (MPI_Win_allocate analogue).
 
     Use inside ``shard_map``: ``buffer`` is this device's exposed shard.  All
-    operations are functional — they return a new ``Window`` aliasing the
-    same dup-family group.  Typical SPMD usage issues symmetric operations
-    (every device puts to its ring neighbour); origin-restricted operations
-    (only rank 0 puts) are expressed with a one-pair ``perm``.
+    operations are functional — they return a new ``Window`` whose substrate
+    aliases the same scope-aware flush queues.  Typical SPMD usage issues
+    symmetric operations (every device puts to its ring neighbour);
+    origin-restricted operations (only rank 0 puts) are expressed with a
+    one-pair ``perm``.
     """
 
-    buffer: Array
-    tokens: Array  # (max_streams,) float32 channel tokens
-    axis: str
-    axis_size: int
+    substrate: Substrate
     config: WindowConfig
-    group: _Group
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        return (self.buffer, self.tokens), (
-            self.axis,
-            self.axis_size,
-            self.config,
-            self.group,
-        )
+        return (self.substrate,), (self.config,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        buffer, tokens = children
-        axis, axis_size, config, group = aux
-        return cls(buffer, tokens, axis, axis_size, config, group)
+        return cls(children[0], aux[0])
+
+    # -- substrate pass-throughs (the view owns no arrays) -------------------
+    @property
+    def buffer(self) -> Array:
+        return self.substrate.buffer
+
+    @property
+    def tokens(self) -> Array:
+        return self.substrate.tokens
+
+    @property
+    def axis(self) -> str:
+        return self.substrate.axis
+
+    @property
+    def axis_size(self) -> int:
+        return self.substrate.axis_size
+
+    @property
+    def group(self) -> FlushQueues:
+        """The dup family's shared flush-queue state."""
+        return self.substrate.queues
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -256,51 +188,50 @@ class Window:
     ) -> "Window":
         """``MPI_Win_allocate``: expose ``buffer`` (this device's shard)."""
         config = config or WindowConfig()
-        tokens = jnp.zeros((config.max_streams,), jnp.float32)
-        return cls(buffer, tokens, axis, axis_size, config, _Group())
+        sub = Substrate.allocate(buffer, axis, axis_size, config.max_streams)
+        return cls(sub, config)
 
     # -- P4: window duplication ----------------------------------------------
     def dup_with_info(self, **info) -> "Window":
         """``MPIX_Win_dup_with_info`` (paper §3): same memory and network
-        resources, different info configuration.  Local, non-collective.
+        resources, different info configuration.  Local, non-collective, and
+        **zero-copy**: the dup is a new view over the *same* substrate
+        instance — shared backing buffer, shared tokens, shared flush queues
+        — holding an independent ``WindowConfig``.
 
         Immutable keys are silently retained (the paper allows implementations
         to reject changes; users check via ``get_info``)."""
         accepted = {k: v for k, v in info.items() if k not in _DUP_IMMUTABLE_KEYS}
         cfg = self.config.replace(**accepted)
-        # Aliased leaves + shared group: synchronization on the dup applies to
-        # the parent and vice versa.
-        return Window(self.buffer, self.tokens, self.axis, self.axis_size, cfg, self.group)
+        return dataclasses.replace(self, config=cfg)
 
     def get_info(self) -> WindowConfig:
         """``MPI_Win_get_info``: query the configuration actually in effect."""
         return self.config
 
     # -- internal ------------------------------------------------------------
+    def _view(self, sub: Substrate) -> "Window":
+        """Rewrap an updated substrate in this view's type and config."""
+        return dataclasses.replace(self, substrate=sub)
+
+    def _with(self, *, buffer: Array | None = None,
+              tokens: Array | None = None) -> "Window":
+        return self._view(self.substrate.replace(buffer=buffer, tokens=tokens))
+
     def _token(self, stream: int) -> Array:
-        return self.tokens[stream]
-
-    def _with(self, *, buffer: Array | None = None, tokens: Array | None = None) -> "Window":
-        return Window(
-            self.buffer if buffer is None else buffer,
-            self.tokens if tokens is None else tokens,
-            self.axis,
-            self.axis_size,
-            self.config,
-            self.group,
-        )
-
-    def _ordered_payload(self, payload, stream: int):
-        """Under P2 (``order=True``) chain the payload on the stream token so
-        the lowered program issues it on the same ordered channel as the
-        stream's previous operation (NIC fence semantics)."""
-        if self.config.order:
-            return _tie(payload, self._token(stream))
-        return payload
+        return self.substrate.token(stream)
 
     def _bump(self, stream: int, dep) -> Array:
-        tok = _tie(self._token(stream), dep)
-        return self.tokens.at[stream].set(tok)
+        return self.substrate.bump(stream, dep)
+
+    def _ordered_payload(self, payload, stream: int):
+        return self.substrate.ordered_payload(payload, stream, self.config.order)
+
+    def _check_stream(self, stream: int) -> None:
+        if not (0 <= stream < self.config.max_streams):
+            raise ValueError(
+                f"stream {stream} out of range for max_streams={self.config.max_streams}"
+            )
 
     # -- one-sided operations --------------------------------------------------
     def put(
@@ -318,15 +249,8 @@ class Window:
         same stream completing).
         """
         self._check_stream(stream)
-        data = self._ordered_payload(data, stream)
-        off = jnp.asarray(offset, jnp.int32)
-        # RDMA semantics: the origin addresses remote memory directly — the
-        # target's CPU is not involved.  The packet carries (address, data).
-        sent_data = lax.ppermute(data, self.axis, perm)
-        sent_off = lax.ppermute(off, self.axis, perm)
-        new_buffer = _write(self.buffer, sent_data, sent_off, _is_target(self.axis, perm))
-        self.group.note_op(stream, perm)
-        return self._with(buffer=new_buffer, tokens=self._bump(stream, sent_data))
+        return self._view(self.substrate.put(
+            data, perm, offset=offset, stream=stream, order=self.config.order))
 
     def get(
         self,
@@ -342,13 +266,9 @@ class Window:
         request/response round-trip (2 phases), as on real RDMA reads.
         """
         self._check_stream(stream)
-        req = self._ordered_payload(jnp.float32(1.0), stream)
-        req_at_tgt = lax.ppermute(req, self.axis, perm)  # phase 1: read request
-        chunk = lax.dynamic_slice_in_dim(self.buffer, offset, size, axis=0)
-        chunk = _tie(chunk, req_at_tgt)
-        data = lax.ppermute(chunk, self.axis, _inv(perm))  # phase 2: response
-        self.group.note_op(stream, perm)
-        return self._with(tokens=self._bump(stream, data)), data
+        sub, data = self.substrate.get(
+            perm, offset=offset, size=size, stream=stream, order=self.config.order)
+        return self._view(sub), data
 
     def accumulate(
         self,
@@ -407,39 +327,20 @@ class Window:
         raise ValueError(f"unsupported accumulate op {op!r}")
 
     def _accumulate_intrinsic(self, data, perm, *, op, offset, stream) -> "Window":
-        data = self._ordered_payload(data, stream)
-        off = jnp.asarray(offset, jnp.int32)
-        sent = lax.ppermute(data, self.axis, perm)
-        sent_off = lax.ppermute(off, self.axis, perm)
-        idx = (sent_off,) + (jnp.zeros((), sent_off.dtype),) * (self.buffer.ndim - 1)
-        current = lax.dynamic_slice(self.buffer, idx, sent.shape)
-        new = self._apply_op(current, sent, op)
-        buf = _write(self.buffer, new, sent_off, _is_target(self.axis, perm))
-        self.group.note_op(stream, perm)
-        return self._with(buffer=buf, tokens=self._bump(stream, sent))
+        combine = lambda cur, upd: self._apply_op(cur, upd, op)
+        return self._view(self.substrate.rmw(
+            data, perm, combine, offset=offset, stream=stream,
+            order=self.config.order, software=False))
 
     def _accumulate_software(self, data, perm, *, op, offset, stream) -> "Window":
-        # Software path == AM emulation; only DynamicWindow carries an AM
-        # queue.  For allocated windows we model the software path as a
-        # target-mediated two-phase operation: the data is shipped, and the
-        # result is applied under a dependence on the *target's* token, i.e.
-        # the target's participation in the runtime.
-        data = self._ordered_payload(data, stream)
-        off = jnp.asarray(offset, jnp.int32)
-        sent = lax.ppermute(data, self.axis, perm)
-        sent_off = lax.ppermute(off, self.axis, perm)
-        # target-CPU involvement: the application depends on the target's own
-        # channel token (its participation), not just packet arrival.
-        sent = _tie(sent, self._token(stream))
-        idx = (sent_off,) + (jnp.zeros((), sent_off.dtype),) * (self.buffer.ndim - 1)
-        current = lax.dynamic_slice(self.buffer, idx, sent.shape)
-        new = self._apply_op(current, sent, op)
-        # serialization through a mutual exclusion device at the target: an
-        # extra local ordering barrier.
-        new = _tie(new, self._token(stream))
-        buf = _write(self.buffer, new, sent_off, _is_target(self.axis, perm))
-        self.group.note_op(stream, perm)
-        return self._with(buffer=buf, tokens=self._bump(stream, sent))
+        # Software path == AM emulation; only DynamicWindow carries a real AM
+        # queue.  For allocated windows the substrate models it as a
+        # target-mediated operation whose landing depends on the target's
+        # participation in the runtime.
+        combine = lambda cur, upd: self._apply_op(cur, upd, op)
+        return self._view(self.substrate.rmw(
+            data, perm, combine, offset=offset, stream=stream,
+            order=self.config.order, software=True))
 
     def fetch_op(
         self,
@@ -454,14 +355,11 @@ class Window:
 
         Always costs one RTT (the fetched value must travel back)."""
         self._check_stream(stream)
-        data = self._ordered_payload(data, stream)
-        sent = lax.ppermute(data, self.axis, perm)  # phase 1
-        current = lax.dynamic_slice_in_dim(self.buffer, offset, sent.shape[0], axis=0)
-        new = self._apply_op(current, sent, op)
-        buf = _write(self.buffer, new, jnp.int32(offset), _is_target(self.axis, perm))
-        old = lax.ppermute(current, self.axis, _inv(perm))  # phase 2: fetched value
-        self.group.note_op(stream, perm)
-        return self._with(buffer=buf, tokens=self._bump(stream, old)), old
+        combine = lambda cur, upd: self._apply_op(cur, upd, op)
+        sub, old = self.substrate.fetch_rmw(
+            data, perm, combine, offset=offset, stream=stream,
+            order=self.config.order)
+        return self._view(sub), old
 
     def compare_and_swap(
         self,
@@ -474,78 +372,36 @@ class Window:
     ) -> tuple["Window", Array]:
         """``MPI_Compare_and_swap`` on a single element; one RTT."""
         self._check_stream(stream)
-        payload = self._ordered_payload(jnp.stack([compare, new]), stream)
-        sent = lax.ppermute(payload, self.axis, perm)
-        current = lax.dynamic_slice_in_dim(self.buffer, offset, 1, axis=0)[0]
-        swap = current == sent[0].astype(current.dtype)
-        value = jnp.where(swap, sent[1].astype(current.dtype), current)
-        buf = _write(
-            self.buffer, value[None], jnp.int32(offset), _is_target(self.axis, perm)
-        )
-        old = lax.ppermute(current, self.axis, _inv(perm))
-        self.group.note_op(stream, perm)
-        return self._with(buffer=buf, tokens=self._bump(stream, old)), old
+        sub, old = self.substrate.compare_swap(
+            compare, new, perm, offset=offset, stream=stream,
+            order=self.config.order)
+        return self._view(sub), old
 
     # -- synchronization -------------------------------------------------------
     def flush(self, stream: int | None = None) -> "Window":
-        """``MPI_Win_flush`` (remote completion).
+        """``MPI_Win_flush`` (remote completion), routed through the shared
+        epoch engine.
 
         Process scope (default): completes operations issued by **all**
-        streams.  The implementation walks every stream's endpoint and awaits
-        its ack — serialized, exactly the UCX worker-list walk of paper
-        Fig. 7.  Cost: one RTT per pending stream, chained.
-
-        Thread scope (P1): completes only the calling stream's operations —
-        one RTT, no cross-stream synchronization.  ``stream`` must be given.
+        streams of the dup family — the coalesced queue walk (paper Fig. 7).
+        Thread scope (P1): completes only the calling stream's queue — one
+        RTT, no cross-stream synchronization.  ``stream`` must be given.
         """
-        if self.config.scope == SCOPE_THREAD and stream is not None:
-            pending = self.group.take_pending([stream])
-        else:
-            # process scope: the calling thread drains everyone (Fig. 1a/7).
-            pending = self.group.take_pending(None)
-        tokens = self.tokens
-        prev = None
-        for s, perm in sorted(pending.items()):
-            tok = tokens[s]
-            if prev is not None:
-                tok = _tie(tok, prev)  # serialized endpoint-list walk
-            tok = _rtt(tok, self.axis, perm)
-            tokens = tokens.at[s].set(tok)
-            prev = tok
-        buffer = self.buffer
-        if prev is not None:
-            # Remote completion: the window state observed after the flush
-            # depends on the acks (and cannot be dead-code-eliminated).
-            buffer = _tie(buffer, prev)
-        return self._with(buffer=buffer, tokens=tokens)
+        return self._view(self.substrate.flush(
+            scope=self.config.scope, stream=stream))
 
     def flush_local(self, stream: int | None = None) -> "Window":
         """``MPI_Win_flush_local``: local completion only — the origin buffers
         may be reused but remote completion is not implied.  Local completion
         needs no network round-trip; it is a local ordering point."""
-        if self.config.scope == SCOPE_THREAD and stream is not None:
-            streams = [stream]
-        else:
-            streams = list(self.group.pending)
-        tokens = self.tokens
-        for s in streams:
-            tokens = tokens.at[s].set(_tie(tokens[s], self.buffer))
-        return self._with(tokens=tokens)
+        return self._view(self.substrate.flush_local(
+            scope=self.config.scope, stream=stream))
 
     def fence(self) -> "Window":
         """Active-target ``MPI_Win_fence``: a collective barrier — all-reduce
         of the token vector (always process scope; paper §2.1 notes the scope
         key has no effect on active target synchronization)."""
-        self.group.take_pending(None)
-        summed = lax.psum(self.tokens, self.axis)
-        tokens = _tie(self.tokens, summed)
-        return self._with(tokens=tokens)
-
-    def _check_stream(self, stream: int) -> None:
-        if not (0 <= stream < self.config.max_streams):
-            raise ValueError(
-                f"stream {stream} out of range for max_streams={self.config.max_streams}"
-            )
+        return self._view(self.substrate.fence())
 
 
 __all__ = [

@@ -16,8 +16,11 @@ def interpret_mode():
         return False
     # eager DMA execution models hardware (transfers land when posted);
     # the default "on_wait" defers execution to the wait and breaks
-    # multi-hop ring schedules.
-    return pltpu.InterpretParams(dma_execution_mode="eager")
+    # multi-hop ring schedules.  Older Pallas releases predate
+    # InterpretParams and only offer the boolean interpreter.
+    if hasattr(pltpu, "InterpretParams"):
+        return pltpu.InterpretParams(dma_execution_mode="eager")
+    return True
 
 
 def cdiv(a: int, b: int) -> int:

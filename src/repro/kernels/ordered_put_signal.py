@@ -49,10 +49,17 @@ def _put_signal_kernel(x_ref, flag_ref, o_ref, oflag_ref,
 
 
 def put_signal(x, flag, *, axis: str, axis_size: int, shift: int = 1,
-               ordered: bool = True):
+               ordered: bool = True, config=None):
     """Ring put of ``x`` plus a flag word; returns (received, received_flag).
 
-    Call inside ``shard_map``.  ``ordered=True`` is the paper's P2 path."""
+    Call inside ``shard_map``.  ``ordered=True`` is the paper's P2 path.
+
+    ``config``: optionally derive the path from a
+    :class:`repro.core.rma.WindowConfig` — the same info object that selects
+    the path in the ``Window`` emulation layer — so one declaration drives
+    both the HLO model and this kernel twin."""
+    if config is not None:
+        ordered = config.order
     return pl.pallas_call(
         functools.partial(_put_signal_kernel, axis=axis, shift=shift,
                           axis_size=axis_size, ordered=ordered),

@@ -80,9 +80,22 @@ def _ar_kernel(x_ref, o_ref, recv_ref, acc_vmem, in_vmem, send_sem, recv_sem,
     jax.lax.fori_loop(0, n - 1, ag_body, 0)
 
 
-def ring_all_reduce(x, *, axis: str, axis_size: int):
+def ring_all_reduce(x, *, axis: str, axis_size: int, config=None):
     """All-reduce-sum ``x`` (leading dim divisible by axis_size) across the
-    ring.  Call inside ``shard_map``; returns the reduced array."""
+    ring.  Call inside ``shard_map``; returns the reduced array.
+
+    ``config``: optionally validate against a
+    :class:`repro.core.rma.WindowConfig`.  This kernel *is* the P2-ordered
+    channel (hops chain on semaphore pairs with no per-hop completion ack),
+    so a window config that did not declare ``order=True`` must not be
+    lowered to it — the emulation layer's ``rma_all_reduce(order=False)``
+    is the faithful fallback."""
+    if config is not None and not config.order:
+        raise ValueError(
+            "ring_all_reduce is the mpi_win_order=true fast path; the "
+            "supplied WindowConfig declares order=False — use "
+            "repro.core.rma.rma_all_reduce(order=False) for the flush-"
+            "separated baseline")
     n = axis_size
     orig = x.shape[0]
     pad = (-orig) % n

@@ -6,9 +6,7 @@ dry-run forces a 512-device host platform while tests/benches run on 1.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
-
+from repro.compat import make_mesh
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.sharding import DEFAULT_RULES
 
@@ -17,13 +15,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2×16×16 = 512 chips for the two-pod mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over host (CPU) devices for tests/examples."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"))
 
 
 MODEL_AXIS_SIZE = 16  # both production meshes have model=16

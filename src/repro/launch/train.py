@@ -76,6 +76,11 @@ def train(arch: str, *, tiny: bool = True, steps: int = 100,
     for step in range(start_step, steps):
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
         if fail_at_step is not None and step == fail_at_step:
+            if mgr is not None:
+                # the preemption notice's grace period: let the in-flight
+                # async checkpoint land before the process dies, so the
+                # latest completed save is durable
+                mgr.wait()
             raise RuntimeError(f"simulated preemption at step {step}")
         monitor.start()
         params, opt_state, metrics = step_fn(params, opt_state, batch)

@@ -24,7 +24,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.rma import DynamicWindow, WindowConfig, memhandle_create
+from repro.core.rma import (
+    DynamicWindow,
+    WindowConfig,
+    memhandle_create,
+    memhandle_release,
+    win_from_memhandle,
+)
 
 Array = jax.Array
 
@@ -92,10 +98,12 @@ class PagedKVWindow:
                              self.live.at[page].set(True), s)
 
     def free_page(self, page: int) -> "PagedKVWindow":
-        """Detach + epoch bump: all outstanding handles for the page become
-        stale; remote writes through them are dropped and counted."""
-        win = self.window.detach(page)
-        win = win._with_dyn(epoch=win.epoch + 1)
+        """Release through the substrate's consolidated lifetime machinery:
+        ``memhandle_release`` invalidates the slot, bumps the traced epoch
+        (stale remote writes are dropped and counted) and records the release
+        in the dup family's flush queues, so statically-created handle
+        windows for this page raise on use-after-free."""
+        win = memhandle_release(self.window, page)
         return PagedKVWindow(win, self.handles.at[page].set(0),
                              self.live.at[page].set(False), self.spec)
 
@@ -116,15 +124,37 @@ class PagedKVWindow:
         return flat.reshape(2, s.page_tokens, s.kv_heads, s.head_dim)
 
     def put_page_remote(self, page: int, kv: Array, perm,
-                        stream: int = 0) -> "PagedKVWindow":
+                        stream: int = 0, *, order: bool = True,
+                        ) -> "PagedKVWindow":
         """Disaggregated path: push a filled page into a peer's pool through
-        its memory handle — one RDMA phase, no target involvement."""
-        from repro.core.rma import win_from_memhandle
-        mh = self.handles[page]
-        mhwin = win_from_memhandle(self.window, mh)
+        its memory handle — one RDMA phase, no target involvement.
+
+        The transfer runs on a **duplicated view** of the pool window (paper
+        P4) carrying the per-transfer config (ordered channel, thread-scope
+        completion) — same backing pool, same flush queues, zero copies —
+        instead of re-allocating or disturbing the pool's own config."""
+        xfer = self.window.dup_with_info(order=order, scope="thread")
+        mhwin = win_from_memhandle(xfer, self.handles[page], slot=page)
         mhwin = mhwin.put(kv.reshape(-1), perm, stream=stream)
         mhwin = mhwin.flush(stream)
-        return PagedKVWindow(mhwin.parent, self.handles, self.live, self.spec)
+        parent = dataclasses.replace(mhwin.parent, config=self.window.config)
+        return PagedKVWindow(parent, self.handles, self.live, self.spec)
+
+    def transfer_pages(self, pages, kvs, perm, stream: int = 0,
+                       ) -> "PagedKVWindow":
+        """Batched disaggregated push: every page is issued back-to-back on
+        one dup'd ordered view and a **single** thread-scoped flush epoch
+        completes the whole batch — the pipelined put+signal shape of the
+        cross-pod exchange, applied to KV pages.  ``pages`` must be static
+        (Python ints): the per-page handles are resolved at trace time."""
+        xfer = self.window.dup_with_info(order=True, scope="thread")
+        for page, kv in zip(pages, kvs):
+            mhwin = win_from_memhandle(xfer, self.handles[page], slot=page)
+            mhwin = mhwin.put(kv.reshape(-1), perm, stream=stream)
+            xfer = mhwin.parent
+        xfer = xfer.flush(stream)
+        parent = dataclasses.replace(xfer, config=self.window.config)
+        return PagedKVWindow(parent, self.handles, self.live, self.spec)
 
 
 __all__ = ["PageSpec", "PagedKVWindow"]

@@ -13,11 +13,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.ckpt.checkpoint import CheckpointManager
+from repro import compat
 
 tmpdir = sys.argv[1]
 
-mesh4 = jax.make_mesh((4, 1), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh4 = compat.make_mesh((4, 1), ("data", "model"))
 sh4 = NamedSharding(mesh4, P("data", None))
 state = {"w": jax.device_put(jnp.arange(64.0).reshape(8, 8), sh4),
          "b": jax.device_put(jnp.ones((8,)), NamedSharding(mesh4, P()))}
@@ -25,8 +25,7 @@ mgr = CheckpointManager(tmpdir)
 mgr.save(1, state, blocking=True)
 
 # restore onto a *different* mesh: data=2, model=2
-mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = compat.make_mesh((2, 2), ("data", "model"))
 sh2 = {"w": NamedSharding(mesh2, P("data", "model")),
        "b": NamedSharding(mesh2, P())}
 like = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}

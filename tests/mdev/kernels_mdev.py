@@ -3,14 +3,14 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import sys; sys.path.insert(0, __import__("os").path.join(__import__("os").path.dirname(__file__), "..", "..", "src"))
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 from repro.kernels import ring_put, put_signal, ring_all_reduce
 from repro.kernels import ref as R
+from repro import compat
 
 N = 8
-mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((N,), ("x",))
 def run(f, x, out_specs=P("x")):
-    return jax.jit(shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=out_specs, check_vma=False))(x)
+    return jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=out_specs, check_vma=False))(x)
 
 x = jnp.arange(N*32, dtype=jnp.float32)
 out = run(lambda s: ring_put(s, axis="x", axis_size=N), x)

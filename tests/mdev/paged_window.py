@@ -1,7 +1,9 @@
 """Paged KV window semantics across 8 devices (P5 serving integration).
 
-Asserts: handle-based page push lands; free bumps the epoch so stale-handle
-writes are dropped and counted; re-allocated pages get fresh handles.
+Asserts: handle-based page push lands; the batched ``transfer_pages`` path
+(one dup'd ordered view, one flush epoch for the whole batch) lands every
+page; free bumps the epoch so stale-handle writes are dropped and counted;
+re-allocated pages get fresh handles.
 """
 import os
 import sys
@@ -15,9 +17,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.rma import win_from_memhandle
 from repro.serve.paged import PagedKVWindow, PageSpec
+from repro import compat
 
 N = 8
-mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((N,), ("x",))
 spec = PageSpec(page_tokens=8, kv_heads=2, head_dim=16, n_pages=3)
 perm = [(i, (i + 1) % N) for i in range(N)]
 
@@ -32,6 +35,12 @@ def scenario(_):
     pool = pool.put_page_remote(1, kv * 2, perm)
     got_local = pool.read_page(0)[0, 0, 0, 0]
     got_remote = pool.read_page(1)[0, 0, 0, 0]
+    # batched transfer: pages 0 and 2 pushed back-to-back through one dup'd
+    # view, one flush epoch for the whole batch
+    pool = pool.alloc_page(2)
+    pool = pool.transfer_pages([0, 2], [kv * 3, kv * 4], perm)
+    got_batch0 = pool.read_page(0)[0, 0, 0, 0]
+    got_batch2 = pool.read_page(2)[0, 0, 0, 0]
     # free page 1: outstanding handles become stale
     stale_handle = pool.handles[1]
     pool = pool.free_page(1)
@@ -41,15 +50,18 @@ def scenario(_):
         mhw.parent.buffer, spec.page_elems, 4, axis=0)
     errs = mhw.err_count.astype(jnp.float32)
     return jnp.concatenate([got_local[None], got_remote[None],
+                            got_batch0[None], got_batch2[None],
                             after_stale, errs[None]])
 
 
-g = jax.jit(jax.shard_map(scenario, mesh=mesh, in_specs=P(),
+g = jax.jit(compat.shard_map(scenario, mesh=mesh, in_specs=P(),
                           out_specs=P("x"), check_vma=False))
-out = np.asarray(g(jnp.zeros((1,)))).reshape(N, 7)
+out = np.asarray(g(jnp.zeros((1,)))).reshape(N, 9)
 assert (out[:, 0] == 3.0).all(), out[:, 0]       # local write
 assert (out[:, 1] == 6.0).all(), out[:, 1]       # handle-based remote push
+assert (out[:, 2] == 9.0).all(), out[:, 2]       # batched transfer, page 0
+assert (out[:, 3] == 12.0).all(), out[:, 3]      # batched transfer, page 2
 # freed page keeps its old contents (6.0); the stale 99-write must NOT land
-assert (out[:, 2:6] == 6.0).all(), out[:, 2:6]
-assert (out[:, 6] == 1.0).all(), out[:, 6]       # ...and counted
+assert (out[:, 4:8] == 6.0).all(), out[:, 4:8]
+assert (out[:, 8] == 1.0).all(), out[:, 8]       # ...and counted
 print("PAGED WINDOW OK")

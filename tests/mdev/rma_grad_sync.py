@@ -21,9 +21,10 @@ from repro.configs.tiny import tiny_config
 from repro.core.rma import rma_all_reduce
 from repro.models import build_model
 from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+from repro import compat
 
 N = 8
-mesh = jax.make_mesh((N,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((N,), ("data",))
 
 cfg = tiny_config("qwen3-4b")
 model = build_model(cfg)
@@ -66,7 +67,7 @@ def dp_step(params, opt, batch):
     return new_params, mean_loss
 
 
-step = jax.jit(jax.shard_map(
+step = jax.jit(compat.shard_map(
     dp_step, mesh=mesh,
     in_specs=(P(), P(), P("data")),
     out_specs=(P(), P()),

@@ -4,14 +4,14 @@ import os, sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 from repro.core.rma import Window, WindowConfig, rma_all_reduce, put_signal
+from repro import compat
 
 N = 8
-mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((N,), ("x",))
 
 def count_cp(f):
-    g = jax.jit(shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
     txt = g.lower(jnp.zeros((N*4,), jnp.float32)).compile().as_text()
     return txt.count("collective-permute(")  , txt.count("collective-permute-start(")
 

@@ -5,16 +5,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro import compat
 from repro.core.rma import (Window, WindowConfig, DynamicWindow, memhandle_create,
                             win_from_memhandle, memhandle_release, rma_all_reduce,
                             put_signal, win_op_intrinsic)
 
 N = 8
-mesh = jax.make_mesh((N,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((N,), ("x",))
 
 def run(f, *args, in_specs=P(), out_specs=P("x")):
-    return jax.jit(shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs))(*args)
+    return jax.jit(compat.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs))(*args)
 
 # --- basic put: rank 0 puts [1,2,3,4] into rank 1 at offset 2
 def f1(_):

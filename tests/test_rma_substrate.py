@@ -1,0 +1,181 @@
+"""Substrate-layer semantics: zero-copy dup, scope-aware flush queues, and
+the P5 use-after-release lifetime guarantee.
+
+These are trace-level properties of the shared substrate, so a 1-device mesh
+is enough — what matters is which Python-side queue/lifetime state the views
+share, not where data lands.  Multi-device data-landing semantics are covered
+by ``tests/mdev/rma_semantics.py``.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.rma import (
+    DynamicWindow,
+    Window,
+    WindowConfig,
+    memhandle_create,
+    memhandle_release,
+    win_from_memhandle,
+)
+
+
+def _run1(f, n_out: int = 4):
+    """Trace+run ``f(buf)`` on a 1-device mesh (ppermute needs a named axis)."""
+    mesh = compat.make_mesh((1,), ("x",))
+    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                                 check_vma=False))
+    return g(jnp.zeros((n_out,), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# P4: dup'd windows share one backing buffer but hold independent configs
+# ---------------------------------------------------------------------------
+
+
+def test_dup_shares_backing_storage():
+    win = Window.allocate(jnp.zeros((8,)), "x", 1, WindowConfig(max_streams=2))
+    dup = win.dup_with_info(order=True, scope="thread")
+    # one substrate instance — shared backing buffer, tokens, flush queues
+    assert dup.substrate is win.substrate
+    assert dup.buffer is win.buffer
+    assert dup.tokens is win.tokens
+    assert dup.group is win.group
+
+
+def test_dup_configs_are_independent():
+    win = Window.allocate(jnp.zeros((8,)), "x", 1, WindowConfig(max_streams=2))
+    dup = win.dup_with_info(order=True, scope="thread")
+    # the dup took the new info keys; the parent kept its own
+    assert dup.config.order is True and dup.config.scope == "thread"
+    assert win.config.order is False and win.config.scope == "process"
+    # mutating one config never affects the sibling (configs are frozen;
+    # replace builds a fresh one and leaves both views' configs untouched)
+    changed = dup.config.replace(order=False)
+    assert changed.order is False
+    assert dup.config.order is True
+    assert win.config.order is False
+    # ...and a second-generation dup still shares the one substrate
+    dup2 = dup.dup_with_info(scope="process")
+    assert dup2.substrate is win.substrate
+    assert dup2.config.scope == "process" and dup.config.scope == "thread"
+
+
+def test_dup_applies_to_dynamic_windows_too():
+    win = DynamicWindow.create_dynamic(jnp.zeros((8,)), "x", 1,
+                                       WindowConfig(max_streams=2))
+    dup = win.dup_with_info(order=True)
+    assert isinstance(dup, DynamicWindow)
+    assert dup.substrate is win.substrate
+    assert dup.regs is win.regs
+    assert dup.config.order and not win.config.order
+
+
+# ---------------------------------------------------------------------------
+# P1: scope-aware flush queues
+# ---------------------------------------------------------------------------
+
+
+def test_thread_scope_flush_drains_one_queue():
+    def step(buf):
+        cfg = WindowConfig(scope="thread", max_streams=2)
+        win = Window.allocate(buf, "x", 1, cfg)
+        win = win.put(jnp.ones((2,)), [(0, 0)], offset=0, stream=0)
+        win = win.put(jnp.ones((2,)), [(0, 0)], offset=2, stream=1)
+        assert set(win.group.pending) == {0, 1}
+        win = win.flush(stream=0)
+        # P1: only stream 0's queue drained; stream 1 still in flight
+        assert set(win.group.pending) == {1}
+        return win.buffer
+
+    _run1(step)
+
+
+def test_process_scope_flush_coalesces_all_queues():
+    def step(buf):
+        cfg = WindowConfig(scope="process", max_streams=2)
+        win = Window.allocate(buf, "x", 1, cfg)
+        win = win.put(jnp.ones((2,)), [(0, 0)], offset=0, stream=0)
+        win = win.put(jnp.ones((2,)), [(0, 0)], offset=2, stream=1)
+        win = win.flush(stream=0)  # named stream is irrelevant: drain-all
+        assert not win.group.pending
+        return win.buffer
+
+    _run1(step)
+
+
+def test_flush_on_dup_covers_sibling_ops():
+    """Synchronization applied to one handle applies to the whole family
+    (paper §3) — ops issued via the parent drain through the dup's flush."""
+    def step(buf):
+        win = Window.allocate(buf, "x", 1, WindowConfig(max_streams=2))
+        dup = win.dup_with_info(scope="process")
+        win = win.put(jnp.ones((2,)), [(0, 0)], offset=0, stream=0)
+        assert set(dup.group.pending) == {0}
+        dup = dup.flush()
+        assert not win.group.pending  # same queues: the family is synchronized
+        return win.buffer
+
+    _run1(step)
+
+
+# ---------------------------------------------------------------------------
+# P5: memory-handle lifetime guarantee
+# ---------------------------------------------------------------------------
+
+
+def test_memhandle_use_after_release_raises():
+    def step(buf):
+        win = DynamicWindow.create_dynamic(buf, "x", 1, am_slots=1, am_msg=1)
+        win = win.attach(0, offset=0, size=4)
+        mh = memhandle_create(win, 0)
+        mhwin = win_from_memhandle(win, mh, slot=0)
+        # valid while the registration is live
+        mhwin = mhwin.put(jnp.ones((2,)), [(0, 0)], offset=0)
+        released = memhandle_release(mhwin.free(), 0)
+        # the handle window was created *before* the release: every
+        # subsequent operation through it is erroneous and must raise
+        with pytest.raises(RuntimeError, match="after\\s+memhandle_release"):
+            mhwin.put(jnp.ones((2,)), [(0, 0)], offset=0)
+        with pytest.raises(RuntimeError, match="after\\s+memhandle_release"):
+            mhwin.get([(0, 0)], size=1)
+        with pytest.raises(RuntimeError, match="after\\s+memhandle_release"):
+            mhwin.accumulate(jnp.ones((1,)), [(0, 0)])
+        return released.buffer
+
+    _run1(step)
+
+
+def test_memhandle_created_after_release_uses_traced_check():
+    """A handle window built from a stale handle *after* the release cannot
+    be rejected statically (the handle may be runtime data); the traced
+    epoch check drops the write and counts it instead."""
+    def step(buf):
+        win = DynamicWindow.create_dynamic(buf, "x", 1, am_slots=1, am_msg=1)
+        win = win.attach(0, offset=0, size=4)
+        mh = memhandle_create(win, 0)
+        win = memhandle_release(win, 0)
+        mhwin = win_from_memhandle(win, mh, slot=0)  # post-release creation
+        mhwin = mhwin.put(jnp.full((2,), 9.0), [(0, 0)], offset=0)
+        return jnp.concatenate(
+            [mhwin.parent.buffer, mhwin.err_count[None].astype(jnp.float32)])
+
+    out = _run1(step, n_out=4)
+    assert (jnp.asarray(out)[:4] == 0).all()  # stale write dropped
+    assert out[4] == 1  # ...and observable in the error counter
+
+
+def test_memhandle_without_slot_hint_never_raises_statically():
+    def step(buf):
+        win = DynamicWindow.create_dynamic(buf, "x", 1, am_slots=1, am_msg=1)
+        win = win.attach(0, offset=0, size=4)
+        mh = memhandle_create(win, 0)
+        mhwin = win_from_memhandle(win, mh)  # handle is anonymous runtime data
+        memhandle_release(win, 0)
+        # no static slot knowledge -> falls back to the traced check
+        mhwin = mhwin.put(jnp.ones((2,)), [(0, 0)], offset=0)
+        return mhwin.parent.buffer
+
+    _run1(step)

@@ -154,9 +154,8 @@ def test_model_flops_moe_counts_active_only():
 
 def test_sharding_rules_dedup():
     from repro.sharding import ShardingRules
-    import jax as j
-    mesh = j.make_mesh((1, 1), ("data", "model"),
-                       axis_types=(j.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     r = ShardingRules(mesh, {"batch": ("pod", "data"), "embed": ("data",),
                              "heads": "model"})
     # "pod" doesn't exist on this mesh: dropped; duplicate axis use: dropped
