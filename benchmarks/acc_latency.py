@@ -1,0 +1,151 @@
+"""Paper §2.3 / Fig. 5-style sweep — accumulate latency across engine paths.
+
+Measures accumulate+flush per-op latency over element counts for each of the
+engine's lowered paths (``repro.core.rma.accumulate``):
+
+* ``generic``   — undeclared usage: the conservative software/AM path every
+  hint-less ``MPI_Accumulate`` takes (payload + completion ack + target
+  participation) — the paper's motivation case.
+* ``intrinsic`` — declared single-op usage *forced* onto the NIC-atomic
+  path at every count (``max_atomic_elems`` = sweep max): the latency-
+  optimized side of the crossover.
+* ``tiled``     — declared usage *forced* onto the tiled VPU bandwidth path
+  (``max_atomic_elems=1``): the large-count side.
+* ``routed``    — declared usage with default crossover resolution: what the
+  router actually picks per count (the ``derived`` column records the path).
+
+The intrinsic-vs-tiled columns are what
+``repro.core.rma.accumulate.calibrated_crossover`` parses to calibrate the
+routing crossover; ``generic`` vs the rest is the paper's headline
+"declare your usage, win latency" gap.
+
+Writes ``benchmarks/results/BENCH_acc_latency.json`` directly (also when run
+standalone, so CI smoke produces the artifact).  ``--table`` renders an
+existing artifact as the markdown table embedded in
+``docs/accumulate_paths.md``.
+"""
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._harness import (N_DEV, emit, mesh1d, require_devices,
+                                 scan_op, smap, time_fn)
+from repro.core.rma import Window, WindowConfig
+from repro.core.rma import accumulate as acc_engine
+
+COUNTS = [1, 2, 4, 8, 16, 64, 256, 1024]
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+JSON_PATH = os.path.join(RESULTS_DIR, "BENCH_acc_latency.json")
+
+
+def _variant_cfgs(max_count: int):
+    return {
+        "generic": WindowConfig(scope="thread", order=True),
+        "intrinsic": WindowConfig(scope="thread", order=True, same_op="sum",
+                                  max_atomic_elems=max_count),
+        "tiled": WindowConfig(scope="thread", order=True, same_op="sum",
+                              max_atomic_elems=1),
+        "routed": WindowConfig(scope="thread", order=True, same_op="sum"),
+    }
+
+
+def render_table(path: str = JSON_PATH) -> str:
+    """Markdown table from a BENCH_acc_latency.json artifact (docs use this:
+    ``python -m benchmarks.acc_latency --table``)."""
+    with open(path) as f:
+        doc = json.load(f)
+    cells: dict[int, dict[str, tuple[float, str]]] = {}
+    for row in doc["rows"]:
+        parts = row["name"].split("/")
+        if len(parts) != 3:
+            continue
+        _, variant, count = parts
+        cells.setdefault(int(count), {})[variant] = (
+            row["us_per_call"], row.get("derived", ""))
+    counts = sorted(cells)
+    lines = [
+        "| elems | generic µs | intrinsic µs | tiled µs | routed µs | routed path |",
+        "|---:|---:|---:|---:|---:|:---|",
+    ]
+    for c in counts:
+        row = cells[c]
+
+        def us(v):
+            return f"{row[v][0]:.1f}" if v in row else "—"
+
+        routed_path = ""
+        if "routed" in row:
+            derived = row["routed"][1]
+            routed_path = next((p.split("=", 1)[1] for p in derived.split()
+                                if p.startswith("path=")), "")
+        lines.append(f"| {c} | {us('generic')} | {us('intrinsic')} | "
+                     f"{us('tiled')} | {us('routed')} | {routed_path} |")
+    crossover = doc.get("crossover")
+    if crossover is not None:
+        lines.append(f"\nCalibrated crossover: **{crossover} elements** "
+                     "(largest count where the intrinsic path still wins).")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--counts", type=str, default=None,
+                    help="comma-separated f32 element counts")
+    ap.add_argument("--iters", type=int, default=15)
+    ap.add_argument("--table", action="store_true",
+                    help="render the existing JSON artifact as markdown and exit")
+    args = ap.parse_args()
+    if args.table:
+        print(render_table())
+        return
+    require_devices()
+    mesh = mesh1d()
+    perm = [(i, (i + 1) % N_DEV) for i in range(N_DEV)]
+    counts = ([int(c) for c in args.counts.split(",")] if args.counts
+              else COUNTS)
+    rows = []
+    for count in counts:
+        data = jnp.ones((count,), jnp.float32)
+        pool = jnp.zeros((2 * max(count, 8),), jnp.float32)
+        for variant, cfg in _variant_cfgs(max(counts)).items():
+            path = acc_engine.route("sum", count, jnp.float32, cfg)
+            if variant == "tiled" and path != acc_engine.PATH_TILED:
+                # a 1-element accumulate IS atomic — the tiled path cannot
+                # be forced there (max_atomic_elems >= 1), so emit no row
+                # rather than a mislabelled intrinsic timing
+                continue
+
+            def body(carry, cfg=cfg):
+                buf, d = carry
+                win = Window.allocate(buf, "x", N_DEV, cfg)
+                win = win.accumulate(d, perm, op="sum", offset=0)
+                win = win.flush(stream=0)
+                return win.buffer, d
+
+            from jax.sharding import PartitionSpec as P
+            fn, k = scan_op(body, 16)
+            g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
+            us = time_fn(g, ((pool, data),), k_inner=k, iters=args.iters)
+            name = f"acc_latency/{variant}/{count}"
+            derived = f"fig5-sweep path={path} op=sum"
+            emit(name, us, derived)
+            rows.append({"name": name, "us_per_call": us, "derived": derived})
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump({"section": "acc_latency", "rows": rows}, f, indent=1)
+    # the stored crossover is derived by the engine's own parser (single
+    # source of the tolerance rule), from the artifact just written
+    crossover = acc_engine.calibrated_crossover(JSON_PATH)
+    with open(JSON_PATH, "w") as f:
+        json.dump({"section": "acc_latency", "rows": rows,
+                   "crossover": crossover}, f, indent=1)
+    print(f"# wrote {JSON_PATH} ({len(rows)} rows, crossover={crossover})",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

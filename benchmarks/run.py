@@ -11,6 +11,8 @@ Sections:
   flush_scope      — paper Fig. 8/9  (P1 thread-scope flushes)
   ordering         — paper Fig. 10/11 (P2 ordered sequences)
   progress         — paper Fig. 5   (one-sided progress)
+  acc_latency      — paper §2.3: accumulate-engine path sweep (intrinsic /
+                     tiled / generic crossover; calibrates the router)
   rma_collectives  — beyond-paper: one-sided ring collectives
   roofline         — §Roofline summary from the dry-run artifacts (if present)
 """
@@ -26,6 +28,7 @@ MODULES = [
     "benchmarks.flush_scope",
     "benchmarks.ordering",
     "benchmarks.progress",
+    "benchmarks.acc_latency",
     "benchmarks.rma_collectives",
 ]
 
@@ -68,8 +71,18 @@ def run_module(mod: str) -> int:
         os.makedirs(RESULTS_DIR, exist_ok=True)
         section = mod.rsplit(".", 1)[-1]
         path = os.path.join(RESULTS_DIR, f"BENCH_{section}.json")
+        doc = {"section": section, "rows": rows}
+        # some modules (acc_latency) write their own artifact with extra
+        # top-level fields (e.g. the calibrated crossover) — preserve them
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    old = json.load(f)
+                doc.update({k: v for k, v in old.items() if k not in doc})
+            except (OSError, ValueError):
+                pass
         with open(path, "w") as f:
-            json.dump({"section": section, "rows": rows}, f, indent=1)
+            json.dump(doc, f, indent=1)
         print(f"# wrote {path} ({len(rows)} rows)", flush=True)
     return proc.returncode
 

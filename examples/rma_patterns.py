@@ -23,7 +23,10 @@ from repro import compat
 from repro.core.rma import (
     Window,
     WindowConfig,
+    accumulate_signal,
+    crossover_elems,
     put_signal,
+    route_accumulate,
     win_op_intrinsic,
 )
 
@@ -54,15 +57,48 @@ def listing2(buf):
 
 
 def dup_demo(buf):
-    """P4: one window, two differently-configured handles in one region."""
+    """P4: one window, two differently-configured handles in one region.
+
+    The latency handle additionally declares a same-op streak (paper §2.3),
+    so its flag accumulate routes through the engine's intrinsic path — no
+    private APIs, the declaration alone selects the specialization."""
     win = Window.allocate(buf, "x", N, WindowConfig(max_streams=2))
-    latency = win.dup_with_info(order=True, scope="thread")     # signals
+    latency = win.dup_with_info(order=True, scope="thread",
+                                same_op="sum")                   # signals
     bulk = win                                                   # bandwidth
     bulk = bulk.put(jnp.ones((8,)), perm, offset=0, stream=0)
-    latency = latency._accumulate_intrinsic(
-        jnp.ones((1,)), perm, op="sum", offset=8, stream=1)
+    latency = latency.accumulate(jnp.ones((1,)), perm, op="sum",
+                                 offset=8, stream=1)
     # synchronization on either handle covers both (shared group)
     return latency.flush(stream=1).buffer
+
+
+def acc_declared(buf):
+    """Same-op dup tour: a declared sum streak routes specialized (1 phase
+    per accumulate)."""
+    win = Window.allocate(buf, "x", N, WindowConfig(scope="thread"))
+    sumw = win.dup_with_info(same_op="sum")
+    sumw = sumw.accumulate(jnp.ones((4,)), perm, op="sum", offset=0)
+    return sumw.flush(stream=0).buffer
+
+
+def acc_generic(buf):
+    """The hint-less baseline: the same accumulate takes the conservative
+    software path and pays a completion-ack phase per op (paper Fig. 5)."""
+    win = Window.allocate(buf, "x", N, WindowConfig(scope="thread"))
+    win = win.accumulate(jnp.ones((4,)), perm, op="sum", offset=0)
+    return win.flush(stream=0).buffer
+
+
+def acc_fused_signal(buf):
+    """Fused accumulate+signal: under P2 the flag chains behind the routed
+    update with no intermediate flush (Listing 2 applied to accumulates)."""
+    win = Window.allocate(buf, "x", N,
+                          WindowConfig(scope="thread", order=True,
+                                       same_op="sum"))
+    win = accumulate_signal(win, jnp.ones((4,)), perm, op="sum",
+                            data_offset=0, flag_offset=8)
+    return win.flush(stream=0).buffer
 
 
 def main():
@@ -71,13 +107,23 @@ def main():
     print(f"  listing1 (put;flush;signal;flush): {p1}")
     print(f"  listing2 (ordered put+signal;flush): {p2}  <- P2 saves {p1-p2}")
     print(f"  dup_with_info mixed-config region: {phases(dup_demo)}")
+    # the accumulate engine: declared same-op streak vs hint-less baseline
+    pd, pg = phases(acc_declared), phases(acc_generic)
+    print(f"  accumulate via same_op dup: {pd}")
+    print(f"  accumulate undeclared:      {pg}  <- the generic-path ack tax")
+    print(f"  fused accumulate+signal:    {phases(acc_fused_signal)}")
     # P3: the capability query applications use to pick an algorithm
     print("win_op_intrinsic('sum,cas', 8, int32):",
           win_op_intrinsic("sum,cas", 8, jnp.int32))
     print("win_op_intrinsic('sum', 4096, float32):",
           win_op_intrinsic("sum", 4096, jnp.float32),
-          "(large counts -> software/bandwidth path)")
+          "(large counts -> tiled/bandwidth path)")
+    cfg = WindowConfig(same_op="sum")
+    print("crossover_elems(default):", crossover_elems(cfg),
+          "| route(sum, 4):", route_accumulate("sum", 4, jnp.float32, cfg),
+          "| route(sum, 4096):", route_accumulate("sum", 4096, jnp.float32, cfg))
     assert p2 < p1
+    assert pd < pg, "declared accumulate must lower with fewer phases"
     print("RMA_PATTERNS OK")
 
 

@@ -12,6 +12,12 @@ Public surface:
 * :func:`memhandle_create` / :func:`win_from_memhandle` /
   :func:`memhandle_release` — P5 memory handles (zero-overhead dynamic RMA).
 * :func:`win_op_intrinsic` — P3 hardware-accumulate capability query.
+* the op-specialized accumulate engine (paper §2.3, ``accumulate.py``):
+  :func:`route_accumulate` / :func:`routed_accumulate` (crossover routing of
+  every accumulate onto the intrinsic / tiled / software path),
+  :func:`accumulate_signal` (fused update+flag), :func:`crossover_elems`
+  (env > declared ``max_atomic_elems`` > benchmark calibration > envelope
+  default) — see ``docs/accumulate_paths.md``.
 * one-sided collectives: :func:`rma_all_reduce`, :func:`ring_reduce_scatter`,
   :func:`ring_all_gather`, :func:`put_signal`, :func:`put_signal_pipelined`.
 """
@@ -22,6 +28,7 @@ from repro.core.rma.substrate import (
     Substrate,
 )
 from repro.core.rma.window import (
+    KNOWN_ACC_OPS,
     Window,
     WindowConfig,
 )
@@ -39,6 +46,16 @@ from repro.core.rma.intrinsic import (
     INTRINSIC_OPS,
     op_is_intrinsic,
     win_op_intrinsic,
+)
+from repro.core.rma.accumulate import (
+    PATH_INTRINSIC,
+    PATH_SOFTWARE,
+    PATH_TILED,
+    accumulate_signal,
+    apply_op,
+    crossover_elems,
+    route_accumulate,
+    routed_accumulate,
 )
 from repro.core.rma.collectives import (
     put_signal,
@@ -66,6 +83,15 @@ __all__ = [
     "INTRINSIC_OPS",
     "INTRINSIC_DTYPES",
     "INTRINSIC_MAX_COUNT",
+    "KNOWN_ACC_OPS",
+    "PATH_INTRINSIC",
+    "PATH_TILED",
+    "PATH_SOFTWARE",
+    "apply_op",
+    "route_accumulate",
+    "routed_accumulate",
+    "accumulate_signal",
+    "crossover_elems",
     "rma_all_reduce",
     "ring_reduce_scatter",
     "ring_all_gather",

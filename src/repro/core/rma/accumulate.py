@@ -1,0 +1,344 @@
+"""The op-specialized accumulate engine — crossover routing over the substrate.
+
+The paper's headline win ("improved accumulate latencies", §2.3/§4) comes
+from letting applications *declare* anticipated accumulate usage — which
+operations, same-op streaks, atomic-envelope sizes — so the implementation
+can specialize the dispatch instead of taking the conservative generic path
+(foMPI's envelope-driven dispatch at scale makes the same argument).  This
+module is that dispatch for the JAX substrate: every ``Window.accumulate``
+(and the routed ring hops of ``collectives.py``) flows through :func:`route`,
+which picks one of three lowered paths:
+
+``intrinsic``
+    Declared single-op usage, count at or below the **crossover**: the
+    NIC/ICI-atomic path — one communication phase, no target-CPU
+    involvement (``Substrate.rmw(software=False)`` with inline combine;
+    kernel twin: ``repro.kernels.intrinsic.ring_accumulate``).
+
+``tiled``
+    Declared usage above the crossover (or a dtype outside the atomic
+    envelope): the bandwidth path — one phase ships the update, the
+    target's vector units apply it through the tiled VPU kernel
+    (``repro.kernels.accumulate``).
+
+``software``
+    Undeclared usage: the MPI-faithful conservative path.  The operation is
+    shipped as an active message; retirement costs a completion-ack phase
+    and the landing depends on the target's participation in the runtime
+    (paper Fig. 5).
+
+Declaration means one of:
+
+* ``WindowConfig.same_op == op`` — the same-op streak hint, typically
+  carried on a dup'd view (paper P4: one window, per-use configs), or
+* ``WindowConfig.assert_accumulate_intrinsic`` — the paper's P3 assertion
+  (which additionally *requires* the op to sit inside the hardware
+  envelope; violations raise, as before).
+
+The **crossover point** (element count where the latency-optimized atomic
+path stops beating the bandwidth path) resolves in priority order:
+
+1. ``RMA_ACC_CROSSOVER`` environment variable — operator override;
+2. ``WindowConfig.max_atomic_elems`` — the application's declared
+   atomic-envelope size;
+3. the benchmark-calibrated value parsed from
+   ``benchmarks/results/BENCH_acc_latency.json`` (written by
+   ``benchmarks/acc_latency.py``; path overridable via
+   ``RMA_ACC_BENCH_JSON``);
+4. the hardware envelope default ``INTRINSIC_MAX_COUNT``.
+
+See ``docs/accumulate_paths.md`` for the full tour.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rma.intrinsic import INTRINSIC_MAX_COUNT, op_is_intrinsic
+from repro.core.rma.substrate import Substrate
+
+Array = jax.Array
+Perm = Sequence[tuple[int, int]]
+
+PATH_INTRINSIC = "intrinsic"
+PATH_TILED = "tiled"
+PATH_SOFTWARE = "software"
+
+
+def apply_op(current: Array, update: Array, op: str) -> Array:
+    """Element-wise combine for one accumulate op.
+
+    Delegates to the kernels' shared op table
+    (:func:`repro.kernels.common.combine_op`), so the HLO-emulation paths
+    and the Pallas kernel twins compute from one definition."""
+    from repro.kernels.common import combine_op
+
+    return combine_op(current, update.astype(current.dtype), op)
+
+#: Ops the tiled VPU kernel implements (see ``repro.kernels.accumulate``).
+TILED_OPS = frozenset({"sum", "min", "max", "replace", "prod",
+                       "band", "bor", "bxor"})
+
+_calibration_cache: dict[str, int | None] = {}
+
+
+def _default_bench_json() -> str:
+    override = os.environ.get("RMA_ACC_BENCH_JSON")
+    if override:
+        return override
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(here))))
+    return os.path.join(root, "benchmarks", "results", "BENCH_acc_latency.json")
+
+
+def calibrated_crossover(path: str | None = None) -> int | None:
+    """Crossover parsed from a ``BENCH_acc_latency.json`` artifact.
+
+    The benchmark measures the forced-``intrinsic`` and forced-``tiled``
+    paths per element count; the calibrated crossover is the largest count
+    where the intrinsic path is still at least as fast.  Returns ``None``
+    when no (parseable) artifact exists.
+
+    Default-path results are cached **per resolved path** for the process
+    lifetime: changing ``RMA_ACC_BENCH_JSON`` takes effect on the next call
+    (new path, fresh parse), while re-parsing the *same* file is
+    deliberately avoided — routing must be trace-stable even if the
+    artifact is rewritten mid-process.  An explicit ``path`` bypasses the
+    cache entirely.
+    """
+    if path is not None:
+        return _parse_crossover(path)
+    resolved = _default_bench_json()
+    if resolved not in _calibration_cache:
+        _calibration_cache[resolved] = _parse_crossover(resolved)
+    return _calibration_cache[resolved]
+
+
+def _parse_crossover(path: str) -> int | None:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return None
+    by_path: dict[str, dict[int, float]] = {PATH_INTRINSIC: {}, PATH_TILED: {}}
+    for row in doc.get("rows", []):
+        parts = str(row.get("name", "")).split("/")
+        if len(parts) != 3 or parts[0] != "acc_latency":
+            continue
+        variant, count = parts[1], parts[2]
+        if variant in by_path and count.isdigit():
+            by_path[variant][int(count)] = float(row["us_per_call"])
+    common = sorted(set(by_path[PATH_INTRINSIC]) & set(by_path[PATH_TILED]))
+    if not common:
+        return None
+    # 0 = "measured, and the intrinsic path never wins" — distinct from
+    # None ("no calibration data"), so crossover_elems routes everything
+    # tiled instead of falling back to the envelope default the benchmark
+    # just contradicted.
+    crossover = 0
+    for count in common:
+        # 10% tolerance: the two specialized paths are near-identical around
+        # the crossover (and within noise on CPU emulation); the atomic path
+        # keeps winning until the bandwidth path is *clearly* ahead.
+        if by_path[PATH_INTRINSIC][count] <= 1.1 * by_path[PATH_TILED][count]:
+            crossover = count
+        else:
+            break
+    return crossover
+
+
+def crossover_elems(config=None) -> int:
+    """The element count at or below which declared accumulates route to the
+    intrinsic (latency) path; above it they route to the tiled (bandwidth)
+    path.  Resolution order: env override > declared ``max_atomic_elems`` >
+    benchmark calibration > hardware envelope default.
+
+    This is a *performance* threshold (which specialized path wins), used
+    only for routing declared usage; the *capability* threshold backing the
+    P3 assertion and query is :func:`declared_envelope`, which calibration
+    never touches — a benchmark artifact must not change what counts as a
+    correctness violation."""
+    env = os.environ.get("RMA_ACC_CROSSOVER")
+    if env:
+        return int(env)
+    if config is not None and config.max_atomic_elems is not None:
+        return config.max_atomic_elems
+    calibrated = calibrated_crossover()
+    return calibrated if calibrated is not None else INTRINSIC_MAX_COUNT
+
+
+def declared_envelope(config=None) -> int:
+    """The atomic-envelope *capability* threshold: the window's declared
+    ``max_atomic_elems``, else the hardware envelope.  ``win_op_intrinsic``
+    answers with this, and the ``assert_accumulate_intrinsic`` enforcement
+    checks against it, so query and assertion always agree."""
+    if config is not None and config.max_atomic_elems is not None:
+        return config.max_atomic_elems
+    return INTRINSIC_MAX_COUNT
+
+
+def route(op: str, count: int, dtype, config) -> str:
+    """Pick the lowered path for one accumulate — the engine's core decision.
+
+    Raises on declaration violations: an op other than the declared
+    ``same_op``, or an ``assert_accumulate_intrinsic`` configuration outside
+    the hardware envelope (undefined behaviour per paper §2.3).
+    """
+    dt = jnp.dtype(dtype)
+    if config.same_op is not None and op != config.same_op:
+        raise ValueError(
+            f"window declares same_op={config.same_op!r} but an accumulate "
+            f"with op={op!r} was issued — declaration violation (undefined "
+            "behaviour per paper §2.3); dup the window with the right hint")
+    if config.assert_accumulate_intrinsic:
+        # the assertion is checked against the same capability threshold the
+        # win-aware win_op_intrinsic query answers with (declared_envelope),
+        # so query and enforcement cannot disagree
+        if not op_is_intrinsic(op, count, dt, declared_envelope(config)):
+            raise ValueError(
+                "window asserts accumulate-intrinsic usage but "
+                f"op={op!r} count={count} dtype={dt} is outside the "
+                "hardware envelope (undefined behaviour per paper §2.3); "
+                "query win_op_intrinsic() first")
+        return PATH_INTRINSIC
+    if config.same_op is None:
+        # Undeclared usage: the implementation cannot anticipate the op
+        # stream, so it takes the conservative generic path (paper §2.3).
+        return PATH_SOFTWARE
+    return (PATH_INTRINSIC
+            if op_is_intrinsic(op, count, dt, crossover_elems(config))
+            else PATH_TILED)
+
+
+#: Package-level alias (the module-local name ``route`` is too generic to
+#: re-export as ``repro.core.rma.route``).
+route_accumulate = route
+
+
+def path_combine(path: str, op: str):
+    """The combine callable a routed path applies at the target — one
+    dispatch shared by ``Window``'s accumulate helpers and
+    ``MemhandleWindow.accumulate``.
+
+    ``tiled`` combines through the VPU kernel (``repro.kernels.accumulate``);
+    the intrinsic and software paths combine inline (``apply_op``) — the
+    paths differ in *phase structure* (handled by the transport), not in the
+    landed values.
+    """
+    if path == PATH_TILED:
+        from repro.kernels.accumulate import accumulate as _tiled
+
+        def combine(cur, upd):
+            out = _tiled(cur.reshape(-1), upd.reshape(-1).astype(cur.dtype),
+                         op=op)
+            return out.reshape(cur.shape)
+
+        return combine
+    return lambda cur, upd: apply_op(cur, upd, op)
+
+
+def routed_accumulate(win, data: Array, perm: Perm, *, op: str = "sum",
+                      offset=0, stream: int = 0):
+    """Dispatch one accumulate through the router (``Window.accumulate``'s
+    engine).  Returns the updated window view."""
+    path = route(op, int(data.size), data.dtype, win.config)
+    if path == PATH_INTRINSIC:
+        return win._accumulate_intrinsic(
+            data, perm, op=op, offset=offset, stream=stream)
+    if path == PATH_TILED:
+        return win._accumulate_tiled(
+            data, perm, op=op, offset=offset, stream=stream)
+    return win._accumulate_software(
+        data, perm, op=op, offset=offset, stream=stream)
+
+
+def default_flag_value(op: str, dtype) -> Array:
+    """A flag payload that observably changes a zeroed flag word under
+    ``op``, where one exists.
+
+    sum/bor/bxor/max/replace: 1 flips 0→1.  min: −1 (0 absorbs +1, so the
+    sentinel must be below the initial word; only possible for signed/float
+    dtypes).  prod and band have no such value (0 annihilates both) —
+    callers on those declarations must pre-set the flag word to the op's
+    identity or supply their own protocol; we return 1 so the wire op is
+    still well-formed, and the docstrings of the signal helpers carry the
+    caveat."""
+    dt = jnp.dtype(dtype)
+    if op == "min" and (jnp.issubdtype(dt, jnp.signedinteger)
+                        or jnp.issubdtype(dt, jnp.floating)):
+        return jnp.full((1,), -1, dt)
+    return jnp.ones((1,), dt)
+
+
+def accumulate_signal(win, data: Array, perm: Perm, *, op: str = "sum",
+                      data_offset=0, flag_offset: int, flag_value=None,
+                      stream: int = 0):
+    """Fused accumulate-with-signal: land an update *and* its completion flag
+    in one lowered sequence (the producer side of a reduction inbox).
+
+    Both the update *and* the flag route through the engine, so a same-op
+    declaration is honoured end to end: on a ``same_op`` window the flag is
+    raised with the declared op — never a second op that would violate the
+    streak the implementation specialized on.  The default ``flag_value``
+    is op-aware (:func:`default_flag_value`): observable against a zeroed
+    flag word for sum/max/bor/bxor/replace and for min on signed/float
+    dtypes (a −1 sentinel); under ``prod``/``band`` (where 0 absorbs any
+    payload) the caller must pre-set the flag word to the op's identity or
+    supply their own protocol.  Under P2 (``order=True``)
+    the flag chains behind the update on the stream's ordered channel with
+    **no** intermediate flush — the ``put_signal`` Listing-2 shape, applied
+    to accumulates (kernel twin: ``repro.kernels.ordered_put_signal.
+    accumulate_signal``).  Without P2 a full flush separates them.
+    """
+    flag_op = win.config.same_op if win.config.same_op is not None else "sum"
+    if flag_value is None:
+        flag_value = default_flag_value(flag_op, win.buffer.dtype)
+    win = routed_accumulate(win, data, perm, op=op, offset=data_offset,
+                            stream=stream)
+    if not win.config.order:
+        win = win.flush(stream if win.config.scope == "thread" else None)
+    return routed_accumulate(win, flag_value, perm, op=flag_op,
+                             offset=flag_offset, stream=stream)
+
+
+def acc_hop(sub: Substrate, config, cur: Array, piece: Array, perm: Perm, *,
+            op: str = "sum", stream: int = 0) -> tuple[Substrate, Array]:
+    """One reduce-ring hop routed through the engine: send ``piece`` along
+    ``perm``, combine what *this* device receives into ``cur``.
+
+    Routing drives the hop's phase structure: a declared same-op ring
+    (``same_op="sum"``) is the specialized path — exactly one data phase,
+    combine applied on arrival; an undeclared ring pays the conservative
+    per-hop completion ack (``Substrate.target_ack``), the generic-path tax
+    the paper's hints exist to remove.  The combine itself is local XLA
+    arithmetic on both specialized flavours — the lowered code is identical
+    to what the tiled VPU kernel (the device twin) computes per block.
+    """
+    path = route(op, int(piece.size), piece.dtype, config)
+    sub, recvd = sub.channel_send(piece, perm, stream=stream)
+    if path == PATH_SOFTWARE:
+        sub = sub.target_ack(perm, stream=stream)
+    return sub, apply_op(cur, recvd, op)
+
+
+__all__ = [
+    "PATH_INTRINSIC",
+    "PATH_TILED",
+    "PATH_SOFTWARE",
+    "TILED_OPS",
+    "apply_op",
+    "route",
+    "route_accumulate",
+    "path_combine",
+    "routed_accumulate",
+    "accumulate_signal",
+    "default_flag_value",
+    "acc_hop",
+    "crossover_elems",
+    "declared_envelope",
+    "calibrated_crossover",
+]

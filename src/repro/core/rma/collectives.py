@@ -19,10 +19,18 @@ of the training/serving runtime:
   The difference is visible both in lowered HLO (collective-permute count)
   and in wall-clock.
 
+  The reduce rings additionally declare ``same_op="sum"`` on their dup'd
+  view (``declare_op=True``, paper §2.3 hints), so every reduce-scatter hop
+  is an *accumulate routed through the op-specialized engine*
+  (``repro.core.rma.accumulate.acc_hop``): declared rings stay at one data
+  phase per hop; the undeclared baseline (``declare_op=False``) pays the
+  conservative generic-path completion ack per reduce hop.
+
 * ``put_signal``: the paper's Listing 1 vs Listing 2 producer/consumer
-  pattern — put data, then raise a flag at the target with an intrinsic
-  accumulate.  Under P2 the flag is chained behind the payload with no
-  intermediate flush.
+  pattern — put data, then raise a flag at the target with an accumulate
+  routed through the op-specialized engine (declare ``same_op`` to get the
+  1-phase intrinsic flag).  Under P2 the flag is chained behind the payload
+  with no intermediate flush.
 
 * ``put_signal_pipelined``: chunked put+signal for cross-pod gradient
   exchange (put each chunk, signal once), used by the pod-level DP sync.
@@ -40,6 +48,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.rma import accumulate as acc_engine
 from repro.core.rma.substrate import SCOPE_THREAD, Substrate, _tie
 from repro.core.rma.window import Window, WindowConfig
 
@@ -51,7 +60,7 @@ def _ring_perm(n: int, shift: int = 1):
 
 
 def _ring_substrate(x: Array, axis: str, n: int, *, order: bool,
-                    win: Window | None, streams=(0,),
+                    win: Window | None, streams=(0,), same_op: str | None = None,
                     ) -> tuple[Substrate, WindowConfig]:
     """The substrate a ring runs on, plus the config in effect.
 
@@ -65,19 +74,26 @@ def _ring_substrate(x: Array, axis: str, n: int, *, order: bool,
     about to use (their completion must not be silently absorbed into the
     ring's bookkeeping).  Without ``win``, a one-off window over ``x`` is
     allocated and the flushes are no-ops on its empty queues.
+
+    ``same_op``: the reduce rings' op declaration (paper §2.3 hints).  When
+    set, the ring's view declares single-op usage and its accumulate hops
+    route through the engine's specialized path; when ``None`` the hops are
+    undeclared and pay the conservative generic-path completion ack.
     """
+    acc_info = ({"same_op": same_op, "accumulate_ops": (same_op,)}
+                if same_op is not None else {"same_op": None})
     if win is not None:
         if max(streams) >= win.config.max_streams:
             raise ValueError(
                 f"ring needs streams {tuple(streams)} but the lent window "
                 f"has max_streams={win.config.max_streams} (dup-immutable); "
                 "allocate it with enough issue streams")
-        view = win.dup_with_info(order=order, scope=SCOPE_THREAD)
+        view = win.dup_with_info(order=order, scope=SCOPE_THREAD, **acc_info)
     else:
         view = Window.allocate(
             x, axis, n,
             WindowConfig(scope=SCOPE_THREAD, order=order,
-                         max_streams=len(streams)))
+                         max_streams=len(streams), **acc_info))
     sub = view.substrate
     for s in streams:
         sub = sub.flush(scope=view.config.scope, stream=s)
@@ -113,8 +129,9 @@ def _hop_flush(sub: Substrate, *, order: bool, stream: int,
 
 
 def _ring_reduce_scatter_dir(sub: Substrate, x: Array, axis: str, n: int, *,
-                             order: bool, shift: int, stream: int = 0,
-                             ) -> tuple[Substrate, Array]:
+                             cfg: WindowConfig, shift: int, stream: int = 0,
+                             op: str = "sum") -> tuple[Substrate, Array]:
+    order = cfg.order
     perm = _ring_perm(n, shift)
     rank = lax.axis_index(axis)
     chunk = x.shape[0] // n
@@ -126,10 +143,14 @@ def _ring_reduce_scatter_dir(sub: Substrate, x: Array, axis: str, n: int, *,
         sub = _hop_flush(sub, order=order, stream=stream, dependent=k > 0)
         send_idx = ((rank - s * k) % n) * chunk
         piece = lax.dynamic_slice_in_dim(acc, send_idx, chunk, axis=0)
-        sub, recvd = sub.channel_send(piece, perm, stream=stream)
         recv_idx = ((rank - s * (k + 1)) % n) * chunk
         cur = lax.dynamic_slice_in_dim(acc, recv_idx, chunk, axis=0)
-        acc = lax.dynamic_update_slice_in_dim(acc, cur + recvd, recv_idx, axis=0)
+        # the hop is a one-sided accumulate routed by the engine: a declared
+        # same-op ring takes the specialized 1-phase path; an undeclared one
+        # pays the conservative per-hop completion ack (paper §2.3).
+        sub, new = acc_engine.acc_hop(sub, cfg, cur, piece, perm, op=op,
+                                      stream=stream)
+        acc = lax.dynamic_update_slice_in_dim(acc, new, recv_idx, axis=0)
     mine = lax.dynamic_slice_in_dim(acc, ((rank + s) % n) * chunk, chunk, axis=0)
     return sub, mine
 
@@ -169,6 +190,7 @@ def ring_reduce_scatter(
     order: bool = True,
     bidirectional: bool = False,
     win: Window | None = None,
+    declare_op: bool = True,
 ) -> Array:
     """Ring reduce-scatter of ``x`` (leading dim divisible by axis_size).
 
@@ -181,25 +203,29 @@ def ring_reduce_scatter(
     directions).
     ``win``: run on this window's substrate (duplicated with the ring's
     config) instead of allocating a throwaway one.
+    ``declare_op=True`` declares ``same_op="sum"`` on the ring's view so its
+    accumulate hops lower through the engine's specialized path; ``False``
+    is the undeclared baseline paying the generic per-hop completion ack.
     """
     n = axis_size
     if n == 1:
         return x
     if x.shape[0] % n != 0:
         raise ValueError(f"leading dim {x.shape[0]} not divisible by axis size {n}")
+    same_op = "sum" if declare_op else None
     if bidirectional:
         h = x.shape[0] // 2
         base, cfg = _ring_substrate(x, axis, n, order=order, win=win,
-                                    streams=(0, 1))
+                                    streams=(0, 1), same_op=same_op)
         s_lo, lo = _ring_reduce_scatter_dir(base, x[:h], axis, n,
-                                            order=cfg.order, shift=1, stream=0)
+                                            cfg=cfg, shift=1, stream=0)
         s_hi, hi = _ring_reduce_scatter_dir(base, x[h:], axis, n,
-                                            order=cfg.order, shift=-1, stream=1)
+                                            cfg=cfg, shift=-1, stream=1)
         out = jnp.concatenate([lo, hi], axis=0)
         return _finish_lent((s_lo, s_hi), out, win, (0, 1))
-    sub, cfg = _ring_substrate(x, axis, n, order=order, win=win)
-    sub, mine = _ring_reduce_scatter_dir(sub, x, axis, n, order=cfg.order,
-                                         shift=1)
+    sub, cfg = _ring_substrate(x, axis, n, order=order, win=win,
+                               same_op=same_op)
+    sub, mine = _ring_reduce_scatter_dir(sub, x, axis, n, cfg=cfg, shift=1)
     return _finish_lent((sub,), mine, win, (0,))
 
 
@@ -232,6 +258,7 @@ def rma_all_reduce(
     order: bool = True,
     bidirectional: bool = False,
     win: Window | None = None,
+    declare_op: bool = True,
 ) -> Array:
     """One-sided ring all-reduce = reduce-scatter + all-gather, on one
     substrate.
@@ -243,6 +270,13 @@ def rma_all_reduce(
     on separate issue streams of the same substrate (beyond-paper
     optimization).  ``win``: reuse this window's substrate (via a dup'd view
     carrying the ring's per-use config) instead of allocating.
+
+    ``declare_op=True`` (default) declares ``same_op="sum"`` on the ring's
+    view, so every reduce-scatter hop lowers through the accumulate engine's
+    **specialized** path — the ring stays at exactly 2(n-1) data phases.
+    ``declare_op=False`` is the undeclared baseline: each accumulate hop
+    pays the conservative generic-path completion ack (one extra phase per
+    reduce hop), the cost the paper's §2.3 hints exist to remove.
     """
     n = axis_size
     if n == 1:
@@ -251,14 +285,15 @@ def rma_all_reduce(
     pad = (-orig) % (2 * n if bidirectional else n)
     if pad:
         x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    same_op = "sum" if declare_op else None
     if bidirectional:
         h = x.shape[0] // 2
         base, cfg = _ring_substrate(x, axis, n, order=order, win=win,
-                                    streams=(0, 1))
+                                    streams=(0, 1), same_op=same_op)
         s_lo, lo = _ring_reduce_scatter_dir(base, x[:h], axis, n,
-                                            order=cfg.order, shift=1, stream=0)
+                                            cfg=cfg, shift=1, stream=0)
         s_hi, hi = _ring_reduce_scatter_dir(base, x[h:], axis, n,
-                                            order=cfg.order, shift=-1, stream=1)
+                                            cfg=cfg, shift=-1, stream=1)
         s_lo, lo_full = _ring_all_gather_dir(s_lo, lo, axis, n, order=cfg.order,
                                              shift=1, owner_shift=1, stream=0,
                                              entry_dep=True)
@@ -268,9 +303,9 @@ def rma_all_reduce(
         out = jnp.concatenate([lo_full, hi_full], axis=0)
         out = _finish_lent((s_lo, s_hi), out, win, (0, 1))
     else:
-        sub, cfg = _ring_substrate(x, axis, n, order=order, win=win)
-        sub, mine = _ring_reduce_scatter_dir(sub, x, axis, n, order=cfg.order,
-                                             shift=1)
+        sub, cfg = _ring_substrate(x, axis, n, order=order, win=win,
+                                   same_op=same_op)
+        sub, mine = _ring_reduce_scatter_dir(sub, x, axis, n, cfg=cfg, shift=1)
         sub, out = _ring_all_gather_dir(sub, mine, axis, n, order=cfg.order,
                                         shift=1, owner_shift=1, entry_dep=True)
         out = _finish_lent((sub,), out, win, (0,))
@@ -300,18 +335,25 @@ def put_signal(
       completion.
     * ``win.config.order=False`` (paper Listing 1): correctness requires a
       full flush (ack RTT) between the put and the signal.
+
+    The flag is an accumulate like any other, so it goes through the
+    op-specialized engine: on a ``same_op`` window it is raised with the
+    declared op (never a declaration-violating second op) and the default
+    ``flag_value`` is op-aware (``accumulate.default_flag_value`` —
+    observable against a zeroed flag word except under ``prod``/``band``,
+    where the caller must pre-set the word or pass a protocol of their
+    own).  On a hint-less window the flag pays the generic path's
+    completion-ack phase — declare usage (e.g.
+    ``dup_with_info(same_op="sum")``) to get the 1-phase intrinsic flag.
     """
-    flag_value = (
-        flag_value if flag_value is not None
-        else jnp.ones((1,), win.buffer.dtype)
-    )
+    flag_op = win.config.same_op if win.config.same_op is not None else "sum"
+    if flag_value is None:
+        flag_value = acc_engine.default_flag_value(flag_op, win.buffer.dtype)
     win = win.put(data, perm, offset=data_offset, stream=stream)
     if not win.config.order:
         win = win.flush(stream if win.config.scope == "thread" else None)
-    win = win._accumulate_intrinsic(
-        flag_value, perm, op="sum", offset=flag_offset, stream=stream
-    )
-    return win
+    return acc_engine.routed_accumulate(
+        win, flag_value, perm, op=flag_op, offset=flag_offset, stream=stream)
 
 
 def put_signal_pipelined(
@@ -321,6 +363,7 @@ def put_signal_pipelined(
     *,
     chunks: int,
     flag_offset: int,
+    flag_value=None,
     stream: int = 0,
     order: bool | None = None,
 ) -> Window:
@@ -336,6 +379,10 @@ def put_signal_pipelined(
     P4) — same memory, same flush queues, different anticipated usage — and
     re-wrapping the result in the caller's original config, so one window
     serves both the pipelined exchange and whatever the caller does next.
+
+    ``flag_value``: flag payload; defaults to the op-aware observable value
+    (see ``put_signal`` — same engine routing and same ``prod``/``band``
+    caveat apply to the flag here).
     """
     n = data.shape[0]
     if n % chunks:
@@ -351,10 +398,11 @@ def put_signal_pipelined(
         )
     if not view.config.order:
         view = view.flush(stream if view.config.scope == "thread" else None)
-    view = view._accumulate_intrinsic(
-        jnp.ones((1,), view.buffer.dtype), perm, op="sum",
-        offset=flag_offset, stream=stream,
-    )
+    flag_op = view.config.same_op if view.config.same_op is not None else "sum"
+    if flag_value is None:
+        flag_value = acc_engine.default_flag_value(flag_op, view.buffer.dtype)
+    view = acc_engine.routed_accumulate(
+        view, flag_value, perm, op=flag_op, offset=flag_offset, stream=stream)
     # hand back the caller's configuration over the updated substrate
     return view if order is None else dataclasses.replace(view, config=win.config)
 

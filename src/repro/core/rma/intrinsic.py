@@ -40,13 +40,19 @@ INTRINSIC_DTYPES = frozenset(
 INTRINSIC_MAX_COUNT = 8
 
 
-def op_is_intrinsic(op: str, count: int, dtype) -> bool:
-    """Single-op form of the query used internally by ``Window.accumulate``."""
+def op_is_intrinsic(op: str, count: int, dtype,
+                    max_count: int = INTRINSIC_MAX_COUNT) -> bool:
+    """Single-op form of the envelope predicate — the one definition the
+    public query and the engine's routing/assert checks all share.
+
+    ``max_count``: the count threshold in effect — the platform envelope by
+    default, or a window's resolved crossover when the caller has one.
+    """
     try:
         dt = jnp.dtype(dtype)
     except TypeError:
         return False
-    return op in INTRINSIC_OPS and dt in INTRINSIC_DTYPES and count <= INTRINSIC_MAX_COUNT
+    return op in INTRINSIC_OPS and dt in INTRINSIC_DTYPES and count <= max_count
 
 
 def win_op_intrinsic(ops: str, max_count: int, dtype, win=None) -> bool:
@@ -56,7 +62,12 @@ def win_op_intrinsic(ops: str, max_count: int, dtype, win=None) -> bool:
       ops: comma-delimited list of operations (e.g. ``"sum,replace,cas"``).
       max_count: maximum number of elements per accumulate the app will use.
       dtype: the element datatype.
-      win: the window (reserved — capabilities here are platform-wide).
+      win: optional window — when given, the count threshold is that
+        window's declared atomic envelope (``max_atomic_elems``; see
+        ``repro.core.rma.accumulate.declared_envelope``) instead of the
+        platform-wide envelope.  The benchmark-calibrated *routing*
+        crossover deliberately does not enter here: it decides which
+        specialized path wins, not what the hardware can do.
 
     Returns:
       True iff *all* listed operations on up to ``max_count`` elements of
@@ -66,7 +77,12 @@ def win_op_intrinsic(ops: str, max_count: int, dtype, win=None) -> bool:
     parsed = [o.strip() for o in ops.split(",") if o.strip()]
     if not parsed:
         raise ValueError("empty operation list")
-    return all(op_is_intrinsic(o, max_count, dtype) for o in parsed)
+    threshold = INTRINSIC_MAX_COUNT
+    if win is not None:
+        from repro.core.rma.accumulate import declared_envelope
+
+        threshold = declared_envelope(win.config)
+    return all(op_is_intrinsic(o, max_count, dtype, threshold) for o in parsed)
 
 
 __all__ = [

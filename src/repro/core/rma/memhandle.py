@@ -196,11 +196,47 @@ class MemhandleWindow:
 
     def accumulate(self, data: Array, perm, *, op: str = "sum", offset=0,
                    stream: int = 0) -> "MemhandleWindow":
-        """Accumulate through the handle (same P3 path selection as Window)."""
+        """Accumulate through the handle — same engine path selection as
+        ``Window.accumulate`` (declared usage routes intrinsic/tiled,
+        undeclared takes the software path with its completion-ack phase),
+        but with the P5 lifetime guarantee ``put`` has: the handle's epoch
+        rides the packet, the target drops stale updates and counts them
+        instead of corrupting reused memory."""
+        from repro.core.rma import accumulate as _engine
+
         self._check_lifetime()
-        off, _ = self._resolve(offset)
-        p = self.parent.accumulate(data, perm, op=op, offset=off, stream=stream)
-        return self._rewrap(p)
+        p = self.parent
+        p._check_stream(stream)
+        path = _engine.route(op, int(data.size), data.dtype, p.config)
+        payload = p._ordered_payload(data, stream)
+        off, epoch = self._resolve(offset)
+        sent = lax.ppermute(payload, p.axis, perm)
+        hdr = lax.ppermute(jnp.stack([off, epoch]), p.axis, perm)
+        sent_off, sent_epoch = hdr[0], hdr[1]
+        if path == _engine.PATH_SOFTWARE:
+            # AM emulation: landing depends on the target's participation
+            sent = _tie(sent, p._token(stream))
+        idx = (jnp.asarray(sent_off),) + (
+            jnp.zeros((), jnp.int32),) * (p.buffer.ndim - 1)
+        current = lax.dynamic_slice(p.buffer, idx, sent.shape)
+        new = _engine.path_combine(path, op)(current, sent)
+        # Life-time guarantee: target-side epoch check (local compare, free).
+        slot = self.handle[3]
+        fresh = (sent_epoch == p.regs[slot, 0]) & (p.regs[slot, 0] > 0)
+        is_tgt = _is_target(p.axis, perm)
+        buf = _write(p.buffer, new, sent_off, is_tgt & fresh)
+        errs = self.err_count + jnp.where(is_tgt & ~fresh, 1, 0).astype(jnp.int32)
+        p.group.note_op(stream, perm)
+        tok_dep = sent
+        if path == _engine.PATH_SOFTWARE:
+            # conservative generic path: one completion-ack phase per op —
+            # this mirrors Substrate.rmw(software=True)'s protocol exactly
+            # (the hand-rolled transport here exists only for the epoch
+            # guard; keep the two in lockstep)
+            ack = lax.ppermute(_tie(jnp.float32(1.0), new), p.axis, _inv(perm))
+            tok_dep = _tie(sent, ack)
+        new_parent = p._with_dyn(buffer=buf, tokens=p._bump(stream, tok_dep))
+        return self._rewrap(new_parent, err_count=errs)
 
     def flush(self, stream: int | None = None) -> "MemhandleWindow":
         """Flush through the parent's synchronization state (paper §4.2: lock

@@ -304,7 +304,10 @@ class Substrate:
         ``software=True`` models the active-message path of paper §2.3: the
         landing additionally depends on the *target's* channel token (its
         participation in the runtime) and a target-side mutual-exclusion
-        barrier — the Fig. 5 pathology.
+        barrier — the Fig. 5 pathology — and the origin cannot retire the
+        operation until the target's runtime acknowledges applying it, so
+        the conservative path pays one completion-ack phase per op (payload
+        + ack = one RTT total, vs the intrinsic path's single phase).
         """
         data = self.ordered_payload(data, stream, order)
         sent = lax.ppermute(data, self.axis, perm)
@@ -321,7 +324,11 @@ class Substrate:
             new = _tie(new, self.token(stream))
         buf = _write(self.buffer, new, sent_off, _is_target(self.axis, perm))
         self.queues.note_op(stream, perm)
-        return self.replace(buffer=buf, tokens=self.bump(stream, sent))
+        tok_dep = sent
+        if software:
+            ack = lax.ppermute(_tie(jnp.float32(1.0), new), self.axis, _inv(perm))
+            tok_dep = _tie(sent, ack)
+        return self.replace(buffer=buf, tokens=self.bump(stream, tok_dep))
 
     def fetch_rmw(self, data: Array, perm: Perm,
                   combine: Callable[[Array, Array], Array], *, offset: int = 0,
@@ -351,6 +358,18 @@ class Substrate:
         old = lax.ppermute(current, self.axis, _inv(perm))
         self.queues.note_op(stream, perm)
         return self.replace(buffer=buf, tokens=self.bump(stream, old)), old
+
+    def target_ack(self, perm: Perm, *, stream: int = 0) -> "Substrate":
+        """One completion-ack phase back along ``perm`` on a stream's channel.
+
+        The building block of the conservative (undeclared) accumulate
+        protocol: after shipping an update the origin waits for the target's
+        runtime to acknowledge applying it.  Used by the routed ring hops for
+        the generic path; declared (specialized) accumulates never pay it.
+        """
+        ack = lax.ppermute(_tie(jnp.float32(1.0), self.token(stream)),
+                           self.axis, _inv(perm))
+        return self.replace(tokens=self.bump(stream, ack))
 
     def channel_send(self, payload: Array, perm: Perm, *, stream: int = 0,
                      ) -> tuple["Substrate", Array]:

@@ -44,14 +44,21 @@ operation                   communication phases in lowered HLO
 ==========================  =============================================
 put / intrinsic accumulate  1  (one ``collective-permute``; a *traced*
                             displacement adds one more for the address)
+tiled (declared) accumulate 1  (payload phase; the target's VPU applies it
+                            through ``repro.kernels.accumulate``)
 get / fetch_op / cas        2  (request + response = 1 RTT)
 flush of one stream         2  (ack round-trip = 1 RTT)
 process-scope flush         2 × (#streams with pending ops), serialized —
                             the UCX endpoint-list walk of paper Fig. 7
 ordered put→put (P2)        2, chained, **no** ack in between
 unordered put→flush→put     4, with a full RTT barrier in the middle
-software (AM) accumulate    1 phase + target ``progress()`` dependence
+software (AM) accumulate    2  (payload + completion ack) + target
+                            ``progress()`` dependence
 ==========================  =============================================
+
+Accumulate path selection (which row an ``MPI_Accumulate`` lowers to) lives
+in :mod:`repro.core.rma.accumulate` — the op-specialized engine that routes
+on the window's declared usage and the intrinsic-vs-bandwidth crossover.
 """
 from __future__ import annotations
 
@@ -59,7 +66,6 @@ import dataclasses
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.rma.substrate import (  # noqa: F401  (re-exported for views)
     SCOPE_PROCESS,
@@ -88,6 +94,13 @@ Perm = Sequence[tuple[int, int]]
 _DUP_IMMUTABLE_KEYS = frozenset({"max_streams"})
 
 
+#: Every op ``Window._apply_op`` knows how to combine — the vocabulary the
+#: accumulate info keys (``accumulate_ops``, ``same_op``) are validated against.
+KNOWN_ACC_OPS = frozenset(
+    {"sum", "min", "max", "replace", "prod", "band", "bor", "bxor"}
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class WindowConfig:
     """The window *info object* — anticipated-usage declarations (paper §2).
@@ -104,7 +117,17 @@ class WindowConfig:
         win_op_intrinsic` returned True (paper P3).  Violations raise.
       accumulate_ops: anticipated accumulate operations (paper §2.3 string
         list, e.g. ``("sum", "replace")``).
-      accumulate_max_count: anticipated maximum element count per accumulate.
+      same_op: declare that *every* accumulate on this window (or dup'd view)
+        uses this one operation — the MPI ``accumulate_ops=same_op`` hint
+        with the op named, which is what lets the implementation specialize
+        the accumulate path a priori (paper §2.3; foMPI-style op dispatch).
+        Must be a member of ``accumulate_ops``.  Issuing any *other* op
+        through a same-op window is a declaration violation and raises.
+      max_atomic_elems: anticipated atomic-envelope size — the largest
+        element count the application will push down the latency-optimized
+        atomic path.  ``None`` defers to the engine default (benchmark-
+        calibrated crossover, or the hardware envelope); see
+        :func:`repro.core.rma.accumulate.crossover_elems`.
       max_streams: number of issue streams (thread analogue).  Sizes the
         token array; fixed at creation.
     """
@@ -113,7 +136,8 @@ class WindowConfig:
     order: bool = False
     assert_accumulate_intrinsic: bool = False
     accumulate_ops: tuple[str, ...] = ("sum",)
-    accumulate_max_count: int = 8
+    same_op: str | None = None
+    max_atomic_elems: int | None = None
     max_streams: int = 1
 
     def __post_init__(self):
@@ -121,6 +145,18 @@ class WindowConfig:
             raise ValueError(f"invalid scope {self.scope!r}")
         if self.max_streams < 1:
             raise ValueError("max_streams must be >= 1")
+        for op in self.accumulate_ops:
+            if op not in KNOWN_ACC_OPS:
+                raise ValueError(f"unknown accumulate op {op!r} in accumulate_ops")
+        if self.same_op is not None:
+            if self.same_op not in KNOWN_ACC_OPS:
+                raise ValueError(f"unknown accumulate op same_op={self.same_op!r}")
+            if self.same_op not in self.accumulate_ops:
+                raise ValueError(
+                    f"same_op={self.same_op!r} contradicts accumulate_ops="
+                    f"{self.accumulate_ops!r}; declare it in both")
+        if self.max_atomic_elems is not None and self.max_atomic_elems < 1:
+            raise ValueError("max_atomic_elems must be >= 1")
 
     def replace(self, **kw) -> "WindowConfig":
         return dataclasses.replace(self, **kw)
@@ -281,66 +317,67 @@ class Window:
     ) -> "Window":
         """``MPI_Accumulate`` with element-wise atomicity.
 
-        Path selection is the paper's P3 contract:
+        Path selection is delegated to the accumulate engine
+        (:mod:`repro.core.rma.accumulate`), which routes on the window's
+        declared usage — the paper's P3 contract generalized with crossover
+        routing:
 
-        * If the window asserts ``assert_accumulate_intrinsic`` and the
-          (op, count, dtype) tuple is inside the hardware envelope, the
-          operation uses the **origin-intrinsic** path: a single phase, no
-          target-CPU involvement (NIC/ICI atomic).
-        * Otherwise the **software** path is used: the operation is shipped
-          as an active message and only lands when the target calls
-          :meth:`progress` (or a synchronizing MPI call) — the behaviour the
-          paper measured in Fig. 5.
+        * declared single-op usage (``same_op`` or
+          ``assert_accumulate_intrinsic``) with a count at or below the
+          crossover: the **origin-intrinsic** path — a single phase, no
+          target-CPU involvement (NIC/ICI atomic);
+        * declared usage above the crossover: the **tiled VPU** bandwidth
+          path (``repro.kernels.accumulate``) — still one communication
+          phase, target vector units apply the update;
+        * undeclared usage: the conservative **software** path — the
+          operation is shipped as an active message whose retirement costs a
+          completion-ack phase and depends on the target's participation
+          (the behaviour the paper measured in Fig. 5).
         """
-        from repro.core.rma import intrinsic as _intr
+        from repro.core.rma import accumulate as _engine
 
         self._check_stream(stream)
-        count = int(data.size)
-        inside = _intr.op_is_intrinsic(op, count, data.dtype)
-        if self.config.assert_accumulate_intrinsic:
-            if not inside:
-                raise ValueError(
-                    "window asserts accumulate-intrinsic usage but "
-                    f"op={op!r} count={count} dtype={data.dtype} is outside the "
-                    "hardware envelope (undefined behaviour per paper §2.3); "
-                    "query win_op_intrinsic() first"
-                )
-            return self._accumulate_intrinsic(data, perm, op=op, offset=offset, stream=stream)
-        # Conservative default: implementations cannot anticipate future ops,
-        # so they take the software path (paper §2.3).
-        return self._accumulate_software(data, perm, op=op, offset=offset, stream=stream)
+        return _engine.routed_accumulate(
+            self, data, perm, op=op, offset=offset, stream=stream)
 
     def _apply_op(self, current: Array, update: Array, op: str) -> Array:
-        if op == "sum":
-            return current + update.astype(current.dtype)
-        if op == "min":
-            return jnp.minimum(current, update.astype(current.dtype))
-        if op == "max":
-            return jnp.maximum(current, update.astype(current.dtype))
-        if op == "replace":
-            return update.astype(current.dtype)
-        if op == "prod":
-            return current * update.astype(current.dtype)
-        if op in ("band", "bor", "bxor"):
-            u = update.astype(current.dtype)
-            return {"band": current & u, "bor": current | u, "bxor": current ^ u}[op]
-        raise ValueError(f"unsupported accumulate op {op!r}")
+        from repro.core.rma.accumulate import apply_op
+
+        return apply_op(current, update, op)
 
     def _accumulate_intrinsic(self, data, perm, *, op, offset, stream) -> "Window":
-        combine = lambda cur, upd: self._apply_op(cur, upd, op)
+        from repro.core.rma import accumulate as _engine
+
         return self._view(self.substrate.rmw(
-            data, perm, combine, offset=offset, stream=stream,
-            order=self.config.order, software=False))
+            data, perm, _engine.path_combine(_engine.PATH_INTRINSIC, op),
+            offset=offset, stream=stream, order=self.config.order,
+            software=False))
+
+    def _accumulate_tiled(self, data, perm, *, op, offset, stream) -> "Window":
+        # Declared bandwidth path: one communication phase ships the update,
+        # the target's vector units apply it through the tiled VPU kernel
+        # (repro.kernels.accumulate) — the P3 large-count side of the
+        # crossover.  The declaration is what lets the target pre-arrange the
+        # handler, so no per-op completion ack is needed (unlike software).
+        from repro.core.rma import accumulate as _engine
+
+        return self._view(self.substrate.rmw(
+            data, perm, _engine.path_combine(_engine.PATH_TILED, op),
+            offset=offset, stream=stream, order=self.config.order,
+            software=False))
 
     def _accumulate_software(self, data, perm, *, op, offset, stream) -> "Window":
         # Software path == AM emulation; only DynamicWindow carries a real AM
         # queue.  For allocated windows the substrate models it as a
         # target-mediated operation whose landing depends on the target's
-        # participation in the runtime.
-        combine = lambda cur, upd: self._apply_op(cur, upd, op)
+        # participation in the runtime and whose retirement costs one
+        # completion-ack phase (the conservative per-op protocol round-trip).
+        from repro.core.rma import accumulate as _engine
+
         return self._view(self.substrate.rmw(
-            data, perm, combine, offset=offset, stream=stream,
-            order=self.config.order, software=True))
+            data, perm, _engine.path_combine(_engine.PATH_SOFTWARE, op),
+            offset=offset, stream=stream, order=self.config.order,
+            software=True))
 
     def fetch_op(
         self,
@@ -407,6 +444,7 @@ class Window:
 __all__ = [
     "Window",
     "WindowConfig",
+    "KNOWN_ACC_OPS",
     "SCOPE_PROCESS",
     "SCOPE_THREAD",
 ]

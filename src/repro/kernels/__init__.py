@@ -2,23 +2,29 @@
 
 Compute hot-spots: flash_attention (prefill), ssd_scan (Mamba2/SSD).
 Communication hot-spots (the paper's layer): rma_put (one-sided put via ICI
-remote DMA), ordered_put_signal (paper Listing 2 / P2 as a fused kernel),
-ring_allreduce (P2-ordered one-sided collective), accumulate (P3 bandwidth
-path).
+remote DMA), ordered_put_signal (paper Listing 2 / P2 as a fused kernel,
+plus the fused accumulate_signal producer op), ring_allreduce (P2-ordered
+one-sided collective), and the two sides of the P3 accumulate crossover —
+intrinsic (NIC-atomic latency path, small counts) and accumulate (tiled VPU
+bandwidth path, large counts) — routed by ``repro.core.rma.accumulate``.
 
 All kernels validate in the Mosaic TPU interpreter on CPU against ref.py.
 """
 from repro.kernels import ops, ref
 from repro.kernels.ops import (
     accumulate,
+    accumulate_signal,
     flash_attention,
+    op_identity,
     put_signal,
+    ring_accumulate,
     ring_all_reduce,
     ring_put,
     ssd_scan,
 )
 
 __all__ = [
-    "ops", "ref", "flash_attention", "accumulate", "ring_put",
-    "put_signal", "ring_all_reduce", "ssd_scan",
+    "ops", "ref", "flash_attention", "accumulate", "op_identity",
+    "ring_put", "ring_accumulate", "put_signal", "accumulate_signal",
+    "ring_all_reduce", "ssd_scan",
 ]

@@ -4,9 +4,19 @@ When an accumulate is outside the NIC-atomic envelope (large element counts),
 the paper's trade-off flips: the target-side vector units win.  This kernel
 is that path on TPU: element-wise accumulate of an update into a window
 buffer, tiled through VMEM, vectorized on the VPU.  The intrinsic (small-
-count) path never reaches here — it rides the fused DMA in ``rma_put``.
+count) path never reaches here — it rides the NIC-atomic twin in
+``repro.kernels.intrinsic``; the router in ``repro.core.rma.accumulate``
+picks between them at the crossover.
 
 in-place semantics via input_output_aliasing (the window buffer is donated).
+
+Padding: lengths that do not divide the block are padded **with the op's
+identity element** (sum→0, min→dtype max, prod→1, …) so the pad region is a
+no-op under the combine — padding with zeros would be wrong for ``min`` (0
+clamps any positive buffer value) and ``prod`` (0 annihilates), and while
+the result slice discards the pad region today, the identity guard keeps the
+kernel safe for in-place/aliased use and for future partial-block masking.
+``replace`` has no identity; its pad region is update-defined and discarded.
 """
 from __future__ import annotations
 
@@ -16,24 +26,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import cdiv, interpret_mode
+from repro.kernels.common import cdiv, combine_op, interpret_mode
 
-_OPS = ("sum", "min", "max", "replace", "prod")
+_OPS = ("sum", "min", "max", "replace", "prod", "band", "bor", "bxor")
+_BITWISE = ("band", "bor", "bxor")
+
+
+def op_identity(op: str, dtype):
+    """The identity element of ``op`` over ``dtype`` (``x op id == x``), or
+    ``None`` for ops without one (``replace``)."""
+    dt = jnp.dtype(dtype)
+    if op in ("sum", "bor", "bxor"):
+        return dt.type(0)
+    if op == "prod":
+        return dt.type(1)
+    if op == "min":
+        return jnp.finfo(dt).max if jnp.issubdtype(dt, jnp.floating) else jnp.iinfo(dt).max
+    if op == "max":
+        return jnp.finfo(dt).min if jnp.issubdtype(dt, jnp.floating) else jnp.iinfo(dt).min
+    if op == "band":
+        return dt.type(-1) if jnp.issubdtype(dt, jnp.signedinteger) else ~dt.type(0)
+    if op == "replace":
+        return None
+    raise ValueError(f"op {op!r} not in {_OPS}")
 
 
 def _acc_kernel(buf_ref, upd_ref, out_ref, *, op: str):
     cur = buf_ref[...]
     upd = upd_ref[...].astype(cur.dtype)
-    if op == "sum":
-        out_ref[...] = cur + upd
-    elif op == "min":
-        out_ref[...] = jnp.minimum(cur, upd)
-    elif op == "max":
-        out_ref[...] = jnp.maximum(cur, upd)
-    elif op == "prod":
-        out_ref[...] = cur * upd
-    else:  # replace
-        out_ref[...] = upd
+    out_ref[...] = combine_op(cur, upd, op)
 
 
 @functools.partial(jax.jit, static_argnames=("op", "block"))
@@ -41,14 +62,24 @@ def accumulate(buffer, update, *, op: str = "sum", block: int = 1024):
     """Element-wise ``buffer op= update`` (1-D, equal shapes), tiled in VMEM."""
     if op not in _OPS:
         raise ValueError(f"op {op!r} not in {_OPS}")
+    if op in _BITWISE and not jnp.issubdtype(buffer.dtype, jnp.integer):
+        raise ValueError(f"bitwise op {op!r} needs an integer buffer, "
+                         f"got {buffer.dtype}")
     if buffer.shape != update.shape:
         raise ValueError(f"shape mismatch {buffer.shape} vs {update.shape}")
     n = buffer.shape[0]
     block = min(block, n)
     pad = (-n) % block
     if pad:
-        buffer = jnp.pad(buffer, (0, pad))
-        update = jnp.pad(update, (0, pad))
+        # pad region must be a combine no-op: each operand padded with its
+        # own dtype's identity (replace has none — its pad result is
+        # update-defined and sliced off either way)
+        fill_buf = op_identity(op, buffer.dtype)
+        fill_upd = op_identity(op, update.dtype)
+        buffer = jnp.pad(buffer, (0, pad),
+                         constant_values=0 if fill_buf is None else fill_buf)
+        update = jnp.pad(update, (0, pad),
+                         constant_values=0 if fill_upd is None else fill_upd)
     grid = (cdiv(n + pad, block),)
     out = pl.pallas_call(
         functools.partial(_acc_kernel, op=op),
@@ -63,4 +94,4 @@ def accumulate(buffer, update, *, op: str = "sum", block: int = 1024):
     return out[:n] if pad else out
 
 
-__all__ = ["accumulate"]
+__all__ = ["accumulate", "op_identity"]

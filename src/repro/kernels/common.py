@@ -1,8 +1,42 @@
-"""Shared kernel utilities: interpret-mode selection, tiling helpers."""
+"""Shared kernel utilities: interpret-mode selection, tiling helpers, and
+cross-version shims for the remote-DMA primitives (the kernel-level
+counterpart of ``repro.compat``)."""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 from jax.experimental.pallas import tpu as pltpu
+
+_JAX_VERSION = tuple(int(x) for x in jax.__version__.split(".")[:2])
+
+
+def remote_device_id(target):
+    """``make_async_remote_copy`` device-id across pallas versions.
+
+    Newer pallas accepts (and documents) a tuple of mesh coordinates; the
+    0.4.x interpreter's discharge rule chokes on tuples and needs the raw
+    scalar.  All kernels here run on 1-D meshes, so the two are equivalent.
+    """
+    return target if _JAX_VERSION < (0, 5) else (target,)
+
+
+def sync_copy(src_ref, dst_ref, sem=None):
+    """Blocking local copy between refs (HBM/ANY <-> VMEM staging).
+
+    ``pltpu.sync_copy`` where available; older pallas has no synchronous
+    primitive, so the caller must lend a DMA semaphore (allocate one spare
+    in ``scratch_shapes``) and we issue start+wait on it.
+    """
+    if hasattr(pltpu, "sync_copy"):
+        pltpu.sync_copy(src_ref, dst_ref)
+        return
+    if sem is None:
+        raise ValueError(
+            "this pallas version has no sync_copy; pass a spare DMA "
+            "semaphore (add one to the kernel's scratch_shapes)")
+    cp = pltpu.make_async_copy(src_ref, dst_ref, sem)
+    cp.start()
+    cp.wait()
 
 
 def interpret_mode():
@@ -23,6 +57,35 @@ def interpret_mode():
     return True
 
 
+#: Ops the NIC-atomic-style kernels implement — the accumulate subset of the
+#: hardware envelope (repro.core.rma.intrinsic.INTRINSIC_OPS minus the
+#: non-accumulate cas/no_op entries).
+ATOMIC_KERNEL_OPS = ("sum", "min", "max", "replace", "band", "bor", "bxor")
+
+
+def combine_op(cur, upd, op: str):
+    """Element-wise combine — THE accumulate op table.  Shared by all the
+    kernels (atomic twins in kernels/intrinsic.py and the fused
+    accumulate+signal, the tiled VPU kernel in kernels/accumulate.py) and,
+    via ``repro.core.rma.accumulate.apply_op``, by the HLO-emulation paths,
+    so the two layers cannot drift.  ``prod`` is tiled-only (NICs don't
+    multiply): ``ATOMIC_KERNEL_OPS`` is the whitelist the atomic kernels
+    enforce before reaching here."""
+    if op == "sum":
+        return cur + upd
+    if op == "min":
+        return jnp.minimum(cur, upd)
+    if op == "max":
+        return jnp.maximum(cur, upd)
+    if op == "prod":
+        return cur * upd
+    if op in ("band", "bor", "bxor"):
+        return {"band": cur & upd, "bor": cur | upd, "bxor": cur ^ upd}[op]
+    if op == "replace":
+        return upd
+    raise ValueError(f"unsupported accumulate op {op!r}")
+
+
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
@@ -31,4 +94,5 @@ def round_up(a: int, b: int) -> int:
     return cdiv(a, b) * b
 
 
-__all__ = ["interpret_mode", "cdiv", "round_up"]
+__all__ = ["interpret_mode", "cdiv", "round_up", "remote_device_id",
+           "sync_copy", "combine_op", "ATOMIC_KERNEL_OPS"]

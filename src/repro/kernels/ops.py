@@ -12,9 +12,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.kernels.accumulate import accumulate
+from repro.kernels.accumulate import accumulate, op_identity
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ordered_put_signal import put_signal
+from repro.kernels.intrinsic import ring_accumulate
+from repro.kernels.ordered_put_signal import accumulate_signal, put_signal
 from repro.kernels.ring_allreduce import ring_all_reduce
 from repro.kernels.rma_put import ring_put
 from repro.kernels.ssd_scan import ssd_intra_chunk
@@ -63,6 +64,7 @@ def ssd_scan(xdt, a, Bm, Cm, *, chunk: int, nheads: int, headdim: int,
 
 
 __all__ = [
-    "flash_attention", "accumulate", "ring_put", "put_signal",
+    "flash_attention", "accumulate", "op_identity", "ring_put",
+    "ring_accumulate", "put_signal", "accumulate_signal",
     "ring_all_reduce", "ssd_scan", "ssd_intra_chunk",
 ]

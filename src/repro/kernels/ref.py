@@ -37,7 +37,22 @@ def accumulate_ref(buffer, update, *, op="sum"):
         "max": jnp.maximum(buffer, u),
         "prod": buffer * u,
         "replace": u,
+        "band": buffer & u if jnp.issubdtype(buffer.dtype, jnp.integer) else u,
+        "bor": buffer | u if jnp.issubdtype(buffer.dtype, jnp.integer) else u,
+        "bxor": buffer ^ u if jnp.issubdtype(buffer.dtype, jnp.integer) else u,
     }[op]
+
+
+def ring_accumulate_ref(buffer_global, update_global, *, axis_size, shift=1,
+                        op="sum", offset=0):
+    """buffer/update (n, ...) per-device shards stacked → what each device's
+    window holds after every device accumulates its update into its
+    (rank+shift) % n neighbour at ``offset``."""
+    landed = jnp.roll(update_global, shift, axis=0)
+    n_upd = landed.shape[1]
+    region = accumulate_ref(
+        buffer_global[:, offset:offset + n_upd], landed, op=op)
+    return buffer_global.at[:, offset:offset + n_upd].set(region)
 
 
 # -- ring put / put+signal ----------------------------------------------------
@@ -65,6 +80,6 @@ def ssd_scan_ref(xdt, a, Bm, Cm, *, initial_state=None):
 
 
 __all__ = [
-    "flash_attention_ref", "accumulate_ref", "ring_put_ref",
-    "ring_all_reduce_ref", "ssd_scan_ref",
+    "flash_attention_ref", "accumulate_ref", "ring_accumulate_ref",
+    "ring_put_ref", "ring_all_reduce_ref", "ssd_scan_ref",
 ]

@@ -13,6 +13,10 @@ Access paths, mirroring the paper's measurement taxonomy:
   time accesses are direct RDMA with zero lookup overhead (P5).  A page's
   handle dies with ``free_page`` (epoch bump) — use-after-free is dropped
   and counted, never corrupts (the life-time guarantee).
+* ``accumulate_page`` — in-place remote page updates (running KV stats,
+  correction deltas, counters) through the op-specialized accumulate engine
+  on a same-op dup'd view (paper §2.3 hints × P4), addressed via the page's
+  memory handle.
 
 A disaggregated prefill→decode deployment ships page handles instead of page
 contents; ``benchmarks.put_latency`` quantifies the per-access win.
@@ -136,6 +140,28 @@ class PagedKVWindow:
         xfer = self.window.dup_with_info(order=order, scope="thread")
         mhwin = win_from_memhandle(xfer, self.handles[page], slot=page)
         mhwin = mhwin.put(kv.reshape(-1), perm, stream=stream)
+        mhwin = mhwin.flush(stream)
+        parent = dataclasses.replace(mhwin.parent, config=self.window.config)
+        return PagedKVWindow(parent, self.handles, self.live, self.spec)
+
+    def accumulate_page(self, page: int, update: Array, perm, *,
+                        op: str = "sum", offset: int = 0, stream: int = 0,
+                        ) -> "PagedKVWindow":
+        """In-place remote update of a live page — running KV statistics,
+        speculative-decode correction deltas, visit counters — through the
+        op-specialized accumulate engine.
+
+        The update travels through a **dup'd view declaring single-op usage**
+        (``same_op=op``, paper §2.3 hints × P4 dup): small updates on atomic-
+        capable dtypes lower to the 1-phase NIC-atomic path, large ones to
+        the tiled VPU bandwidth path — never the conservative generic path a
+        hint-less accumulate would take.  Addressing goes through the page's
+        memory handle (P5), so the target is not involved in the lookup."""
+        view = self.window.dup_with_info(order=True, scope="thread",
+                                         same_op=op, accumulate_ops=(op,))
+        mhwin = win_from_memhandle(view, self.handles[page], slot=page)
+        mhwin = mhwin.accumulate(update.reshape(-1), perm, op=op,
+                                 offset=offset, stream=stream)
         mhwin = mhwin.flush(stream)
         parent = dataclasses.replace(mhwin.parent, config=self.window.config)
         return PagedKVWindow(parent, self.handles, self.live, self.spec)

@@ -8,9 +8,12 @@ Two gradient-synchronization modes:
   analysis measures.
 * ``"rma_ring"``: data-parallel gradient sync through the paper's window
   layer (one-sided ring all-reduce inside ``shard_map``), with P2 ordering —
-  see ``repro.core.rma.collectives``.  Used by benchmarks/examples and the
-  cross-pod put+signal exchange; optionally with error-feedback gradient
-  compression (``repro.train.compress``).
+  see ``repro.core.rma.collectives``.  The ring runs on a **sum-specialized
+  dup** of the gradient window (``same_op="sum"``, paper §2.3 hints × P4),
+  so every reduce hop lowers through the accumulate engine's specialized
+  path.  Used by benchmarks/examples and the cross-pod put+signal exchange;
+  optionally with error-feedback gradient compression
+  (``repro.train.compress``).
 
 Gradient accumulation scans over microbatches.
 """
@@ -76,17 +79,33 @@ def make_train_step(
     def sync_grads(grads):
         if grad_sync == "gspmd" or data_axis is None or data_axis_size == 1:
             return grads  # partitioner-inserted collectives
+        if compressor is not None:
+            return grads  # handled at caller level with state
         from repro.core.rma.collectives import rma_all_reduce
+        from repro.core.rma.window import Window, WindowConfig
 
-        def ar(g):
-            flat = g.reshape(-1)
-            if compressor is not None:
-                return None  # handled at caller level with state
-            out = rma_all_reduce(flat.astype(jnp.float32), data_axis,
-                                 data_axis_size, order=True)
-            return (out / data_axis_size).reshape(g.shape)
-
-        return jax.tree.map(ar, grads)
+        # One window, one ring, all leaves: the whole gradient pytree is
+        # synced as a single concatenated vector, so the per-step cost is
+        # one 2(n-1)-phase ring plus one exit flush epoch — not a ring (and
+        # a flush) per leaf.  Gradient sync is a pure same-op (sum)
+        # accumulate stream, so declare it: the ring runs on a
+        # sum-specialized dup of the gradient window (paper §2.3 hints × P4
+        # dup), lowering every reduce hop through the accumulate engine's
+        # specialized path.
+        flat, tdef = jax.tree.flatten(grads)
+        sizes = [g.size for g in flat]
+        vec = jnp.concatenate([g.reshape(-1).astype(jnp.float32) for g in flat])
+        win = Window.allocate(
+            vec, data_axis, data_axis_size,
+            WindowConfig(scope="thread", order=True, accumulate_ops=("sum",)))
+        sumwin = win.dup_with_info(same_op="sum")
+        vec = rma_all_reduce(vec, data_axis, data_axis_size, order=True,
+                             win=sumwin) / data_axis_size
+        out, off = [], 0
+        for g, n in zip(flat, sizes):
+            out.append(vec[off:off + n].reshape(g.shape))  # f32, as before
+            off += n
+        return jax.tree.unflatten(tdef, out)
 
     def train_step(params, opt_state, batch):
         loss, metrics, grads = grads_of(params, batch)

@@ -1,5 +1,9 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# hermetic accumulate routing: ignore any local calibration artifact and pin
+# the crossover to the hardware-envelope default
+os.environ["RMA_ACC_BENCH_JSON"] = "/nonexistent"
+os.environ.pop("RMA_ACC_CROSSOVER", None)
 import os, sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 import jax, jax.numpy as jnp
@@ -52,4 +56,69 @@ for order in (True, False):
     print(f"rma_all_reduce order={order}:", counts[order])
 assert counts[True] == 2 * (N - 1), "ordered ring = 2(n-1) data phases"
 assert counts[False] > counts[True], "no-P2 baseline pays per-hop flush phases"
+
+# --- accumulate engine: op x dtype x size matrix -> lowered path phase counts
+# one accumulate + flush; expected collective-permutes per routed path:
+#   intrinsic: 1 (data)            + 2 (flush ack RTT) = 3
+#   tiled:     1 (data; VPU kernel adds no phases)     + 2 = 3
+#   software:  1 (data) + 1 (completion ack)           + 2 = 4
+def count_cp_n(f, n_elems):
+    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    txt = g.lower(jnp.zeros((N * n_elems,), jnp.float32)).compile().as_text()
+    return txt.count("collective-permute(")
+
+MATRIX = [
+    # (op, count, dtype, config kwargs, expected path, expected phases)
+    ("sum",     4, jnp.float32, dict(same_op="sum"),                     "intrinsic", 3),
+    ("sum",    64, jnp.float32, dict(same_op="sum"),                     "tiled",     3),
+    ("sum",     4, jnp.float32, dict(),                                  "software",  4),
+    ("sum",    64, jnp.float32, dict(),                                  "software",  4),
+    ("min",     4, jnp.int32,   dict(same_op="min",
+                                     accumulate_ops=("min",)),           "intrinsic", 3),
+    ("min",    64, jnp.int32,   dict(same_op="min",
+                                     accumulate_ops=("min",)),           "tiled",     3),
+    ("prod",    4, jnp.float32, dict(same_op="prod",
+                                     accumulate_ops=("prod",)),          "tiled",     3),  # NICs don't multiply
+    ("sum",     4, jnp.bfloat16, dict(same_op="sum"),                    "tiled",     3),  # no short-float atomics
+    ("sum",     4, jnp.float32, dict(assert_accumulate_intrinsic=True),  "intrinsic", 3),
+]
+from repro.core.rma import accumulate as acc_engine
+for op, cnt, dtype, cfg_kw, want_path, want_phases in MATRIX:
+    cfg = WindowConfig(scope="thread", max_atomic_elems=8, **cfg_kw)
+    got_path = acc_engine.route(op, cnt, dtype, cfg)
+    assert got_path == want_path, (op, cnt, dtype, got_path, want_path)
+    def facc(x, op=op, cnt=cnt, dtype=dtype, cfg=cfg):
+        win = Window.allocate(x.astype(dtype), "x", N, cfg)
+        win = win.accumulate(jnp.ones((cnt,), dtype), [(0, 1)], op=op, offset=0)
+        win = win.flush(stream=0)
+        return win.buffer.astype(jnp.float32)
+    got_phases = count_cp_n(facc, max(cnt, 8))
+    print(f"accumulate op={op} count={cnt} {jnp.dtype(dtype).name}: "
+          f"path={got_path} phases={got_phases}")
+    assert got_phases == want_phases, (op, cnt, got_phases, want_phases)
+print("accumulate path matrix OK")
+
+# --- the declared same-op ring is the specialized path (acceptance check):
+# declare_op=True keeps the ring at exactly 2(n-1) data phases; the
+# undeclared baseline pays one generic-path completion ack per reduce hop
+ring = {}
+for declare in (True, False):
+    def f(x, declare=declare):
+        return rma_all_reduce(x, "x", N, order=True, declare_op=declare)
+    ring[declare] = count_cp(f)[0]
+    print(f"rma_all_reduce declare_op={declare}:", ring[declare])
+assert ring[True] == 2 * (N - 1), "declared same-op ring = 2(n-1) data phases"
+assert ring[False] == 2 * (N - 1) + (N - 1), \
+    "undeclared ring pays one completion-ack phase per reduce hop"
+
+# ...and through a lent sum-specialized dup (paper P4 x §2.3): same phases
+def f_dup(x):
+    win = Window.allocate(x, "x", N, WindowConfig(scope="thread", order=True,
+                                                  accumulate_ops=("sum",)))
+    sumwin = win.dup_with_info(same_op="sum")
+    return rma_all_reduce(x, "x", N, order=True, win=sumwin)
+dup_phases = count_cp(f_dup)[0]
+print("rma_all_reduce via sum-specialized dup:", dup_phases)
+assert dup_phases == 2 * (N - 1) + 2, \
+    "lent-window ring = 2(n-1) data phases + the exit flush epoch"
 print("ALL HLO COUNT CHECKS PASSED")

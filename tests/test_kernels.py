@@ -12,9 +12,26 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+# hypothesis-based sweeps are optional (requirements-dev.txt); everything
+# else in this module — including the multi-device subprocess suite — must
+# run regardless, so don't skip at module level.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):  # noqa: D103 - placeholder decorator
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
 
 from repro.kernels import accumulate, flash_attention, ssd_scan
 from repro.kernels import ref as R
@@ -84,6 +101,44 @@ def test_accumulate_property(n, op, dtype, block):
     out = accumulate(buf, upd, op=op, block=block)
     ref = R.accumulate_ref(buf, upd, op=op)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("op", ["sum", "min", "max", "replace", "prod"])
+@pytest.mark.parametrize("n,block", [(5, 4), (7, 64), (130, 64), (1, 1024)])
+def test_accumulate_partial_block_identity_padding(op, n, block):
+    """Lengths that don't divide the block pad with the op's identity, so the
+    pad region is a combine no-op — zero padding would corrupt min (0 clamps
+    positives) and prod (0 annihilates).  All-positive buffers make a
+    zero-pad bug observable for min."""
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 17 * n + block))
+    buf = jax.random.uniform(k1, (n,), jnp.float32, 1.0, 9.0)
+    upd = jax.random.uniform(k2, (n,), jnp.float32, 1.0, 9.0)
+    out = accumulate(buf, upd, op=op, block=block)
+    ref = R.accumulate_ref(buf, upd, op=op)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert not np.isnan(np.asarray(out)).any()
+
+
+@pytest.mark.parametrize("op", ["band", "bor", "bxor"])
+def test_accumulate_bitwise(op):
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 99))
+    buf = jax.random.randint(k1, (133,), -(2**20), 2**20, jnp.int32)
+    upd = jax.random.randint(k2, (133,), -(2**20), 2**20, jnp.int32)
+    out = accumulate(buf, upd, op=op, block=64)
+    ref = R.accumulate_ref(buf, upd, op=op)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    with pytest.raises(ValueError, match="integer"):
+        accumulate(buf.astype(jnp.float32), upd.astype(jnp.float32), op=op)
+
+
+def test_op_identity_table():
+    from repro.kernels import op_identity
+    assert op_identity("sum", jnp.float32) == 0.0
+    assert op_identity("prod", jnp.int32) == 1
+    assert op_identity("min", jnp.int32) == np.iinfo(np.int32).max
+    assert op_identity("max", jnp.float32) == np.finfo(np.float32).min
+    assert op_identity("band", jnp.uint32) == np.uint32(0xFFFFFFFF)
+    assert op_identity("replace", jnp.float32) is None
 
 
 # ---------------------------------------------------------------------------
