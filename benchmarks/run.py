@@ -14,6 +14,8 @@ Sections:
   acc_latency      — paper §2.3: accumulate-engine path sweep (intrinsic /
                      tiled / generic crossover; calibrates the router)
   rma_collectives  — beyond-paper: one-sided ring collectives
+  serve_disagg     — the disaggregated serving data plane: batched page-push
+                     pages/s + per-token handle-vs-query read latency
   roofline         — §Roofline summary from the dry-run artifacts (if present)
 """
 from __future__ import annotations
@@ -30,6 +32,7 @@ MODULES = [
     "benchmarks.progress",
     "benchmarks.acc_latency",
     "benchmarks.rma_collectives",
+    "benchmarks.serve_disagg",
 ]
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")

@@ -1,0 +1,149 @@
+"""Disaggregated serving data plane — pages/s and per-token access latency.
+
+The serving-scale numbers behind ``docs/serving_disagg.md``:
+
+* ``push_batched``  — prefill→decode page push through memory handles,
+  batched on one ordered dup'd view with a **single** thread-scoped flush
+  epoch per batch (the production path; derived column reports pages/s).
+* ``push_per_page`` — same pages, but one flush epoch per page (the shape a
+  runtime without P2 ordering is forced into) — the batching headroom.
+* ``token_get_handle`` — decode-side per-token KV read through a memory
+  handle: direct RDMA, zero lookup overhead (paper Fig. 12 applied to the
+  read path).
+* ``token_get_query``  — the same read on a dynamic window without handles:
+  every access first queries the registration from the target (Fig. 3b) —
+  the per-access tax P5 removes.
+
+Writes ``benchmarks/results/BENCH_serve_disagg.json`` (rows + the derived
+pages/s and handle-vs-query speedup).  ``--smoke`` runs a seconds-scale
+configuration for CI.
+"""
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks._harness import (N_DEV, emit, mesh1d, require_devices,
+                                 scan_op, smap, time_fn)
+from repro.core.rma import (
+    DynamicWindow,
+    memhandle_create,
+    win_from_memhandle,
+)
+from repro.serve.paged import PagedKVWindow, PageSpec
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batches", type=str, default="1,2,4,8",
+                    help="comma-separated page-batch sizes")
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny pages + few iters (CI)")
+    args = ap.parse_args()
+    require_devices()
+    mesh = mesh1d()
+    perm = [(i, (i + 1) % N_DEV) for i in range(N_DEV)]
+    batches = [int(b) for b in args.batches.split(",")]
+    iters = 3 if args.smoke else args.iters
+    if args.smoke:
+        batches = batches[:2]
+        spec_kw = dict(page_tokens=2, kv_heads=1, head_dim=4)
+    else:
+        spec_kw = dict(page_tokens=16, kv_heads=4, head_dim=32)
+    rows = []
+
+    def record(name, us, derived=""):
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+
+    # --- page push: batched (one flush epoch) vs per-page flush epochs
+    pagesps = {}
+    for nb in batches:
+        spec = PageSpec(n_pages=nb + 1, **spec_kw)
+        kvs = [jnp.full((2, spec.page_tokens, spec.kv_heads, spec.head_dim),
+                        1.0 + p, jnp.float32) for p in range(nb)]
+
+        def push_batched(carry):
+            buf, = carry
+            pool = PagedKVWindow.create(spec, "x", N_DEV, dtype=jnp.float32)
+            pool = pool._replace(window=pool.window._with(buffer=buf))
+            for p in range(nb):
+                pool = pool.alloc_page(p)
+            pool = pool.transfer_pages(list(range(nb)), kvs, perm)
+            return (pool.window.buffer,)
+
+        def push_per_page(carry):
+            buf, = carry
+            pool = PagedKVWindow.create(spec, "x", N_DEV, dtype=jnp.float32)
+            pool = pool._replace(window=pool.window._with(buffer=buf))
+            for p in range(nb):
+                pool = pool.alloc_page(p)
+            for p in range(nb):   # put_page_remote flushes per page
+                pool = pool.put_page_remote(p, kvs[p], perm)
+            return (pool.window.buffer,)
+
+        pool0 = jnp.zeros((spec.n_pages * spec.page_elems,), jnp.float32)
+        for name, body in (("push_batched", push_batched),
+                           ("push_per_page", push_per_page)):
+            fn, k = scan_op(body, 8)
+            g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
+            us = time_fn(g, ((pool0,),), k_inner=k, iters=iters)
+            pps = nb / (us * 1e-6)
+            record(f"serve_disagg/{name}/{nb}pages", us,
+                   f"pages_per_s={pps:.0f}")
+            if name == "push_batched":
+                pagesps[nb] = pps
+
+    # --- decode-side per-token KV read: handle path vs query path
+    tok_elems = 2 * spec_kw["kv_heads"] * spec_kw["head_dim"]
+    tok_pool = jnp.arange(2 * tok_elems, dtype=jnp.float32)
+
+    def token_get_handle(carry):
+        buf, = carry
+        win = DynamicWindow.create_dynamic(buf, "x", N_DEV,
+                                           am_slots=1, am_msg=1)
+        win = win.attach(0, offset=0, size=tok_elems)
+        mhw = win_from_memhandle(win, memhandle_create(win, 0))
+        mhw, data = mhw.get(perm, offset=0, size=tok_elems)
+        return (mhw.parent.buffer + 0.0 * data.sum(),)
+
+    def token_get_query(carry):
+        buf, = carry
+        win = DynamicWindow.create_dynamic(buf, "x", N_DEV,
+                                           am_slots=1, am_msg=1)
+        win = win.attach(0, offset=0, size=tok_elems)
+        win, data = win.get_query(perm, slot=0, size=tok_elems)
+        return (win.buffer + 0.0 * data.sum(),)
+
+    lat = {}
+    for name, body in (("token_get_handle", token_get_handle),
+                       ("token_get_query", token_get_query)):
+        fn, k = scan_op(body, 8)
+        g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
+        us = time_fn(g, ((tok_pool,),), k_inner=k, iters=iters)
+        lat[name] = us
+        record(f"serve_disagg/{name}/{tok_elems * 4}B", us,
+               "fig12 read path")
+
+    doc = {
+        "section": "serve_disagg",
+        "rows": rows,
+        "pages_per_s_batched": pagesps,
+        "handle_vs_query_speedup": lat["token_get_query"] / lat["token_get_handle"],
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_serve_disagg.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {path} ({len(rows)} rows, "
+          f"handle_vs_query_speedup={doc['handle_vs_query_speedup']:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

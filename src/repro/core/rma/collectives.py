@@ -326,8 +326,14 @@ def put_signal(
     flag_offset: int,
     flag_value=None,
     stream: int = 0,
+    after: Array | None = None,
 ) -> Window:
     """Put ``data`` then raise a completion flag at the target.
+
+    ``after``: optional completion token of *another* window (see
+    ``Window.completion_token``) — the payload is tied to it, so the whole
+    put+signal sequence lands behind that window's epoch (cross-window
+    notified access: a doorbell that must not overtake its data).
 
     * ``win.config.order=True`` (paper Listing 2): the flag accumulate is
       chained behind the put on the ordered channel — **no intermediate
@@ -349,6 +355,8 @@ def put_signal(
     flag_op = win.config.same_op if win.config.same_op is not None else "sum"
     if flag_value is None:
         flag_value = acc_engine.default_flag_value(flag_op, win.buffer.dtype)
+    if after is not None:
+        data = _tie(data, after)
     win = win.put(data, perm, offset=data_offset, stream=stream)
     if not win.config.order:
         win = win.flush(stream if win.config.scope == "thread" else None)

@@ -155,6 +155,18 @@ class MemhandleWindow:
             self, parent=parent,
             err_count=self.err_count if err_count is None else err_count)
 
+    def _lifetime_guard(self, p: DynamicWindow, shipped_epoch, perm):
+        """The traced half of the P5 guarantee, shared by put/get/accumulate:
+        validate the epoch that rode the packet against the slot's live
+        registration (local compare at the target, free).  Returns
+        ``(fresh, is_tgt, errs)`` — apply/serve the operation only where
+        ``fresh``, and carry ``errs`` (the target-side violation count)."""
+        slot = self.handle[3]
+        fresh = (shipped_epoch == p.regs[slot, 0]) & (p.regs[slot, 0] > 0)
+        is_tgt = _is_target(p.axis, perm)
+        errs = self.err_count + jnp.where(is_tgt & ~fresh, 1, 0).astype(jnp.int32)
+        return fresh, is_tgt, errs
+
     # -- RMA operations ----------------------------------------------------------
     def put(self, data: Array, perm, *, offset=0, stream: int = 0) -> "MemhandleWindow":
         """Direct RDMA put through the handle: one communication *phase*,
@@ -171,28 +183,38 @@ class MemhandleWindow:
         sent = lax.ppermute(data, p.axis, perm)
         hdr = lax.ppermute(jnp.stack([off, epoch]), p.axis, perm)
         sent_off, sent_epoch = hdr[0], hdr[1]
-        # Life-time guarantee: target-side epoch check (local compare, free).
-        slot = self.handle[3]
-        fresh = (sent_epoch == p.regs[slot, 0]) & (p.regs[slot, 0] > 0)
-        is_tgt = _is_target(p.axis, perm)
+        fresh, is_tgt, errs = self._lifetime_guard(p, sent_epoch, perm)
         buf = _write(p.buffer, sent, sent_off, is_tgt & fresh)
-        errs = self.err_count + jnp.where(is_tgt & ~fresh, 1, 0).astype(jnp.int32)
         p.group.note_op(stream, perm)
         new_parent = p._with_dyn(buffer=buf, tokens=p._bump(stream, sent))
         return self._rewrap(new_parent, err_count=errs)
 
     def get(self, perm, *, offset=0, size: int, stream: int = 0):
-        """Direct RDMA get: one request/response RTT, same as allocated."""
+        """Direct RDMA get: one request/response RTT, same as allocated.
+
+        The read path carries the same P5 lifetime guarantee as ``put``: the
+        request header ships ``[resolved offset, handle epoch]``, the target
+        validates the epoch against its live registration, and a stale
+        handle's response is **masked to zeros** and counted in ``err_count``
+        — a use-after-release read must never observe whatever the slot's
+        memory was reused for.  Under P2 (``order=True``) the request is
+        additionally chained on the stream's channel token, so a get cannot
+        overtake a prior same-stream put (NIC fence semantics, exactly as
+        ``Substrate.get``)."""
         self._check_lifetime()
         p = self.parent
         p._check_stream(stream)
-        off, _ = self._resolve(offset)
-        req = lax.ppermute(off, p.axis, perm)  # request carries resolved addr
-        chunk = lax.dynamic_slice_in_dim(p.buffer, req, size, axis=0)
-        data = lax.ppermute(chunk, p.axis, _inv(perm))
+        off, epoch = self._resolve(offset)
+        hdr = p._ordered_payload(jnp.stack([off, epoch]), stream)
+        req = lax.ppermute(hdr, p.axis, perm)  # request: [addr, epoch] header
+        req_off, req_epoch = req[0], req[1]
+        chunk = lax.dynamic_slice_in_dim(p.buffer, req_off, size, axis=0)
+        fresh, _, errs = self._lifetime_guard(p, req_epoch, perm)
+        chunk = jnp.where(fresh, chunk, jnp.zeros_like(chunk))
+        data = lax.ppermute(chunk, p.axis, _inv(perm))  # response
         p.group.note_op(stream, perm)
         new_parent = p._with(tokens=p._bump(stream, data))
-        return self._rewrap(new_parent), data
+        return self._rewrap(new_parent, err_count=errs), data
 
     def accumulate(self, data: Array, perm, *, op: str = "sum", offset=0,
                    stream: int = 0) -> "MemhandleWindow":
@@ -220,12 +242,8 @@ class MemhandleWindow:
             jnp.zeros((), jnp.int32),) * (p.buffer.ndim - 1)
         current = lax.dynamic_slice(p.buffer, idx, sent.shape)
         new = _engine.path_combine(path, op)(current, sent)
-        # Life-time guarantee: target-side epoch check (local compare, free).
-        slot = self.handle[3]
-        fresh = (sent_epoch == p.regs[slot, 0]) & (p.regs[slot, 0] > 0)
-        is_tgt = _is_target(p.axis, perm)
+        fresh, is_tgt, errs = self._lifetime_guard(p, sent_epoch, perm)
         buf = _write(p.buffer, new, sent_off, is_tgt & fresh)
-        errs = self.err_count + jnp.where(is_tgt & ~fresh, 1, 0).astype(jnp.int32)
         p.group.note_op(stream, perm)
         tok_dep = sent
         if path == _engine.PATH_SOFTWARE:

@@ -132,6 +132,17 @@ def _is_static(offset) -> bool:
     return isinstance(offset, int) and not isinstance(offset, bool)
 
 
+def _ship_offset(offset, axis: str, perm: Perm) -> Array:
+    """The displacement as the *target* sees it: free for trace-time
+    constants (every device reconstructs them locally), one address-word
+    ``ppermute`` for traced values — the single definition every
+    origin-addressed transport op (put/rmw/fetch/cas) routes through, so a
+    rank-dependent offset always lands where the origin named it."""
+    if _is_static(offset):
+        return jnp.int32(offset)
+    return lax.ppermute(jnp.asarray(offset, jnp.int32), axis, perm)
+
+
 # ---------------------------------------------------------------------------
 # Scope-aware flush queues (trace-local, shared across a dup family)
 # ---------------------------------------------------------------------------
@@ -169,12 +180,20 @@ class FlushQueues:
     def take(self, scope: str, stream: int | None) -> dict[int, Perm]:
         """Drain queues according to the flush scope.
 
-        ``SCOPE_THREAD`` with a stream: pop exactly that stream's queue.
-        Anything else (``SCOPE_PROCESS``, or a thread-scope flush with no
-        stream named): coalesce — pop *every* queue, the MPI-faithful
+        ``SCOPE_THREAD``: pop exactly the named stream's queue; ``stream``
+        must be given.  A thread-scope flush that names no stream is a
+        contract violation, not a drain-all — silently coalescing here would
+        turn the P1 cheap flush into a process-scope endpoint-list walk, the
+        exact cost the scope key exists to avoid.
+        ``SCOPE_PROCESS``: coalesce — pop *every* queue, the MPI-faithful
         drain-all semantics.
         """
-        if scope == SCOPE_THREAD and stream is not None:
+        if scope == SCOPE_THREAD:
+            if stream is None:
+                raise ValueError(
+                    "thread-scope flush must name the stream it completes "
+                    "(flush(stream=...)); a stream-less flush would silently "
+                    "pay the process-scope drain-all walk")
             out = {}
             if stream in self.pending:
                 out[stream] = self.pending.pop(stream)
@@ -186,9 +205,16 @@ class FlushQueues:
         """Streams a local-completion point covers (no dequeue).
 
         Thread scope always covers the calling stream (a local ordering
-        point is valid even with nothing in flight); process scope covers
-        whatever is pending."""
-        if scope == SCOPE_THREAD and stream is not None:
+        point is valid even with nothing in flight) and must name it —
+        same contract as :meth:`take`: covering every pending stream would
+        add exactly the cross-stream ordering edges P1 promises away.
+        Process scope covers whatever is pending."""
+        if scope == SCOPE_THREAD:
+            if stream is None:
+                raise ValueError(
+                    "thread-scope flush_local must name the stream it "
+                    "orders (flush_local(stream=...)); a stream-less call "
+                    "would silently tie every pending stream together")
             return [stream]
         return list(self.pending)
 
@@ -277,10 +303,7 @@ class Substrate:
         ``ppermute`` for the address word."""
         data = self.ordered_payload(data, stream, order)
         sent = lax.ppermute(data, self.axis, perm)
-        if _is_static(offset):
-            sent_off = jnp.int32(offset)
-        else:
-            sent_off = lax.ppermute(jnp.asarray(offset, jnp.int32), self.axis, perm)
+        sent_off = _ship_offset(offset, self.axis, perm)
         buf = _write(self.buffer, sent, sent_off, _is_target(self.axis, perm))
         self.queues.note_op(stream, perm)
         return self.replace(buffer=buf, tokens=self.bump(stream, sent))
@@ -311,10 +334,7 @@ class Substrate:
         """
         data = self.ordered_payload(data, stream, order)
         sent = lax.ppermute(data, self.axis, perm)
-        if _is_static(offset):
-            sent_off = jnp.int32(offset)
-        else:
-            sent_off = lax.ppermute(jnp.asarray(offset, jnp.int32), self.axis, perm)
+        sent_off = _ship_offset(offset, self.axis, perm)
         if software:
             sent = _tie(sent, self.token(stream))
         idx = (jnp.asarray(sent_off),) + (jnp.zeros((), jnp.int32),) * (self.buffer.ndim - 1)
@@ -331,29 +351,44 @@ class Substrate:
         return self.replace(buffer=buf, tokens=self.bump(stream, tok_dep))
 
     def fetch_rmw(self, data: Array, perm: Perm,
-                  combine: Callable[[Array, Array], Array], *, offset: int = 0,
+                  combine: Callable[[Array, Array], Array], *, offset=0,
                   stream: int = 0, order: bool = False,
                   ) -> tuple["Substrate", Array]:
-        """Atomic fetch-and-op: always one RTT (the old value travels back)."""
+        """Atomic fetch-and-op: always one RTT (the old value travels back).
+
+        Like ``put``/``rmw``, the target location is *origin*-addressed: a
+        traced displacement ships as an address word alongside the request
+        (one extra HLO ``ppermute``, same physical packet).  Reading the
+        origin-local ``offset`` value at the target would silently fetch the
+        wrong element whenever the displacement is rank-dependent."""
         data = self.ordered_payload(data, stream, order)
         sent = lax.ppermute(data, self.axis, perm)  # phase 1
-        current = lax.dynamic_slice_in_dim(self.buffer, offset, sent.shape[0], axis=0)
+        sent_off = _ship_offset(offset, self.axis, perm)
+        idx = (jnp.asarray(sent_off),) + (
+            jnp.zeros((), jnp.int32),) * (self.buffer.ndim - 1)
+        current = lax.dynamic_slice(self.buffer, idx, sent.shape)
         new = combine(current, sent)
-        buf = _write(self.buffer, new, jnp.int32(offset), _is_target(self.axis, perm))
+        buf = _write(self.buffer, new, sent_off, _is_target(self.axis, perm))
         old = lax.ppermute(current, self.axis, _inv(perm))  # phase 2
         self.queues.note_op(stream, perm)
         return self.replace(buffer=buf, tokens=self.bump(stream, old)), old
 
     def compare_swap(self, compare: Array, new: Array, perm: Perm, *,
-                     offset: int = 0, stream: int = 0, order: bool = False,
+                     offset=0, stream: int = 0, order: bool = False,
                      ) -> tuple["Substrate", Array]:
-        """``MPI_Compare_and_swap`` on a single element; one RTT."""
+        """``MPI_Compare_and_swap`` on a single element; one RTT.  The
+        displacement rides the request as a shipped address word when traced
+        (same protocol as ``fetch_rmw``)."""
         payload = self.ordered_payload(jnp.stack([compare, new]), stream, order)
         sent = lax.ppermute(payload, self.axis, perm)
-        current = lax.dynamic_slice_in_dim(self.buffer, offset, 1, axis=0)[0]
+        sent_off = _ship_offset(offset, self.axis, perm)
+        idx = (jnp.asarray(sent_off),) + (
+            jnp.zeros((), jnp.int32),) * (self.buffer.ndim - 1)
+        current = lax.dynamic_slice(self.buffer, idx, (1,) + self.buffer.shape[1:])
+        current = jnp.ravel(current)[0]
         swap = current == sent[0].astype(current.dtype)
         value = jnp.where(swap, sent[1].astype(current.dtype), current)
-        buf = _write(self.buffer, value[None], jnp.int32(offset),
+        buf = _write(self.buffer, value[None], sent_off,
                      _is_target(self.axis, perm))
         old = lax.ppermute(current, self.axis, _inv(perm))
         self.queues.note_op(stream, perm)

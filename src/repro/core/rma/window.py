@@ -245,6 +245,17 @@ class Window:
         """``MPI_Win_get_info``: query the configuration actually in effect."""
         return self.config
 
+    def completion_token(self, stream: int = 0) -> Array:
+        """The stream's channel token: a traced value that transitively
+        depends on every operation issued on the stream — and, after a
+        flush, on their remote completion.  The public handle for
+        *cross-window* ordering: pass it as ``put_signal(..., after=...)``
+        (or tie a payload to it) to sequence traffic on another window
+        behind this one's epoch, e.g. a doorbell on a control window that
+        must not land before a data window's batch completes."""
+        self._check_stream(stream)
+        return self.substrate.token(stream)
+
     # -- internal ------------------------------------------------------------
     def _view(self, sub: Substrate) -> "Window":
         """Rewrap an updated substrate in this view's type and config."""
@@ -385,12 +396,14 @@ class Window:
         perm: Perm,
         *,
         op: str = "sum",
-        offset: int = 0,
+        offset=0,
         stream: int = 0,
     ) -> tuple["Window", Array]:
         """``MPI_Fetch_and_op``: atomic read-modify-write, returns old value.
 
-        Always costs one RTT (the fetched value must travel back)."""
+        Always costs one RTT (the fetched value must travel back).  A traced
+        displacement ships as an address word with the request, so
+        rank-dependent offsets address the location the *origin* named."""
         self._check_stream(stream)
         combine = lambda cur, upd: self._apply_op(cur, upd, op)
         sub, old = self.substrate.fetch_rmw(
@@ -404,7 +417,7 @@ class Window:
         new: Array,
         perm: Perm,
         *,
-        offset: int = 0,
+        offset=0,
         stream: int = 0,
     ) -> tuple["Window", Array]:
         """``MPI_Compare_and_swap`` on a single element; one RTT."""

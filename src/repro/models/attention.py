@@ -208,11 +208,36 @@ def gqa_attention(
         pos = cache["pos"]  # (B,) int32: per-row current length
         rows = jnp.arange(B)[:, None]
         cols = pos[:, None] + jnp.arange(S)[None, :]
-        ck = cache["k"].at[rows, cols].set(k.astype(cache["k"].dtype))
-        cv = cache["v"].at[rows, cols].set(v.astype(cache["v"].dtype))
-        ck = logical_constraint(ck, "batch", "kv_seq", "kv_heads", None)
-        cv = logical_constraint(cv, "batch", "kv_seq", "kv_heads", None)
-        new_cache = dict(cache, k=ck, v=cv, pos=pos + S)
+        if "k_pages" in cache:
+            # paged KV: the cache is a physical page pool + per-row page
+            # table (the decode-side PagedKVWindow layout).  New tokens
+            # scatter into the row's current physical page; attention
+            # gathers the row's pages back into a contiguous logical view.
+            kp, vp = cache["k_pages"], cache["v_pages"]
+            table = cache["page_table"]        # (B, pages_per_row) int32
+            pt = kp.shape[1]                   # page_tokens
+            page_idx = cols // pt
+            pages_per_row = table.shape[-1]
+            # a row at pos == max_seq has no page for the new token; route
+            # its scatter to an out-of-range physical id so it is dropped —
+            # the same silent OOB-write drop the dense layout gives
+            valid = page_idx < pages_per_row
+            phys = table[rows, jnp.minimum(page_idx, pages_per_row - 1)]
+            phys = jnp.where(valid, phys, kp.shape[0])  # (B, S) page ids
+            in_page = cols % pt
+            ckp = kp.at[phys, in_page].set(k.astype(kp.dtype))
+            cvp = vp.at[phys, in_page].set(v.astype(vp.dtype))
+            new_cache = dict(cache, k_pages=ckp, v_pages=cvp, pos=pos + S)
+            ck = ckp[table].reshape(B, -1, KV, hd)   # (B, pages·pt, KV, hd)
+            cv = cvp[table].reshape(B, -1, KV, hd)
+            ck = logical_constraint(ck, "batch", "kv_seq", "kv_heads", None)
+            cv = logical_constraint(cv, "batch", "kv_seq", "kv_heads", None)
+        else:
+            ck = cache["k"].at[rows, cols].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, cols].set(v.astype(cache["v"].dtype))
+            ck = logical_constraint(ck, "batch", "kv_seq", "kv_heads", None)
+            cv = logical_constraint(cv, "batch", "kv_seq", "kv_heads", None)
+            new_cache = dict(cache, k=ck, v=cv, pos=pos + S)
         kk = _expand_kv(ck.astype(dt), H // KV)
         vv = _expand_kv(cv.astype(dt), H // KV)
         S_max = ck.shape[1]
@@ -267,6 +292,24 @@ def gqa_cache_spec(cfg) -> dict:
         "v": ("batch", "kv_seq", "kv_heads", None),
         "pos": ("batch",),
     }
+
+
+def init_paged_gqa_cache(cfg, batch: int, max_seq: int, dtype,
+                         page_tokens: int) -> dict:
+    """Paged-layout GQA cache: a physical page pool + per-row page table.
+
+    The pool holds ``batch · max_seq / page_tokens`` allocatable pages plus
+    one **parking page**; which physical page backs logical block *b* of
+    row *r* is the serving engine's page allocator's decision
+    (``page_table[r, b]``), exactly the indirection a decode-side
+    :class:`repro.serve.paged.PagedKVWindow` pool gives a disaggregated
+    deployment.  One definition of the layout exists —
+    ``repro.serve.disagg.paginate_cache`` — and this constructor delegates
+    to it, so the pool/parking/table invariants cannot drift."""
+    from repro.serve.disagg import paginate_cache
+
+    return paginate_cache(init_gqa_cache(cfg, batch, max_seq, dtype),
+                          page_tokens)
 
 
 # ---------------------------------------------------------------------------
@@ -399,6 +442,7 @@ def mla_cache_spec(cfg) -> dict:
 
 __all__ = [
     "init_gqa", "gqa_spec", "gqa_attention", "init_gqa_cache", "gqa_cache_spec",
+    "init_paged_gqa_cache",
     "init_mla", "mla_spec", "mla_attention", "init_mla_cache", "mla_cache_spec",
     "full_attention", "blockwise_attention",
 ]

@@ -7,6 +7,16 @@ step advances all live slots together.  Finished sequences free their slot.
 
 The engine is deliberately model-agnostic: it drives the ``Model`` API
 (prefill / decode_step) that every one of the ten architectures implements.
+
+``paged_kv=True`` replaces the dense per-slot KV with the **paged pool
+layout** of the disaggregated serving runtime (``repro.serve.disagg``): the
+self-attention cache becomes a physical page pool plus a per-row page table,
+pages are allocated from a :class:`~repro.serve.disagg.PageAllocator` at
+slot admission and freed at release, and the decode path runs through the
+page-table indirection in ``models/attention.py``.  This is exactly the
+cache a decode worker owns in a prefill→decode split — the pool a remote
+prefill engine pushes pages into through memory handles — so the engine
+doubles as the decode half of the disagg deployment.
 """
 from __future__ import annotations
 
@@ -34,17 +44,65 @@ class Completion:
     tokens: list
 
 
+def _paged_dicts(tree):
+    """Yield every dict node of a cache tree (to probe for paged leaves)."""
+    if isinstance(tree, dict):
+        yield tree
+        for v in tree.values():
+            yield from _paged_dicts(v)
+    elif isinstance(tree, list):
+        for v in tree:
+            yield from _paged_dicts(v)
+
+
+def _insert_row(full: Array, one: Array, slot, n_slots: int) -> Array:
+    """Scatter a 1-row leaf into the n_slots-row leaf along the batch axis.
+
+    The batch axis is wherever `one` is 1 and `full` is n_slots with all
+    other dims equal (scan-stacked leaves carry a leading layers dim, so it
+    is not always axis 0)."""
+    if full.ndim != one.ndim:
+        return full
+    for ax in range(full.ndim):
+        rest_f = full.shape[:ax] + full.shape[ax + 1:]
+        rest_o = one.shape[:ax] + one.shape[ax + 1:]
+        if (one.shape[ax] == 1 and full.shape[ax] == n_slots
+                and rest_f == rest_o):
+            starts = [0] * full.ndim
+            starts[ax] = slot
+            return jax.lax.dynamic_update_slice(
+                full, one.astype(full.dtype), tuple(starts))
+    return full
+
+
 class ServeEngine:
     """Greedy-decoding continuous-batching engine over ``n_slots`` slots."""
 
     def __init__(self, model, params, *, n_slots: int, max_seq: int,
-                 enc_len: int = 0):
+                 enc_len: int = 0, paged_kv: bool = False,
+                 page_tokens: int = 16):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         cfg = model.cfg
         self.cache = model.init_cache(n_slots, max_seq, enc_len=enc_len)
+        self.paged_kv = paged_kv
+        if paged_kv:
+            from repro.serve import disagg
+
+            paged_cache = disagg.paginate_cache(self.cache, page_tokens)
+            if not any("k_pages" in d for d in _paged_dicts(paged_cache)):
+                raise ValueError(
+                    f"paged_kv=True but the {cfg.family!r} stack has no "
+                    "self-attention KV caches to page (MLA/SSM caches stay "
+                    "dense) — the paged data plane would be a no-op")
+            self.cache = paged_cache
+            self.page_tokens = page_tokens
+            self.pages_per_slot = max_seq // page_tokens
+            self.allocator = disagg.PageAllocator(
+                n_slots * self.pages_per_slot)
+            self.slot_pages: dict[int, list[int]] = {}
         self.slot_free = [True] * n_slots
         self.slot_req: dict[int, Request] = {}
         self.slot_generated: dict[int, list] = {}
@@ -54,31 +112,59 @@ class ServeEngine:
         self._decode = jax.jit(model.decode_step)
         self._last_tokens = jnp.zeros((n_slots, 1), jnp.int32)
 
-        # single-sequence prefill that scatters into one cache slot
-        def prefill_into_slot(params, cache, tokens, slot):
+        # single-sequence prefill that scatters into one cache slot; in paged
+        # mode the dense prefill KV is re-paged into the slot's physical
+        # pages and the slot's page-table row is wired up
+        def prefill_into_slot(params, cache, tokens, slot, phys_pages):
             sub = model.init_cache(1, max_seq, enc_len=enc_len)
             logits, sub = model.prefill(params, {"tokens": tokens}, sub)
-
-            def insert(full, one):
-                # The batch axis is wherever `one` is 1 and `full` is
-                # n_slots with all other dims equal (scan-stacked leaves
-                # carry a leading layers dim, so it is not always axis 0).
-                if full.ndim != one.ndim:
-                    return full
-                for ax in range(full.ndim):
-                    rest_f = full.shape[:ax] + full.shape[ax + 1:]
-                    rest_o = one.shape[:ax] + one.shape[ax + 1:]
-                    if (one.shape[ax] == 1 and full.shape[ax] == n_slots
-                            and rest_f == rest_o):
-                        starts = [0] * full.ndim
-                        starts[ax] = slot
-                        return jax.lax.dynamic_update_slice(
-                            full, one.astype(full.dtype), tuple(starts))
-                return full
-            cache2 = jax.tree.map(insert, cache, sub)
+            cache2 = self._insert(cache, sub, slot, phys_pages)
             return logits, cache2
 
         self._prefill = jax.jit(prefill_into_slot, static_argnames=())
+
+    # -- cache insertion ---------------------------------------------------------
+    def _insert(self, full, one, slot, phys_pages):
+        """Insert the freshly prefilled 1-row cache ``one`` into slot ``slot``
+        of the engine cache ``full`` (recursive walk; paged attention dicts
+        scatter through the page table, everything else along the batch
+        axis)."""
+        if isinstance(full, dict):
+            if "k_pages" in full:
+                return self._insert_paged_attn(full, one, slot, phys_pages)
+            return {key: self._insert(full[key], one[key], slot, phys_pages)
+                    for key in full}
+        if isinstance(full, list):
+            return [self._insert(f, o, slot, phys_pages)
+                    for f, o in zip(full, one)]
+        return _insert_row(full, one, slot, self.n_slots)
+
+    def _insert_paged_attn(self, full, one, slot, phys_pages):
+        """Scatter a dense (1, S, KV, hd) prefill KV into the slot's physical
+        pages and point the slot's page-table row at them."""
+        pt = self.page_tokens
+
+        def repage_scatter(pool, dense):
+            *lead, _, s, kv, hd = dense.shape
+            d = dense.reshape(*lead, s // pt, pt, kv, hd).astype(pool.dtype)
+            if pool.ndim == 4:
+                return pool.at[phys_pages].set(d)
+            return pool.at[:, phys_pages].set(d)   # leading scan dim
+
+        table, pos = full["page_table"], full["pos"]
+        if table.ndim == 2:
+            table = table.at[slot].set(phys_pages)
+            pos = pos.at[slot].set(one["pos"][0])
+        else:
+            table = table.at[:, slot].set(phys_pages)
+            pos = pos.at[:, slot].set(one["pos"][:, 0])
+        return dict(
+            full,
+            k_pages=repage_scatter(full["k_pages"], one["k"]),
+            v_pages=repage_scatter(full["v_pages"], one["v"]),
+            page_table=table,
+            pos=pos,
+        )
 
     # -- public API --------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -116,14 +202,31 @@ class ServeEngine:
             ticks += 1
         return self.done
 
+    def stats(self) -> dict:
+        """Engine health: completions + the paged pool's allocator state."""
+        out = {"completed": len(self.done), "pending": len(self.pending),
+               "live_slots": len(self.slot_req), "paged_kv": self.paged_kv}
+        if self.paged_kv:
+            out.update(pages_allocated=self.allocator.allocs,
+                       pages_freed=self.allocator.frees,
+                       pages_free=self.allocator.n_free,
+                       page_tokens=self.page_tokens)
+        return out
+
     # -- internals --------------------------------------------------------------
     def _admit(self) -> None:
         while self.pending and any(self.slot_free):
             req = self.pending.pop(0)
             slot = self.slot_free.index(True)
             tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            if self.paged_kv:
+                phys = self.allocator.alloc(self.pages_per_slot)
+                self.slot_pages[slot] = phys
+                phys_arg = jnp.asarray(phys, jnp.int32)
+            else:
+                phys_arg = jnp.zeros((0,), jnp.int32)
             logits, self.cache = self._prefill(self.params, self.cache,
-                                               tokens, slot)
+                                               tokens, slot, phys_arg)
             first = int(np.asarray(jnp.argmax(logits[0, -1])))
             self.slot_free[slot] = False
             self.slot_req[slot] = req
@@ -138,6 +241,14 @@ class ServeEngine:
         del self.slot_req[slot]
         del self.slot_generated[slot]
         del self.slot_pos[slot]
+        if self.paged_kv and slot in self.slot_pages:
+            from repro.serve import disagg
+
+            # park the row before its pages go back to the free list: idle
+            # rows keep scattering per-step KV, and those writes must never
+            # land on pages a later admission may own
+            self.cache = disagg.park_slot(self.cache, slot)
+            self.allocator.free(self.slot_pages.pop(slot))
 
 
 __all__ = ["ServeEngine", "Request", "Completion"]

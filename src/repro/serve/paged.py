@@ -60,19 +60,34 @@ class PagedKVWindow:
     ``[p·page_elems, (p+1)·page_elems)``.  ``page_map`` (host side) tracks
     free pages; ``handles`` holds each live page's memory handle (what a
     remote decode engine would receive).
+
+    ``err_count`` aggregates the P5 stale-handle drops observed across every
+    handle-path transfer issued through this pool (put / get / accumulate /
+    batched transfers) — the per-transfer ``MemhandleWindow`` counters would
+    otherwise die with their throwaway view.  The disagg engine surfaces it
+    in its serving stats; a non-zero value means a peer pushed (or read)
+    through a freed page's handle.
     """
 
     window: DynamicWindow
     handles: Array            # (n_pages, 4) int32 — live pages' memhandles
     live: Array               # (n_pages,) bool
     spec: PageSpec
+    err_count: Array = None   # () int32 — aggregated stale-handle violations
+
+    def __post_init__(self):
+        if self.err_count is None:
+            self.err_count = jnp.zeros((), jnp.int32)
 
     def tree_flatten(self):
-        return (self.window, self.handles, self.live), (self.spec,)
+        return (self.window, self.handles, self.live, self.err_count), (self.spec,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], children[2], aux[0])
+        return cls(children[0], children[1], children[2], aux[0], children[3])
+
+    def _replace(self, **kw) -> "PagedKVWindow":
+        return dataclasses.replace(self, **kw)
 
     # -- construction ---------------------------------------------------------
     @classmethod
@@ -98,8 +113,8 @@ class PagedKVWindow:
         win = self.window.attach(page, offset=page * s.page_elems,
                                  size=s.page_elems)
         mh = memhandle_create(win, page)
-        return PagedKVWindow(win, self.handles.at[page].set(mh),
-                             self.live.at[page].set(True), s)
+        return self._replace(window=win, handles=self.handles.at[page].set(mh),
+                             live=self.live.at[page].set(True))
 
     def free_page(self, page: int) -> "PagedKVWindow":
         """Release through the substrate's consolidated lifetime machinery:
@@ -108,8 +123,8 @@ class PagedKVWindow:
         in the dup family's flush queues, so statically-created handle
         windows for this page raise on use-after-free."""
         win = memhandle_release(self.window, page)
-        return PagedKVWindow(win, self.handles.at[page].set(0),
-                             self.live.at[page].set(False), self.spec)
+        return self._replace(window=win, handles=self.handles.at[page].set(0),
+                             live=self.live.at[page].set(False))
 
     # -- data paths ---------------------------------------------------------------
     def write_page_local(self, page: int, kv: Array) -> "PagedKVWindow":
@@ -118,8 +133,7 @@ class PagedKVWindow:
         buf = jax.lax.dynamic_update_slice_in_dim(
             self.window.buffer, kv.reshape(-1).astype(self.window.buffer.dtype),
             page * s.page_elems, axis=0)
-        return PagedKVWindow(self.window._with(buffer=buf), self.handles,
-                             self.live, self.spec)
+        return self._replace(window=self.window._with(buffer=buf))
 
     def read_page(self, page: int) -> Array:
         s = self.spec
@@ -142,7 +156,8 @@ class PagedKVWindow:
         mhwin = mhwin.put(kv.reshape(-1), perm, stream=stream)
         mhwin = mhwin.flush(stream)
         parent = dataclasses.replace(mhwin.parent, config=self.window.config)
-        return PagedKVWindow(parent, self.handles, self.live, self.spec)
+        return self._replace(window=parent,
+                             err_count=self.err_count + mhwin.err_count)
 
     def accumulate_page(self, page: int, update: Array, perm, *,
                         op: str = "sum", offset: int = 0, stream: int = 0,
@@ -164,7 +179,8 @@ class PagedKVWindow:
                                  offset=offset, stream=stream)
         mhwin = mhwin.flush(stream)
         parent = dataclasses.replace(mhwin.parent, config=self.window.config)
-        return PagedKVWindow(parent, self.handles, self.live, self.spec)
+        return self._replace(window=parent,
+                             err_count=self.err_count + mhwin.err_count)
 
     def transfer_pages(self, pages, kvs, perm, stream: int = 0,
                        ) -> "PagedKVWindow":
@@ -174,13 +190,35 @@ class PagedKVWindow:
         cross-pod exchange, applied to KV pages.  ``pages`` must be static
         (Python ints): the per-page handles are resolved at trace time."""
         xfer = self.window.dup_with_info(order=True, scope="thread")
+        errs = self.err_count
         for page, kv in zip(pages, kvs):
             mhwin = win_from_memhandle(xfer, self.handles[page], slot=page)
             mhwin = mhwin.put(kv.reshape(-1), perm, stream=stream)
             xfer = mhwin.parent
+            errs = errs + mhwin.err_count
         xfer = xfer.flush(stream)
         parent = dataclasses.replace(xfer, config=self.window.config)
-        return PagedKVWindow(parent, self.handles, self.live, self.spec)
+        return self._replace(window=parent, err_count=errs)
+
+    def get_page_remote(self, page: int, perm, stream: int = 0,
+                        ) -> tuple["PagedKVWindow", Array]:
+        """Disaggregated read path: fetch a page from a peer's pool through
+        its memory handle — one request/response RTT, no target lookup.
+
+        Carries the P5 read guarantee end to end: a stale page handle's
+        response comes back **zeroed** (never the reused memory) and the drop
+        is aggregated into the pool's ``err_count`` — the decode engine can
+        distinguish "page freed under me" from data."""
+        s = self.spec
+        xfer = self.window.dup_with_info(order=True, scope="thread")
+        mhwin = win_from_memhandle(xfer, self.handles[page], slot=page)
+        mhwin, flat = mhwin.get(perm, offset=0, size=s.page_elems,
+                                stream=stream)
+        mhwin = mhwin.flush(stream)
+        parent = dataclasses.replace(mhwin.parent, config=self.window.config)
+        pool = self._replace(window=parent,
+                             err_count=self.err_count + mhwin.err_count)
+        return pool, flat.reshape(2, s.page_tokens, s.kv_heads, s.head_dim)
 
 
 __all__ = ["PageSpec", "PagedKVWindow"]

@@ -1,0 +1,148 @@
+"""P5 read-path + atomic-addressing regression suite (8 devices).
+
+Covers the bugfix half of the disagg PR — each check fails on the
+pre-fix code:
+
+1. **Stale-get masking**: a get through a released handle returns zeros
+   (never the reused memory) and bumps ``err_count`` — the read-path half
+   of the P5 lifetime guarantee that ``put``/``accumulate`` already had.
+2. **Paged err propagation**: ``PagedKVWindow`` transfers aggregate the
+   per-transfer ``MemhandleWindow.err_count`` into the pool instead of
+   throwing it away with the throwaway view.
+3. **Traced-offset fetch_op / compare_and_swap**: a rank-dependent
+   displacement addresses the location the *origin* named — the address
+   word ships with the request instead of being read origin-locally at
+   the target.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.rma import (Window, WindowConfig, DynamicWindow,
+                            memhandle_create, memhandle_release,
+                            win_from_memhandle)
+from repro.serve.paged import PagedKVWindow, PageSpec
+from repro import compat
+
+N = 8
+mesh = compat.make_mesh((N,), ("x",))
+RING = [(i, (i + 1) % N) for i in range(N)]
+
+
+def run(f, in_specs=P("x"), out_specs=P("x")):
+    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+    return np.asarray(g(jnp.zeros((N, 1))))
+
+
+# --- 1. stale handle get: masked to zeros + counted, never reused memory
+def stale_get(_):
+    rank = jax.lax.axis_index("x").astype(jnp.float32)
+    pool = rank * 100.0 + jnp.arange(16.0)
+    win = DynamicWindow.create_dynamic(pool, "x", N)
+    win = win.attach(0, offset=8, size=8)
+    mh = memhandle_create(win, 0)
+    # fresh read through the handle: origin i reads target (i+1)'s [8:12]
+    mhw = win_from_memhandle(win, mh)
+    mhw, fresh = mhw.get(RING, offset=0, size=4)
+    # release, then *reuse* the registration slot for different memory —
+    # the moment a stale read would silently observe reused memory
+    win = memhandle_release(mhw.free(), 0)
+    win = win.attach(0, offset=0, size=8)
+    mhw2 = win_from_memhandle(win, mh)   # the old (stale) handle
+    mhw2, stale = mhw2.get(RING, offset=0, size=4)
+    return jnp.concatenate(
+        [fresh, stale, mhw2.err_count[None].astype(jnp.float32)])[None]
+
+
+out = run(stale_get)
+tgt = (np.arange(N) + 1) % N
+np.testing.assert_allclose(out[:, :4], tgt[:, None] * 100.0 + np.arange(8, 12))
+assert (out[:, 4:8] == 0.0).all(), f"stale get must be masked: {out[:, 4:8]}"
+assert (out[:, 8] == 1.0).all(), f"stale get must be counted: {out[:, 8]}"
+print("stale-get masking + err_count OK")
+
+
+# --- 2. paged pool aggregates stale-drop counts across transfers
+def paged_err(_):
+    spec = PageSpec(page_tokens=2, kv_heads=1, head_dim=2, n_pages=3)
+    pool = PagedKVWindow.create(spec, "x", N, dtype=jnp.float32)
+    pool = pool.alloc_page(0)
+    pool = pool.alloc_page(1)
+    kv = jnp.full((2, 2, 1, 2), 5.0, jnp.float32)
+    pool = pool.free_page(0)
+    # batched push with one stale page (0, freed) and one live page (1):
+    # the live page lands, the stale push is dropped AND the count survives
+    pool = pool.transfer_pages([0, 1], [kv, kv * 2.0], RING)
+    e1 = pool.err_count
+    pool = pool.put_page_remote(0, kv * 3.0, RING)        # stale again
+    e2 = pool.err_count
+    pool = pool.accumulate_page(1, jnp.ones((spec.page_elems,)), RING)  # live
+    e3 = pool.err_count
+    page0 = pool.read_page(0)[0, 0, 0, 0]
+    page1 = pool.read_page(1)[0, 0, 0, 0]
+    return jnp.stack([e1.astype(jnp.float32), e2.astype(jnp.float32),
+                      e3.astype(jnp.float32), page0, page1])[None]
+
+
+out = run(paged_err)
+assert (out[:, 0] == 1.0).all(), f"stale batch drop must be aggregated: {out[:, 0]}"
+assert (out[:, 1] == 2.0).all(), f"stale put drop must accumulate: {out[:, 1]}"
+assert (out[:, 2] == 2.0).all(), f"live accumulate must not count: {out[:, 2]}"
+assert (out[:, 3] == 0.0).all(), f"freed page must stay untouched: {out[:, 3]}"
+assert (out[:, 4] == 11.0).all(), f"live page must land (+acc): {out[:, 4]}"
+print("paged err propagation OK")
+
+
+# --- 3a. fetch_op with a rank-dependent (traced) displacement
+def traced_fetch(_):
+    rank = jax.lax.axis_index("x")
+    buf = rank.astype(jnp.float32) * 10.0 + jnp.arange(8.0)
+    win = Window.allocate(buf, "x", N)
+    off = (rank % 3) + 1   # traced, different at origin and target
+    win, old = win.fetch_op(jnp.full((1,), 100.0), RING, op="sum", offset=off)
+    win = win.flush()
+    return jnp.concatenate([old, win.buffer])[None]
+
+
+out = run(traced_fetch)
+r = np.arange(N)
+tgt = (r + 1) % N
+# the old value fetched by origin r is target's element at *r's* offset
+np.testing.assert_allclose(out[:, 0], tgt * 10.0 + (r % 3) + 1)
+# and the +100 landed at the offset the *origin* named, on the target
+expect = r[:, None] * 10.0 + np.arange(8)[None, :]
+for d in range(N):
+    expect[d, ((d - 1) % N) % 3 + 1] += 100.0
+np.testing.assert_allclose(out[:, 1:], expect)
+print("traced-offset fetch_op OK")
+
+
+# --- 3b. compare_and_swap with a rank-dependent (traced) displacement
+def traced_cas(_):
+    rank = jax.lax.axis_index("x")
+    buf = rank.astype(jnp.float32) * 10.0 + jnp.arange(8.0)
+    win = Window.allocate(buf, "x", N)
+    off = (rank % 2) + 2   # traced
+    tgt_val = (((rank + 1) % N) * 10 + off).astype(jnp.float32)
+    win, old = win.compare_and_swap(tgt_val, jnp.float32(555.0), RING,
+                                    offset=off)
+    win = win.flush()
+    return jnp.concatenate([old[None], win.buffer])[None]
+
+
+out = run(traced_cas)
+# origin r compared against the true value at its named offset -> swap wins
+np.testing.assert_allclose(out[:, 0], tgt * 10.0 + (r % 2) + 2)
+expect = r[:, None] * 10.0 + np.arange(8)[None, :]
+for d in range(N):
+    expect[d, ((d - 1) % N) % 2 + 2] = 555.0
+np.testing.assert_allclose(out[:, 1:], expect)
+print("traced-offset compare_and_swap OK")
+
+print("READ PATH OK")

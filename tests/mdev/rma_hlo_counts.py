@@ -121,4 +121,58 @@ dup_phases = count_cp(f_dup)[0]
 print("rma_all_reduce via sum-specialized dup:", dup_phases)
 assert dup_phases == 2 * (N - 1) + 2, \
     "lent-window ring = 2(n-1) data phases + the exit flush epoch"
+
+# --- P5 serving (disagg acceptance): the batched page push stays at one
+# data phase per page — plus the handle's [addr, epoch] header word riding
+# the same packet as a second HLO ppermute — and exactly ONE thread-scoped
+# flush epoch (2 phases) per batch.  Crucially NO per-page completion acks:
+# adding a page costs 2 phases, never 4.
+from repro.serve.paged import PagedKVWindow, PageSpec
+
+def mk_push(k):
+    spec = PageSpec(page_tokens=2, kv_heads=1, head_dim=2, n_pages=4)
+    perm = [(i, (i + 1) % N) for i in range(N)]
+    def f(x):
+        pool = PagedKVWindow.create(spec, "x", N, dtype=jnp.float32)
+        for p in range(k):
+            pool = pool.alloc_page(p)
+        kvs = [jnp.full((spec.page_elems,), 1.0 + p, jnp.float32)
+               for p in range(k)]
+        pool = pool.transfer_pages(list(range(k)), kvs, perm)
+        return pool.window.buffer
+    return f
+
+push_counts = {k: count_cp(mk_push(k))[0] for k in (1, 2, 3)}
+print("transfer_pages phases by batch size:", push_counts)
+for k, c in push_counts.items():
+    assert c == 2 * k + 2, (
+        f"{k}-page batch must cost 1 data phase + 1 header word per page "
+        f"+ one flush epoch (= {2*k+2}), got {c} — a per-page ack snuck in")
+
+# --- P5 read path under P2: an ordered memhandle put→get chains on the
+# stream's channel (the get cannot overtake the put), so the intermediate
+# flush epoch of the unordered baseline disappears — 2 phases saved.
+from repro.core.rma import DynamicWindow, memhandle_create, win_from_memhandle
+
+def mk_ordered_get(order):
+    def f(x):
+        win = DynamicWindow.create_dynamic(
+            x, "x", N, WindowConfig(order=order, scope="thread"),
+            am_slots=1, am_msg=1)
+        win = win.attach(0, offset=0, size=4)
+        mh = memhandle_create(win, 0)
+        mhw = win_from_memhandle(win, mh)
+        mhw = mhw.put(jnp.ones((2,)), [(0, 1)], stream=0)
+        if not order:
+            mhw = mhw.flush(0)   # no P2: completion needed before the read
+        mhw, data = mhw.get([(0, 1)], offset=0, size=2, stream=0)
+        mhw = mhw.flush(0)
+        return data
+    return f
+
+g_ord = count_cp(mk_ordered_get(True))[0]
+g_unord = count_cp(mk_ordered_get(False))[0]
+print("memhandle put->get ordered:", g_ord, " unordered baseline:", g_unord)
+assert g_ord == g_unord - 2, \
+    "P2 ordering must remove the put->get intermediate flush epoch"
 print("ALL HLO COUNT CHECKS PASSED")

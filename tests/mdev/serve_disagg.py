@@ -1,0 +1,25 @@
+"""Disaggregated prefill→decode flow across 8 devices (the tentpole mdev).
+
+Runs the full round trip on the handle path — decode-side page allocation
+(the once-only P5 handle exchange), batched prefill pushes with one ordered
+flush epoch per sequence batch, a chained put_signal doorbell per sequence,
+fetch_op ticket admission, per-lane thread-scoped completion — and then a
+stale read after eviction to close the loop on the P5 read guarantee.
+
+Exercised in two shapes: the default 2-lane configuration and a single-lane
+3-sequence configuration (doorbells for more sequences than lanes).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.serve.disagg import demo_round_trip
+
+checks = demo_round_trip(n_seqs=2, pages_per_seq=2, n_lanes=2)
+assert all(checks.values()), checks
+
+checks = demo_round_trip(n_seqs=3, pages_per_seq=1, n_lanes=1)
+assert all(checks.values()), checks
+
+print("SERVE DISAGG OK")

@@ -1,0 +1,209 @@
+"""Regression tests for the P5 read-path + flush/atomic-addressing fixes.
+
+Single-device (trace-level) halves of each claim live here; the
+multi-device data-landing halves run in ``tests/mdev/read_path.py`` via a
+subprocess (8 fake host devices must be configured before JAX initializes).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.rma import (
+    SCOPE_THREAD,
+    DynamicWindow,
+    FlushQueues,
+    Window,
+    WindowConfig,
+    memhandle_create,
+    memhandle_release,
+    win_from_memhandle,
+)
+
+HERE = os.path.dirname(__file__)
+
+
+def _run1(f, n_in: int = 8):
+    mesh = compat.make_mesh((1,), ("x",))
+    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                                 check_vma=False))
+    return g(jnp.zeros((n_in,), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# thread-scope flush must name a stream (P1 contract)
+# ---------------------------------------------------------------------------
+
+
+def test_thread_scope_flush_without_stream_raises():
+    win = Window.allocate(jnp.zeros((4,)), "x", 1, WindowConfig(scope="thread"))
+    with pytest.raises(ValueError, match="thread-scope flush must name"):
+        win.flush()
+
+
+def test_thread_scope_flush_with_stream_ok_and_process_drainall_ok():
+    # named stream on thread scope: fine (even with an empty queue);
+    # process scope still drains all streams without naming one
+    win = Window.allocate(jnp.zeros((4,)), "x", 1, WindowConfig(scope="thread"))
+    win.flush(stream=0)
+    wp = Window.allocate(jnp.zeros((4,)), "x", 1, WindowConfig(max_streams=2))
+    wp.flush()
+
+
+def test_memhandle_flush_inherits_thread_scope_contract():
+    # a memhandle window over a thread-scoped parent routes flush through the
+    # parent's scope: the stream-less call is the same contract violation
+    def step(buf):
+        win = DynamicWindow.create_dynamic(
+            buf, "x", 1, WindowConfig(scope="thread"), am_slots=1, am_msg=1)
+        win = win.attach(0, offset=0, size=4)
+        mhw = win_from_memhandle(win, memhandle_create(win, 0))
+        mhw = mhw.put(jnp.ones((2,)), [(0, 0)])
+        with pytest.raises(ValueError, match="thread-scope flush must name"):
+            mhw.flush()
+        return mhw.flush(0).parent.buffer
+
+    _run1(step)
+
+
+def test_take_direct_contract():
+    q = FlushQueues()
+    q.note_op(0, ((0, 0),))
+    with pytest.raises(ValueError, match="thread-scope"):
+        q.take(SCOPE_THREAD, None)
+    assert q.take(SCOPE_THREAD, 0) == {0: ((0, 0),)}
+
+
+def test_thread_scope_flush_local_contract():
+    """flush_local enforces the same stream-naming contract as flush: a
+    stream-less thread-scope call would silently tie every pending stream's
+    local completion together (the cross-stream edges P1 promises away)."""
+    win = Window.allocate(jnp.zeros((4,)), "x", 1,
+                          WindowConfig(scope="thread", max_streams=2))
+    with pytest.raises(ValueError, match="thread-scope flush_local"):
+        win.flush_local()
+    win.flush_local(stream=1)
+    q = FlushQueues()
+    q.note_op(0, ((0, 0),))
+    q.note_op(1, ((0, 0),))
+    assert q.queued_streams(SCOPE_THREAD, 1) == [1]
+    assert sorted(q.queued_streams("process", None)) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# stale-handle get: masked + counted (single-device trace-level check)
+# ---------------------------------------------------------------------------
+
+
+def test_stale_get_masked_and_counted():
+    def step(buf):
+        win = DynamicWindow.create_dynamic(buf + 7.0, "x", 1)
+        win = win.attach(0, offset=0, size=4)
+        mh = memhandle_create(win, 0)
+        mhw = win_from_memhandle(win, mh)
+        mhw, fresh = mhw.get([(0, 0)], offset=0, size=2)
+        win = memhandle_release(mhw.free(), 0)
+        win = win.attach(0, offset=0, size=4)       # slot reused
+        stale_w = win_from_memhandle(win, mh)       # old handle: stale epoch
+        stale_w, stale = stale_w.get([(0, 0)], offset=0, size=2)
+        return jnp.concatenate(
+            [fresh, stale, stale_w.err_count[None].astype(jnp.float32)])
+
+    out = np.asarray(_run1(step))
+    np.testing.assert_allclose(out[:2], 7.0)   # fresh read sees the data
+    np.testing.assert_allclose(out[2:4], 0.0)  # stale read is zero-masked
+    assert out[4] == 1.0                       # ...and counted
+
+
+def test_fresh_get_counts_nothing():
+    def step(buf):
+        win = DynamicWindow.create_dynamic(buf + 3.0, "x", 1)
+        win = win.attach(0, offset=2, size=4)
+        mhw = win_from_memhandle(win, memhandle_create(win, 0))
+        mhw, data = mhw.get([(0, 0)], offset=1, size=2)
+        return jnp.concatenate([data, mhw.err_count[None].astype(jnp.float32)])
+
+    out = np.asarray(_run1(step))
+    np.testing.assert_allclose(out[:2], 3.0)
+    assert out[2] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# ordered-get chaining: under P2 the get request rides the stream's channel
+# ---------------------------------------------------------------------------
+
+
+def _get_jaxpr_text(order: bool) -> str:
+    mesh = compat.make_mesh((1,), ("x",))
+
+    def step(buf):
+        win = DynamicWindow.create_dynamic(
+            buf, "x", 1, WindowConfig(order=order), am_slots=1, am_msg=1)
+        win = win.attach(0, offset=0, size=4)
+        mhw = win_from_memhandle(win, memhandle_create(win, 0))
+        mhw, data = mhw.get([(0, 0)], offset=0, size=2)
+        return data
+
+    f = compat.shard_map(step, mesh=mesh, in_specs=P(), out_specs=P(),
+                         check_vma=False)
+    return str(jax.make_jaxpr(f)(jnp.zeros((8,), jnp.float32)))
+
+
+def test_ordered_get_ties_request_to_channel_token():
+    """P2 regression: with ``order=True`` the get's request header must be
+    chained on the stream's channel token (the arithmetic tie adds ops to
+    the traced program); without it, ordered and unordered gets trace
+    identically and a get can overtake a prior same-stream put."""
+    ordered, unordered = _get_jaxpr_text(True), _get_jaxpr_text(False)
+    assert ordered != unordered
+    # the tie is a multiply-by-zero chain folded into the request header
+    assert ordered.count("mul") > unordered.count("mul")
+
+
+# ---------------------------------------------------------------------------
+# traced-offset atomics: trace-level sanity (value checks live in mdev)
+# ---------------------------------------------------------------------------
+
+
+def test_fetch_op_accepts_traced_offset():
+    def step(buf):
+        win = Window.allocate(buf + 2.0, "x", 1)
+        off = jax.lax.axis_index("x") + 1   # traced displacement
+        win, old = win.fetch_op(jnp.full((1,), 5.0), [(0, 0)], op="sum",
+                                offset=off)
+        win, swapped = win.compare_and_swap(
+            jnp.float32(2.0), jnp.float32(9.0), [(0, 0)], offset=off + 1)
+        return jnp.concatenate([old, swapped[None], win.buffer])
+
+    out = np.asarray(_run1(step))
+    assert out[0] == 2.0          # fetched old value at offset 1
+    assert out[1] == 2.0          # CAS old value at offset 2
+    np.testing.assert_allclose(out[2:], [2.0, 7.0, 9.0] + [2.0] * 5)
+
+
+# ---------------------------------------------------------------------------
+# the multi-device halves (subprocess: 8 fake devices)
+# ---------------------------------------------------------------------------
+
+
+def _run_mdev(script: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "mdev", script)],
+        capture_output=True, text=True, env=env, timeout=600,
+        cwd=os.path.join(HERE, ".."))
+    assert proc.returncode == 0, f"{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_read_path_multidevice():
+    out = _run_mdev("read_path.py")
+    assert "READ PATH OK" in out

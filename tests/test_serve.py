@@ -89,3 +89,151 @@ def test_paged_window_multidevice():
         cwd=os.path.join(HERE, ".."))
     assert proc.returncode == 0, f"{proc.stdout}\n{proc.stderr}"
     assert "PAGED WINDOW OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# disaggregated serving: the paged-KV engine + the SPMD round trip
+# ---------------------------------------------------------------------------
+
+
+def test_paged_engine_matches_dense_greedy(model_and_params):
+    """The page-table indirection must be a pure layout change: paged and
+    dense engines produce identical greedy decodes for identical requests."""
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(3)
+    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=4 + 3 * i),
+                    max_new_tokens=4) for i in range(3)]
+    dense = ServeEngine(m, params, n_slots=2, max_seq=64)
+    paged = ServeEngine(m, params, n_slots=2, max_seq=64,
+                        paged_kv=True, page_tokens=8)
+    for r in reqs:
+        dense.submit(Request(r.rid, r.prompt, r.max_new_tokens))
+        paged.submit(Request(r.rid, r.prompt, r.max_new_tokens))
+    d = {c.rid: c.tokens for c in dense.run()}
+    p = {c.rid: c.tokens for c in paged.run()}
+    assert d == p
+
+
+def test_paged_engine_page_churn_reuses_pages(model_and_params):
+    """More requests than slots: pages are freed at release and re-allocated
+    to later admissions — the decode of a re-using slot must not be polluted
+    by the previous tenant (parking + page-table rewire)."""
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(4)
+    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=4 + i % 4),
+                    max_new_tokens=3 + i % 3) for i in range(6)]
+    paged = ServeEngine(m, params, n_slots=2, max_seq=32,
+                        paged_kv=True, page_tokens=8)
+    for r in reqs:
+        paged.submit(r)
+    done = {c.rid: c.tokens for c in paged.run()}
+    assert sorted(done) == list(range(6))
+    st = paged.stats()
+    assert st["pages_allocated"] == 6 * (32 // 8)
+    assert st["pages_freed"] == st["pages_allocated"]
+    assert st["pages_free"] == 2 * (32 // 8)
+    # every request decodes exactly as it would alone on a dense engine
+    for r in reqs:
+        solo = ServeEngine(m, params, n_slots=1, max_seq=32)
+        solo.submit(Request(r.rid, r.prompt, r.max_new_tokens))
+        assert solo.run()[0].tokens == done[r.rid], f"rid={r.rid}"
+
+
+def test_paged_engine_rejects_indivisible_page_size(model_and_params):
+    cfg, m, params = model_and_params
+    with pytest.raises(ValueError, match="not divisible"):
+        ServeEngine(m, params, n_slots=1, max_seq=20, paged_kv=True,
+                    page_tokens=16)
+
+
+def test_paged_engine_rejects_archs_without_gqa_kv():
+    """paged_kv on a stack with no self-attention KV (pure SSM) must refuse
+    instead of silently serving dense while reporting page activity."""
+    cfg = tiny_config("mamba2-370m")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="no self-attention KV"):
+        ServeEngine(m, params, n_slots=1, max_seq=32, paged_kv=True,
+                    page_tokens=8)
+
+
+def test_init_paged_gqa_cache_matches_paginated_dense():
+    """The standalone paged-cache constructor builds the same layout
+    (parking page included) as paginating a dense cache, and a decode step
+    through it matches the dense decode."""
+    from repro.models import attention
+    from repro.serve.disagg import paginate_cache
+
+    cfg = tiny_config("qwen3-4b")
+    B, S, pt = 2, 16, 4
+    dense = attention.init_gqa_cache(cfg, B, S, jnp.float32)
+    via_paginate = paginate_cache(dense, pt)
+    direct = attention.init_paged_gqa_cache(cfg, B, S, jnp.float32, pt)
+    assert {k: v.shape for k, v in direct.items()} == \
+           {k: v.shape for k, v in via_paginate.items()}
+    np.testing.assert_array_equal(direct["page_table"],
+                                  np.asarray(via_paginate["page_table"]))
+    # wire row 0 to real pages and decode one token: paged == dense
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(B, 1, cfg.d_model), jnp.float32)
+    params = attention.init_gqa(jax.random.PRNGKey(1), cfg)
+    paged = dict(direct,
+                 page_table=direct["page_table"].at[0].set(
+                     jnp.arange(S // pt)))
+    positions = jnp.zeros((B, 1), jnp.int32)
+    out_d, _ = attention.gqa_attention(params, x, cfg, positions=positions,
+                                       cache=dense)
+    out_p, new_p = attention.gqa_attention(params, x, cfg,
+                                           positions=positions, cache=paged)
+    np.testing.assert_allclose(np.asarray(out_d[0]), np.asarray(out_p[0]),
+                               rtol=1e-5, atol=1e-5)
+    assert new_p["pos"].tolist() == [1, 1]
+
+
+def test_paged_decode_drops_overflow_writes_like_dense():
+    """A row at pos == max_seq has no page for the new token: the paged
+    scatter must drop it (as the dense layout's OOB write is dropped), not
+    clamp onto the row's last page and corrupt its first KV slot."""
+    from repro.models import attention
+
+    cfg = tiny_config("qwen3-4b")
+    B, S, pt = 1, 8, 4
+    params = attention.init_gqa(jax.random.PRNGKey(1), cfg)
+    paged = attention.init_paged_gqa_cache(cfg, B, S, jnp.float32, pt)
+    paged = dict(paged,
+                 page_table=paged["page_table"].at[0].set(jnp.arange(S // pt)),
+                 k_pages=paged["k_pages"] + 3.0,
+                 v_pages=paged["v_pages"] + 3.0,
+                 pos=jnp.full((B,), S, jnp.int32))
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(B, 1, cfg.d_model), jnp.float32)
+    positions = jnp.full((B, 1), S, jnp.int32)
+    _, new = attention.gqa_attention(params, x, cfg, positions=positions,
+                                     cache=paged)
+    np.testing.assert_array_equal(np.asarray(new["k_pages"]),
+                                  np.asarray(paged["k_pages"]))
+    np.testing.assert_array_equal(np.asarray(new["v_pages"]),
+                                  np.asarray(paged["v_pages"]))
+
+
+def test_paged_pool_exhaustion_raises():
+    from repro.serve.disagg import PageAllocator
+    alloc = PageAllocator(4)
+    pages = alloc.alloc(3)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        alloc.alloc(2)
+    alloc.free(pages)
+    assert alloc.n_free == 4
+    assert alloc.alloc(4) == [3, 0, 1, 2]   # FIFO reuse: freed pages go last
+
+
+def test_disagg_round_trip_multidevice():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "mdev", "serve_disagg.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+        cwd=os.path.join(HERE, ".."))
+    assert proc.returncode == 0, f"{proc.stdout}\n{proc.stderr}"
+    assert "SERVE DISAGG OK" in proc.stdout
