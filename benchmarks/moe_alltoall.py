@@ -1,0 +1,156 @@
+"""MoE dispatch exchange — declared one-sided all-to-all vs baselines.
+
+The tentpole measurement behind ``docs/moe_ep.md``: the token all-to-all a
+mixture-of-experts layer issues every step, in three lowered shapes:
+
+* ``declared``   — ``rma_all_to_all(order=True, declare=True)``: per-peer
+  chunked puts on per-direction issue streams, fetch_op count headers, and
+  one P2-chained doorbell per peer — **no** intermediate flush epochs.
+* ``undeclared`` — the hint-less baseline (``order=False, declare=False``):
+  one completion-ack RTT per peer before its notification plus the
+  software-path flag ack (the per-peer tax the §2.2/§2.3 declarations
+  elide; asserted structurally in ``tests/mdev/rma_hlo_counts.py``).
+* ``gspmd``      — ``lax.all_to_all`` inside the same shard_map: the
+  monolithic collective the partitioner inserts at a sharded dispatch
+  buffer (no counts, no doorbells — the exchange the paper's pattern
+  replaces with notified one-sided access).
+
+Plus ``combine_declared``/``combine_undeclared`` — the return direction
+(``op="sum"``): every landing an accumulate routed through the
+op-specialized engine; undeclared landings pay the generic per-chunk ack.
+
+Writes ``benchmarks/results/BENCH_moe_alltoall.json`` (rows + derived
+speedups).  ``--smoke`` runs a seconds-scale configuration for CI.
+``--table`` renders an existing artifact as the markdown table embedded in
+``docs/moe_ep.md``.
+"""
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from benchmarks._harness import (N_DEV, emit, mesh1d, require_devices,
+                                 scan_op, smap, time_fn)
+from repro.core.rma import rma_all_to_all
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+JSON_PATH = os.path.join(RESULTS, "BENCH_moe_alltoall.json")
+
+D_MODEL = 64
+
+
+def _variants():
+    return {
+        "declared": dict(order=True, declare=True, op=None),
+        "undeclared": dict(order=False, declare=False, op=None),
+        "combine_declared": dict(order=True, declare=True, op="sum"),
+        "combine_undeclared": dict(order=False, declare=False, op="sum"),
+    }
+
+
+def render_table(path: str = JSON_PATH) -> str:
+    """Markdown table from a BENCH_moe_alltoall.json artifact
+    (``python -m benchmarks.moe_alltoall --table``, embedded in
+    ``docs/moe_ep.md``)."""
+    with open(path) as f:
+        doc = json.load(f)
+    cells: dict[int, dict[str, float]] = {}
+    for row in doc["rows"]:
+        parts = row["name"].split("/")
+        if len(parts) != 3:
+            continue
+        _, variant, rows_per_peer = parts
+        cells.setdefault(int(rows_per_peer), {})[variant] = row["us_per_call"]
+    variants = ["declared", "undeclared", "gspmd",
+                "combine_declared", "combine_undeclared"]
+    lines = [
+        "| rows/peer | declared µs | undeclared µs | gspmd µs "
+        "| combine decl. µs | combine undecl. µs |",
+        "|---:|---:|---:|---:|---:|---:|",
+    ]
+    for rp in sorted(cells):
+        row = cells[rp]
+        cols = " | ".join(f"{row[v]:.1f}" if v in row else "—"
+                          for v in variants)
+        lines.append(f"| {rp} | {cols} |")
+    sp = doc.get("declared_vs_undeclared_speedup")
+    if sp:
+        lines.append(f"\nDeclared vs undeclared dispatch: **{sp:.2f}×** "
+                     "(geomean over payload sizes).")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rows", type=str, default="8,32,128",
+                    help="comma-separated per-peer row counts")
+    ap.add_argument("--chunks", type=int, default=2,
+                    help="data chunks per peer")
+    ap.add_argument("--iters", type=int, default=15)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny payloads + few iters (CI)")
+    ap.add_argument("--table", action="store_true",
+                    help="render the existing JSON artifact as markdown")
+    args = ap.parse_args()
+    if args.table:
+        print(render_table())
+        return
+    require_devices()
+    mesh = mesh1d()
+    row_counts = [int(r) for r in args.rows.split(",")]
+    iters = args.iters
+    if args.smoke:
+        row_counts, iters = row_counts[:1], 3
+    rows = []
+
+    def record(name, us, derived=""):
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+
+    speedups = []
+    for rp in row_counts:
+        x0 = jnp.ones((N_DEV * rp, D_MODEL), jnp.float32)
+        mb = N_DEV * rp * D_MODEL * 4 / 2**20
+        lat = {}
+
+        for variant, kw in _variants().items():
+            def body(carry, kw=kw):
+                (x,) = carry
+                res = rma_all_to_all(x, "x", N_DEV, chunks=args.chunks, **kw)
+                return (res.data,)
+
+            fn, k = scan_op(body, 8)
+            g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
+            us = time_fn(g, ((x0,),), k_inner=k, iters=iters)
+            lat[variant] = us
+            record(f"moe_alltoall/{variant}/{rp}", us,
+                   f"chunks={args.chunks} {mb:.2f}MiB/dev")
+
+        def body_gspmd(carry):
+            (x,) = carry
+            return (lax.all_to_all(x, "x", 0, 0, tiled=True),)
+
+        fn, k = scan_op(body_gspmd, 8)
+        g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
+        us = time_fn(g, ((x0,),), k_inner=k, iters=iters)
+        lat["gspmd"] = us
+        record(f"moe_alltoall/gspmd/{rp}", us,
+               f"partitioner collective {mb:.2f}MiB/dev")
+        speedups.append(lat["undeclared"] / lat["declared"])
+
+    geo = float(jnp.exp(jnp.mean(jnp.log(jnp.asarray(speedups)))))
+    doc = {"section": "moe_alltoall", "rows": rows,
+           "declared_vs_undeclared_speedup": geo}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {JSON_PATH} ({len(rows)} rows, "
+          f"declared_vs_undeclared_speedup={geo:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

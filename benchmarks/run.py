@@ -14,6 +14,8 @@ Sections:
   acc_latency      — paper §2.3: accumulate-engine path sweep (intrinsic /
                      tiled / generic crossover; calibrates the router)
   rma_collectives  — beyond-paper: one-sided ring collectives
+  moe_alltoall     — the MoE dispatch exchange: declared one-sided
+                     all-to-all vs the undeclared baseline vs GSPMD
   serve_disagg     — the disaggregated serving data plane: batched page-push
                      pages/s + per-token handle-vs-query read latency
   roofline         — §Roofline summary from the dry-run artifacts (if present)
@@ -32,6 +34,7 @@ MODULES = [
     "benchmarks.progress",
     "benchmarks.acc_latency",
     "benchmarks.rma_collectives",
+    "benchmarks.moe_alltoall",
     "benchmarks.serve_disagg",
 ]
 

@@ -24,6 +24,11 @@ class MoEConfig:
     #: first `first_dense` layers use a dense FFN instead (DeepSeek).
     first_dense: int = 0
     d_ff_first_dense: int = 0
+    #: expert-parallel dispatch: "gspmd" hands the token all-to-all to the
+    #: partitioner; "rma" runs the sort-based dispatch inside shard_map over
+    #: the expert axis through the one-sided declared-usage collective
+    #: (repro.core.rma.alltoall; see docs/moe_ep.md).
+    ep_mode: str = "gspmd"
 
     def capacity(self, tokens: int) -> int:
         c = math.ceil(tokens * self.top_k * self.capacity_factor / self.num_experts)

@@ -19,7 +19,9 @@ Public surface:
   (env > declared ``max_atomic_elems`` > benchmark calibration > envelope
   default) — see ``docs/accumulate_paths.md``.
 * one-sided collectives: :func:`rma_all_reduce`, :func:`ring_reduce_scatter`,
-  :func:`ring_all_gather`, :func:`put_signal`, :func:`put_signal_pipelined`.
+  :func:`ring_all_gather`, :func:`put_signal`, :func:`put_signal_pipelined`,
+  and :func:`rma_all_to_all` — the declared-usage MoE token exchange
+  (``alltoall.py``; see ``docs/moe_ep.md``).
 """
 from repro.core.rma.substrate import (
     SCOPE_PROCESS,
@@ -64,6 +66,10 @@ from repro.core.rma.collectives import (
     ring_reduce_scatter,
     rma_all_reduce,
 )
+from repro.core.rma.alltoall import (
+    AllToAllResult,
+    rma_all_to_all,
+)
 
 __all__ = [
     "Substrate",
@@ -97,4 +103,6 @@ __all__ = [
     "ring_all_gather",
     "put_signal",
     "put_signal_pipelined",
+    "rma_all_to_all",
+    "AllToAllResult",
 ]

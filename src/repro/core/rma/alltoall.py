@@ -1,0 +1,191 @@
+"""One-sided all-to-all token exchange — the MoE dispatch collective.
+
+The expert-parallel all-to-all is exactly the pattern the paper's extensions
+were designed for: many small peer-to-peer transfers followed by a
+notification, repeated for every peer.  ``rma_all_to_all`` composes the
+substrate's declared-usage machinery into that shape:
+
+* **header phase** — each origin publishes how many valid rows it is sending
+  to each peer with a ``fetch_op`` on a small control window (one remote
+  atomic per peer, the §2.3 intrinsic path).  Header words are indexed *by
+  ring shift*, not by source rank, so the displacement is a trace-time
+  constant and ships no address word.
+* **data phases** — the payload chunk for each peer is issued as
+  ``chunks`` back-to-back one-sided transfers on a per-direction issue
+  stream (forward shifts on stream 0, backward shifts on stream 1 — the
+  P1 × P4 composition: two halves of the peer set never serialize each
+  other's completion).  With ``op`` set, every landing is an *accumulate
+  routed through the op-specialized engine* (``acc_hop``): a declared
+  same-op exchange stays at one data phase per chunk; an undeclared one
+  pays the conservative per-chunk completion ack.
+* **doorbell** — after a peer's chunks, one accumulate raises that peer's
+  doorbell word.  Under P2 (``order=True``) it chains behind the data on
+  the stream's ordered channel — **no intermediate flush**; the undeclared
+  baseline (``order=False``/``declare=False``) must complete the data first
+  (one ack RTT per peer, the paper Listing-1 shape) and its hint-less flag
+  takes the software path (one more completion-ack phase per peer).
+
+Cost in lowered HLO per peer (``c`` chunks): declared = ``c`` data phases +
+2 (fetch_op RTT) + 1 (doorbell), no flush between; undeclared additionally
+pays 2 (the pre-doorbell flush epoch) + 1 (software-flag ack) — 3 phases per
+peer, asserted in ``tests/mdev/rma_hlo_counts.py``.
+
+Layout convention: ``x`` has leading dimension ``axis_size * m``; rows
+``[j*m, (j+1)*m)`` are the payload for peer ``j``.  The result's rows
+``[i*m, (i+1)*m)`` hold what peer ``i`` sent here.  ``counts[j]`` (optional)
+is the number of valid rows in chunk ``j``; receivers get the matching
+``counts`` view indexed by *source* rank.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.rma import accumulate as acc_engine
+from repro.core.rma.collectives import _ring_substrate
+from repro.core.rma.substrate import SCOPE_THREAD, _tie
+from repro.core.rma.window import Window, WindowConfig
+
+Array = jax.Array
+
+
+class AllToAllResult(NamedTuple):
+    """``data``: exchanged rows, chunk ``i`` from peer ``i``.  ``counts``:
+    valid-row count per source chunk (from the fetch_op header exchange).
+    ``bells``: per-source doorbell words — 1 for every remote peer whose
+    notification landed (0 for self)."""
+
+    data: Array
+    counts: Array
+    bells: Array
+
+
+def _peer_stream(shift: int, n: int) -> int:
+    """Forward half of the peer set on stream 0, backward half on stream 1."""
+    return 0 if shift <= n // 2 else 1
+
+
+def rma_all_to_all(
+    x: Array,
+    axis: str,
+    axis_size: int,
+    *,
+    counts: Array | None = None,
+    chunks: int = 1,
+    order: bool = True,
+    declare: bool = True,
+    op: str | None = None,
+    win: Window | None = None,
+) -> AllToAllResult:
+    """One-sided all-to-all over ``axis`` (run inside ``shard_map``).
+
+    ``x``: ``(axis_size * m, ...)`` — rows ``[j*m, (j+1)*m)`` go to peer
+    ``j``; the own chunk is copied locally.
+    ``counts``: optional ``(axis_size,)`` int32 valid-row counts per
+    destination, exchanged through the fetch_op header phase.
+    ``chunks``: data transfers per peer (``m`` must be divisible).
+    ``order``: P2 — the doorbell chains behind the peer's data with no
+    intermediate flush; ``False`` is the paper-faithful baseline paying one
+    ack RTT per peer before its notification.
+    ``declare``: declare ``same_op="sum"`` usage on the control window (and,
+    with ``op``, on the data view) so flags/landings route through the
+    engine's specialized path; ``False`` is the hint-less baseline whose
+    accumulates pay the conservative software-path completion ack.
+    ``op``: when set (e.g. ``"sum"``), data lands as accumulates routed
+    through the engine (the MoE *combine* direction) instead of plain puts.
+    ``win``: lend a window's substrate for the data phases (dup'd with the
+    exchange's per-use config, paper P4) instead of allocating one.
+    """
+    n = axis_size
+    if x.shape[0] % n:
+        raise ValueError(
+            f"leading dim {x.shape[0]} not divisible by axis size {n}")
+    m = x.shape[0] // n
+    if m % chunks:
+        raise ValueError(f"per-peer rows {m} not divisible by chunks={chunks}")
+    if counts is not None and counts.shape != (n,):
+        raise ValueError(f"counts must have shape ({n},), got {counts.shape}")
+    if counts is None:
+        counts = jnp.full((n,), m, jnp.int32)
+    counts = counts.astype(jnp.int32)
+    if n == 1:
+        return AllToAllResult(x, counts, jnp.zeros((1,), jnp.int32))
+
+    rank = lax.axis_index(axis)
+    step = m // chunks
+    streams = (0, 1) if n > 2 else (0,)
+
+    # control window: word k = count from the shift-k predecessor, word n+k =
+    # that peer's doorbell.  Shift-indexed words keep every displacement a
+    # trace-time constant (no shipped address word on the header phase).
+    hdr_cfg = WindowConfig(scope=SCOPE_THREAD, order=order,
+                           max_streams=len(streams),
+                           same_op="sum" if declare else None,
+                           accumulate_ops=("sum",))
+    hdr = Window.allocate(jnp.zeros((2 * n,), jnp.int32), axis, n, hdr_cfg)
+
+    # undeclared accumulate landings get a hint-less data view (same_op=None
+    # all the way through _ring_substrate), so route() takes the software path
+    data_op = op if (op is not None and declare) else None
+    sub, data_cfg = _ring_substrate(x, axis, n, order=order, win=win,
+                                    streams=streams, same_op=data_op)
+
+    out = jnp.zeros_like(x)
+    own = lax.dynamic_slice_in_dim(x, rank * m, m, axis=0)
+    out = lax.dynamic_update_slice_in_dim(out, own, rank * m, axis=0)
+
+    for k in range(1, n):
+        s = _peer_stream(k, n)
+        perm = tuple((i, (i + k) % n) for i in range(n))
+        dest = (rank + k) % n
+        src = (rank - k) % n
+        # -- header: publish this chunk's valid-row count at the target
+        dest_cnt = lax.dynamic_slice_in_dim(counts, dest, 1, axis=0)
+        hdr, _ = hdr.fetch_op(dest_cnt, perm, op="sum", offset=k, stream=s)
+        # -- data: chunked one-sided transfers on the direction's stream
+        piece = lax.dynamic_slice_in_dim(x, dest * m, m, axis=0)
+        for c in range(chunks):
+            pc = lax.dynamic_slice_in_dim(piece, c * step, step, axis=0)
+            if op is None:
+                sub, got = sub.channel_send(pc, perm, stream=s)
+            else:
+                cur = lax.dynamic_slice_in_dim(out, src * m + c * step, step,
+                                               axis=0)
+                sub, got = acc_engine.acc_hop(sub, data_cfg, cur, pc, perm,
+                                              op=op, stream=s)
+            out = lax.dynamic_update_slice_in_dim(out, got,
+                                                  src * m + c * step, axis=0)
+        # -- doorbell: notify the peer its chunk (and count) landed
+        if not order:
+            # no P2: the notification must not overtake the data — pay the
+            # completion-ack round-trip (paper Listing 1)
+            sub = sub.flush(scope=SCOPE_THREAD, stream=s)
+        bell = _tie(jnp.ones((1,), jnp.int32), sub.token(s))
+        hdr = acc_engine.routed_accumulate(hdr, bell, perm, op="sum",
+                                           offset=n + k, stream=s)
+
+    # exit epoch: complete the control window per stream (thread scope) and,
+    # on a lent data window, drain the streams the exchange used so the
+    # caller gets its substrate back with nothing in flight.
+    for s in streams:
+        hdr = hdr.flush(stream=s)
+        out = _tie(out, hdr.substrate.token(s))
+    if win is not None:
+        for s in streams:
+            sub = sub.flush(scope=SCOPE_THREAD, stream=s)
+            out = _tie(out, sub.token(s))
+
+    # re-index the shift-addressed header words by source rank
+    shift = jnp.arange(n)
+    src_of_shift = jnp.mod(rank - shift, n)
+    by_shift = hdr.buffer[:n].at[0].set(
+        lax.dynamic_slice_in_dim(counts, rank, 1, axis=0)[0])
+    recv_counts = jnp.zeros((n,), jnp.int32).at[src_of_shift].set(by_shift)
+    bells = jnp.zeros((n,), jnp.int32).at[src_of_shift].set(hdr.buffer[n:])
+    return AllToAllResult(out, recv_counts, bells)
+
+
+__all__ = ["rma_all_to_all", "AllToAllResult"]

@@ -370,6 +370,7 @@ def put_signal_pipelined(
     perm,
     *,
     chunks: int,
+    data_offset: int = 0,
     flag_offset: int,
     flag_value=None,
     stream: int = 0,
@@ -381,6 +382,11 @@ def put_signal_pipelined(
     signal chains behind the last chunk.  Without P2, a flush is needed
     before the signal (one ack RTT total — still amortized, but the flush
     waits on *all* streams under process scope).
+
+    ``data_offset``: base displacement of the exchange in the remote window
+    (chunk ``c`` lands at ``data_offset + c * step``), so a pipelined
+    exchange can target a sub-range — e.g. one lane's slice of a shared
+    gradient window — exactly like the single-put ``put_signal``.
 
     ``order``: per-use override of the ordering info key.  Applied by
     **duplicating** the caller's window with the overridden config (paper
@@ -401,7 +407,7 @@ def put_signal_pipelined(
         view = view.put(
             lax.dynamic_slice_in_dim(data, c * step, step, axis=0),
             perm,
-            offset=c * step,
+            offset=data_offset + c * step,
             stream=stream,
         )
     if not view.config.order:

@@ -7,12 +7,19 @@ offenders per source; the policy layer decides between logging, raising (so
 the launcher restarts onto a healthy mesh slice), or — on real multi-host
 deployments — re-dispatching the slow host's shard.
 
+Warmup is *robust*: the first ``warmup_steps`` samples (which include
+compile-time spikes and allocator churn) never feed the EMA directly —
+the baseline is re-seeded from their **median** each step, so a single slow
+warmup step cannot inflate the baseline and mask real stragglers later.
+Once armed, only non-straggler steps update the EMA.
+
 The monitor is deliberately runtime-agnostic (fed wall-clock step times), so
 it is unit-testable without hardware and usable unchanged in the launcher.
 """
 from __future__ import annotations
 
 import dataclasses
+import statistics
 import time
 from collections import defaultdict
 from typing import Callable
@@ -41,6 +48,7 @@ class StragglerMonitor:
         self.events: list[StragglerEvent] = []
         self.offenders: dict[str, int] = defaultdict(int)
         self._t0: float | None = None
+        self._warmup_samples: list[float] = []
 
     # -- context-manager style per-step timing ------------------------------
     def start(self) -> None:
@@ -57,11 +65,19 @@ class StragglerMonitor:
                 source: str = "local") -> StragglerEvent | None:
         """Feed one step time.  Returns an event iff it's a straggler step."""
         self.seen += 1
+        if self.seen <= self.warmup:
+            # warmup: collect, never flag, and keep the baseline at the
+            # median of what has been seen — an outlier warmup step (compile
+            # spike, slow first allocation) cannot seed or drag the EMA
+            self._warmup_samples.append(duration)
+            self.ema = statistics.median(self._warmup_samples)
+            return None
         if self.ema is None:
+            # warmup_steps=0: seed from the first armed sample
             self.ema = duration
             return None
         event = None
-        if self.seen > self.warmup and duration > self.threshold * self.ema:
+        if duration > self.threshold * self.ema:
             event = StragglerEvent(step, duration, self.ema,
                                    duration / self.ema, source)
             self.events.append(event)

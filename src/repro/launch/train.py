@@ -17,6 +17,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 
@@ -48,7 +49,8 @@ def train(arch: str, *, tiny: bool = True, steps: int = 100,
           ckpt_dir: str | None = None, ckpt_every: int = 50,
           resume: bool = False, fail_at_step: int | None = None,
           peak_lr: float = 3e-3, log_every: int = 10,
-          data_seed: int = 0, mesh=None, grad_sync: str = "gspmd") -> TrainRun:
+          data_seed: int = 0, mesh=None, grad_sync: str = "gspmd",
+          moe_ep: str | None = None) -> TrainRun:
     cfg = tiny_config(arch) if tiny else get_config(arch)
     model = build_model(cfg)
     opt_cfg = OptimizerConfig(peak_lr=peak_lr, warmup_steps=min(20, steps // 5),
@@ -69,10 +71,37 @@ def train(arch: str, *, tiny: bool = True, steps: int = 100,
             start_step = latest
             print(f"[train] resumed from step {latest}", flush=True)
 
-    step_fn = jax.jit(make_train_step(model, opt_cfg, grad_sync=grad_sync))
+    step_fn = jax.jit(make_train_step(model, opt_cfg, grad_sync=grad_sync,
+                                      moe_ep=moe_ep))
     monitor = StragglerMonitor(threshold=3.0)
     losses = []
 
+    # moe_ep="rma" dispatches through shard_map over the expert axis, which
+    # only exists while sharding rules are active — without this the flag
+    # would silently trace the degenerate single-device path on a multi-
+    # device host.  Rules stay scoped to this run's tracing.
+    rules_ctx = contextlib.nullcontext()
+    if moe_ep == "rma":
+        from repro import compat, sharding
+
+        n_dev = len(jax.devices())
+        if n_dev > 1 and cfg.moe is not None and cfg.moe.num_experts % n_dev == 0:
+            rules_ctx = sharding.use_rules(compat.make_mesh((n_dev,), ("model",)))
+            print(f"[train] moe_ep=rma: expert axis over {n_dev} devices",
+                  flush=True)
+        else:
+            print(f"[train] moe_ep=rma: single-device fallback "
+                  f"({n_dev} devices, {cfg.moe.num_experts if cfg.moe else 0} "
+                  "experts)", flush=True)
+
+    with rules_ctx:
+        return _train_loop(start_step, steps, data, step_fn, params, opt_state,
+                           monitor, losses, mgr, ckpt_every, fail_at_step,
+                           log_every)
+
+
+def _train_loop(start_step, steps, data, step_fn, params, opt_state, monitor,
+                losses, mgr, ckpt_every, fail_at_step, log_every) -> TrainRun:
     for step in range(start_step, steps):
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
         if fail_at_step is not None and step == fail_at_step:
@@ -112,12 +141,15 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--fail-at-step", type=int, default=None)
     ap.add_argument("--peak-lr", type=float, default=3e-3)
+    ap.add_argument("--moe-ep", choices=("gspmd", "rma"), default=None,
+                    help="MoE expert-parallel dispatch: partitioner all-to-all"
+                         " (gspmd) or the one-sided RMA token exchange (rma)")
     args = ap.parse_args(argv)
     run = train(args.arch, tiny=args.tiny, steps=args.steps,
                 global_batch=args.global_batch, seq_len=args.seq_len,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                 resume=args.resume, fail_at_step=args.fail_at_step,
-                peak_lr=args.peak_lr)
+                peak_lr=args.peak_lr, moe_ep=args.moe_ep)
     print(f"[train] done: loss {run.losses[0]:.4f} -> {run.losses[-1]:.4f}, "
           f"stragglers={run.straggler_events}")
 

@@ -182,17 +182,12 @@ class ServeEngine:
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         nxt_np = np.asarray(nxt)
         new_last = np.asarray(self._last_tokens).copy()
-        for slot, req in list(self.slot_req.items()):
+        for slot in list(self.slot_req):
             tok = int(nxt_np[slot])
             self.slot_generated[slot].append(tok)
             self.slot_pos[slot] += 1
             new_last[slot, 0] = tok
-            ended = (tok == req.eos_id or
-                     len(self.slot_generated[slot]) >= req.max_new_tokens or
-                     self.slot_pos[slot] >= self.max_seq - 1)
-            if ended:
-                self.done.append(Completion(req.rid, self.slot_generated[slot]))
-                self._release(slot)
+            self._finish_if_ended(slot)
         self._last_tokens = jnp.asarray(new_last)
 
     def run(self, max_ticks: int = 10_000) -> list[Completion]:
@@ -214,6 +209,20 @@ class ServeEngine:
         return out
 
     # -- internals --------------------------------------------------------------
+    def _finish_if_ended(self, slot: int) -> bool:
+        """Complete-and-release ``slot`` iff its latest token terminates the
+        request (EOS, token budget, or cache full) — the single termination
+        predicate shared by the decode loop and admission-time prefill."""
+        req = self.slot_req[slot]
+        gen = self.slot_generated[slot]
+        ended = (gen[-1] == req.eos_id or
+                 len(gen) >= req.max_new_tokens or
+                 self.slot_pos[slot] >= self.max_seq - 1)
+        if ended:
+            self.done.append(Completion(req.rid, gen))
+            self._release(slot)
+        return ended
+
     def _admit(self) -> None:
         while self.pending and any(self.slot_free):
             req = self.pending.pop(0)
@@ -232,6 +241,12 @@ class ServeEngine:
             self.slot_req[slot] = req
             self.slot_generated[slot] = [first]
             self.slot_pos[slot] = len(req.prompt) + 1
+            # the prefill token can already terminate the request (EOS, or
+            # max_new_tokens=1, or the cache is full): complete-and-release
+            # here, or the slot decodes a spurious extra step — and in paged
+            # mode holds its KV pages — for a full extra tick
+            if self._finish_if_ended(slot):
+                continue
             lt = np.asarray(self._last_tokens).copy()
             lt[slot, 0] = first
             self._last_tokens = jnp.asarray(lt)

@@ -15,10 +15,17 @@ Two gradient-synchronization modes:
   optionally with error-feedback gradient compression
   (``repro.train.compress``).
 
+``moe_ep`` selects the MoE expert-parallel dispatch for the step's model:
+``"gspmd"`` (partitioner-inserted all-to-all) or ``"rma"`` (the one-sided
+token exchange of ``repro.core.rma.alltoall`` inside ``shard_map`` over the
+expert axis — see ``docs/moe_ep.md``).  It is carried on the model config
+(``MoEConfig.ep_mode``), so the same switch serves jit and shard_map paths.
+
 Gradient accumulation scans over microbatches.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Any, Callable
 
@@ -44,12 +51,25 @@ def make_train_step(
     data_axis: str | None = None,
     data_axis_size: int = 1,
     compressor=None,
+    moe_ep: str | None = None,
 ):
     """Build ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
 
     With ``accum_steps > 1`` the batch's leading dim must be divisible by it;
     microbatches are scanned and gradients averaged.
+
+    ``moe_ep``: override the MoE expert-parallel dispatch mode
+    (``"gspmd"`` | ``"rma"``) for this step's model; requires an MoE config.
     """
+    if moe_ep is not None:
+        if model.cfg.moe is None:
+            raise ValueError(
+                f"moe_ep={moe_ep!r} requested but arch {model.cfg.name!r} "
+                "has no MoE config")
+        from repro.models import build_model
+
+        model = build_model(model.cfg.replace(
+            moe=dataclasses.replace(model.cfg.moe, ep_mode=moe_ep)))
 
     def loss_fn(params, batch):
         loss, metrics = model.loss(params, batch)

@@ -175,4 +175,61 @@ g_unord = count_cp(mk_ordered_get(False))[0]
 print("memhandle put->get ordered:", g_ord, " unordered baseline:", g_unord)
 assert g_ord == g_unord - 2, \
     "P2 ordering must remove the put->get intermediate flush epoch"
+
+# --- MoE dispatch acceptance: the declared one-sided all-to-all.  Per peer
+# the declared exchange costs: chunks data phases + 2 (fetch_op count-header
+# RTT) + 1 doorbell (intrinsic, chained under P2 — NO intermediate flush
+# epoch); plus one thread-scoped exit epoch per direction stream on the
+# control window.  The undeclared baseline pays, per peer, one ack RTT (the
+# pre-doorbell flush, 2 phases) + the hint-less flag's software-path
+# completion ack (1 phase); with accumulate-routed landings (op="sum", the
+# MoE combine direction) every *chunk* additionally pays the generic-path
+# per-op ack.
+from repro.core.rma import rma_all_to_all
+
+def mk_a2a(chunks, order, declare, op=None):
+    def f(x):
+        res = rma_all_to_all(x, "x", N, chunks=chunks, order=order,
+                             declare=declare, op=op)
+        return res.data
+    return f
+
+def count_a2a(f):
+    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    txt = g.lower(jnp.zeros((N * N * 2,), jnp.float32)).compile().as_text()
+    return txt.count("collective-permute(")
+
+a2a = {}
+for chunks in (1, 2):
+    for declared in (True, False):
+        a2a[chunks, declared] = count_a2a(mk_a2a(chunks, declared, declared))
+        print(f"rma_all_to_all chunks={chunks} declared={declared}:",
+              a2a[chunks, declared])
+# each extra chunk costs exactly one data phase per peer — no flush epoch
+# rides along with chunking
+assert a2a[2, True] - a2a[1, True] == N - 1, \
+    "declared all-to-all: one data phase per extra chunk per peer"
+for chunks in (1, 2):
+    # declared total ≤ peers·(chunks + header RTT + doorbell) + exit epochs
+    # (XLA may CSE an ack leg, so assert the bound, not exact equality)
+    bound = (N - 1) * (chunks + 3) + 4
+    assert (N - 1) * (chunks + 3) <= a2a[chunks, True] <= bound, \
+        (chunks, a2a[chunks, True], bound)
+    # the baseline pays ≥ one ack RTT (2) + one software-flag ack (1) per
+    # peer that the declaration elides
+    saved = a2a[chunks, False] - a2a[chunks, True]
+    assert saved >= 3 * (N - 1), \
+        f"undeclared baseline must pay ≥3 extra phases/peer, saved={saved}"
+    print(f"  declared saves {saved} phases over the baseline "
+          f"(≥ {3 * (N - 1)} = 1 ack RTT + 1 flag ack per peer)")
+
+# combine direction: undeclared accumulate landings pay one generic-path
+# completion ack per *chunk* on top of the put baseline
+acc_unde = count_a2a(mk_a2a(2, False, False, op="sum"))
+print("rma_all_to_all op=sum undeclared (chunks=2):", acc_unde)
+assert acc_unde - a2a[2, False] == (N - 1) * 2, \
+    "undeclared accumulate landings cost one ack per chunk per peer"
+acc_decl = count_a2a(mk_a2a(2, True, True, op="sum"))
+assert acc_decl == a2a[2, True], \
+    "declared accumulate landings route specialized: same phases as puts"
 print("ALL HLO COUNT CHECKS PASSED")

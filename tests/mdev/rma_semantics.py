@@ -167,6 +167,23 @@ for order in (False, True):
     np.testing.assert_allclose(out, expect)
 print("put_signal both orders OK")
 
+# --- put_signal_pipelined: chunked puts land at data_offset + c*step (a
+# pipelined exchange can target a sub-range of the remote window, like the
+# single-put put_signal), flag after the last chunk
+from repro.core.rma import put_signal_pipelined
+
+def f12b(_):
+    buf = jnp.zeros((16,), jnp.float32)
+    win = Window.allocate(buf, "x", N, WindowConfig(order=True))
+    win = put_signal_pipelined(win, jnp.arange(1.0, 7.0), [(0, 1)], chunks=3,
+                               data_offset=4, flag_offset=15)
+    win = win.flush()
+    return win.buffer[None]
+out = np.asarray(run(f12b, jnp.zeros((N,1)), in_specs=P("x"), out_specs=P("x")))
+expect = np.zeros((8,16)); expect[1,4:10] = np.arange(1.0,7.0); expect[1,15] = 1.0
+np.testing.assert_allclose(out, expect)
+print("put_signal_pipelined data_offset OK")
+
 # --- dup_with_info shares memory
 def f13(_):
     buf = jnp.zeros((4,), jnp.float32)

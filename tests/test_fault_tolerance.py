@@ -129,6 +129,36 @@ def test_straggler_warmup_tolerant():
     assert mon.observe(1, 30.0) is None
 
 
+def test_straggler_warmup_outlier_does_not_mask_detection():
+    """A 10× outlier inside warmup (e.g. the compile step) must not inflate
+    the baseline: the monitor seeds from the warmup *median*, so a
+    moderately slow post-warmup step is still flagged."""
+    mon = StragglerMonitor(threshold=2.0, warmup_steps=5)
+    for s, dt in enumerate([10.0, 1.0, 1.0, 1.0, 1.0]):  # outlier FIRST
+        assert mon.observe(s, dt) is None            # warmup never flags
+    assert mon.ema == 1.0, "baseline must be the robust warmup median"
+    for s in range(5, 10):
+        assert mon.observe(s, 1.0) is None
+    ev = mon.observe(10, 3.0, source="host3")
+    assert ev is not None and ev.source == "host3"
+    assert ev.ratio == pytest.approx(3.0)
+    # and the straggler step itself did not poison the baseline
+    assert mon.ema == 1.0
+
+
+def test_straggler_outlier_mid_warmup_rejected_from_baseline():
+    """The first sample must not seed the EMA unconditionally, and a spike
+    in the middle of warmup is voted out by the median as more samples
+    arrive."""
+    mon = StragglerMonitor(threshold=2.0, warmup_steps=4)
+    mon.observe(0, 1.0)
+    mon.observe(1, 20.0)
+    mon.observe(2, 1.0)
+    mon.observe(3, 1.0)
+    assert mon.ema == 1.0
+    assert mon.observe(4, 5.0) is not None          # real straggler caught
+
+
 # ---------------------------------------------------------------------------
 # gradient compression (error feedback)
 # ---------------------------------------------------------------------------

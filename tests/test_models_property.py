@@ -1,4 +1,9 @@
-"""Property tests on model-math invariants (hypothesis)."""
+"""Property tests on model-math invariants (hypothesis).
+
+The non-hypothesis MoE expert-parallel tests (the 8-device ``ep_mode="rma"``
+acceptance and fixed-case parity) live in ``tests/test_moe_ep.py`` so they
+run even without hypothesis installed.
+"""
 import dataclasses
 
 import jax
@@ -101,6 +106,24 @@ def test_moe_matches_dense_loop(E, k, T):
     # few tokens the quantized density can dip below 1 — only positivity and
     # a sane magnitude are invariant.
     assert 0.0 < float(aux) < float(E)
+
+
+@settings(max_examples=8, deadline=None)
+@given(E=st.sampled_from([4, 8]), k=st.integers(1, 3), T=st.integers(3, 40))
+def test_moe_rma_ep_matches_dense_loop(E, k, T):
+    """The ep_mode="rma" dispatch (two-level sort + one-sided exchange;
+    degenerate single-device exchange here — the 8-device version runs in
+    tests/mdev/moe_ep_rma.py) must match the dense oracle with ample
+    capacity, token for token, and agree with the GSPMD path's aux loss."""
+    cfg = _moe_cfg(E, k, cf=8.0)
+    params = moe_lib.init_moe(jax.random.PRNGKey(E * k), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(T), (1, T, 32))
+    out, aux = moe_lib.moe_apply(params, x, cfg, ep_mode="rma")
+    ref = moe_lib.moe_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-3)
+    _, aux_g = moe_lib.moe_apply(params, x, cfg, ep_mode="gspmd")
+    np.testing.assert_allclose(float(aux), float(aux_g), rtol=1e-5)
 
 
 def test_moe_capacity_drops_are_bounded():

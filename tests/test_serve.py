@@ -71,6 +71,74 @@ def test_engine_batched_equals_sequential(model_and_params):
         assert solo.run()[0].tokens == together[r.rid], f"slot isolation rid={r.rid}"
 
 
+def test_engine_max_new_tokens_one_stops_at_prefill(model_and_params):
+    """A max_new_tokens=1 request is complete at admission: exactly one
+    token (the prefill argmax), no extra decode step."""
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(0, cfg.vocab, size=6)
+    eng = ServeEngine(m, params, n_slots=2, max_seq=64)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].tokens) == 1
+    # the single token is the greedy prefill continuation
+    logits, _ = m.forward(params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]})
+    assert done[0].tokens == [int(jnp.argmax(logits[0, -1]))]
+
+
+def _first_greedy_token(m, params, prompt):
+    logits, _ = m.forward(params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]})
+    return int(jnp.argmax(logits[0, -1]))
+
+
+def test_engine_first_token_eos_releases_slot(model_and_params):
+    """A prompt whose first generated token is EOS completes at admission
+    and frees its slot in the same tick — not a full tick later."""
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(6)
+    prompt = rng.randint(0, cfg.vocab, size=5)
+    eos = _first_greedy_token(m, params, prompt)
+    eng = ServeEngine(m, params, n_slots=1, max_seq=64)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8, eos_id=eos))
+    eng.step()   # admission tick: must complete and release immediately
+    assert eng.done and eng.done[0].tokens == [eos]
+    assert eng.slot_free == [True] and not eng.slot_req
+
+
+def test_paged_engine_first_token_eos_frees_pages(model_and_params):
+    """In paged mode, admission-time completion must return the slot's KV
+    pages to the allocator (they were leaked for an extra tick before)."""
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(7)
+    prompt = rng.randint(0, cfg.vocab, size=6)
+    eos = _first_greedy_token(m, params, prompt)
+    eng = ServeEngine(m, params, n_slots=2, max_seq=32, paged_kv=True,
+                      page_tokens=8)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8, eos_id=eos))
+    eng.step()
+    st = eng.stats()
+    assert eng.done and eng.done[0].tokens == [eos]
+    assert st["pages_freed"] == st["pages_allocated"] == 32 // 8
+    assert st["pages_free"] == 2 * (32 // 8)
+
+
+def test_paged_engine_max_new_tokens_one(model_and_params):
+    """max_new_tokens=1 on the paged engine: one token, pages freed, and the
+    slot is immediately reusable by the next pending request."""
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(8)
+    eng = ServeEngine(m, params, n_slots=1, max_seq=32, paged_kv=True,
+                      page_tokens=8)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=rng.randint(0, cfg.vocab, size=4),
+                           max_new_tokens=1))
+    done = eng.run()
+    assert sorted(c.rid for c in done) == [0, 1, 2]
+    assert all(len(c.tokens) == 1 for c in done)
+    st = eng.stats()
+    assert st["pages_freed"] == st["pages_allocated"] == 3 * (32 // 8)
+
+
 def test_engine_rejects_oversized_prompt(model_and_params):
     cfg, m, params = model_and_params
     eng = ServeEngine(m, params, n_slots=1, max_seq=16)
