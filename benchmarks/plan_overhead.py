@@ -1,0 +1,176 @@
+"""Plan-layer overhead: build-once cost vs execute-many replay cost.
+
+The declarative plan API's pitch is that planning is paid **once** (host-side
+build + compile of the schedule) while every steady-state step replays the
+frozen schedule with zero re-planning.  This benchmark quantifies both sides
+and the phase-count ledger behind them:
+
+* ``plan/build/*``   — wall time of ``RmaPlan`` recording + ``compile()``
+  (all planner passes) for the ring-all-reduce pattern, per build.
+* ``plan/replay/*``  — per-step latency of the jit-compiled plan replay.
+* ``plan/imperative/*`` — the hand-tuned imperative composition
+  (``ring_reduce_scatter`` + ``ring_all_gather``) as the reference.
+* ``plan/naive/*``   — the same pattern compiled with ``naive_flush=True``
+  (a completion epoch after every op: what defensive imperative code pays).
+* ``plan/fused/*``   — the put-fusion pass: a k-put burst as one
+  gather-write phase vs k phases vs the naive 3k.
+
+Every row's ``derived`` column carries the planned/hand-tuned/naive phase
+counts; the structured ledger is written to
+``benchmarks/results/BENCH_plan.json`` (asserted in CI smoke: planned ≤
+hand-tuned < naive).  ``--table`` renders an existing artifact as markdown.
+"""
+import argparse
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from benchmarks._harness import (N_DEV, emit, mesh1d, require_devices,
+                                 scan_op, smap, time_fn)
+from repro.core.rma import RmaPlan, Window, WindowConfig
+from repro.core.rma import collectives as coll
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+JSON_PATH = os.path.join(RESULTS_DIR, "BENCH_plan.json")
+
+RING_HAND_PHASES = 2 * (N_DEV - 1)   # the hand-tuned ordered ring
+
+
+def _build_ring_once(size: int):
+    """One cold build+compile of the ring plan (cache bypassed)."""
+    coll._RING_PLANS.clear()
+    return coll.all_reduce_plan("x", N_DEV, (size,), jnp.float32, order=True)
+
+
+def _burst_plan(k: int, *, fuse: bool, naive: bool = False):
+    plan = RmaPlan(f"burst{k}")
+    plan.window("w", scope="thread", order=True, dtype=jnp.float32,
+                exit_epoch=True)
+    perm = [(i, (i + 1) % N_DEV) for i in range(N_DEV)]
+    for i in range(k):
+        plan.bind(f"d{i}", (4,), jnp.float32)
+        plan.put("w", f"d{i}", perm, offset=4 * i, fuse=fuse)
+    return plan.compile(naive_flush=naive)
+
+
+def render_table(path: str = JSON_PATH) -> str:
+    with open(path) as f:
+        doc = json.load(f)
+    lines = ["| pattern | µs/call | planned | hand | naive |",
+             "|:---|---:|---:|---:|---:|"]
+    counts = doc.get("phase_counts", {})
+    for row in doc["rows"]:
+        pattern = row["name"].split("/", 1)[1]
+        c = counts.get(row["name"].split("/")[2], {})
+        lines.append(f"| {pattern} | {row['us_per_call']:.1f} | "
+                     f"{c.get('planned', '—')} | {c.get('hand', '—')} | "
+                     f"{c.get('naive', '—')} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--iters", type=int, default=15)
+    ap.add_argument("--size", type=int, default=64,
+                    help="per-device all-reduce elements")
+    ap.add_argument("--burst", type=int, default=4, help="puts per burst")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes / few iters for CI")
+    ap.add_argument("--table", action="store_true")
+    args = ap.parse_args()
+    if args.table:
+        print(render_table())
+        return
+    if args.smoke:
+        args.iters, args.size, args.burst = 3, 16, 3
+    require_devices()
+    mesh = mesh1d()
+    rows, phase_counts = [], {}
+
+    def record(name, us, derived=""):
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+
+    # --- build cost: recording + every planner pass, per cold build --------
+    t0 = time.perf_counter()
+    builds = 5
+    for _ in range(builds):
+        compiled = _build_ring_once(args.size)
+    build_us = (time.perf_counter() - t0) / builds * 1e6
+    naive = coll.all_reduce_plan("x", N_DEV, (args.size,), jnp.float32,
+                                 order=True, naive_flush=True)
+    phase_counts[f"ring{N_DEV}"] = {"planned": compiled.phases,
+                                    "hand": RING_HAND_PHASES,
+                                    "naive": naive.phases}
+    assert compiled.phases <= RING_HAND_PHASES < naive.phases
+    record(f"plan/build/ring{N_DEV}", build_us,
+           f"cold build+compile phases={compiled.phases}")
+
+    # --- per-step replay vs hand-tuned imperative vs naive flushing --------
+    def planned_body(carry):
+        x, = carry
+        return (coll.plan_all_reduce(x, "x", N_DEV, order=True),)
+
+    def imperative_body(carry):
+        x, = carry
+        mine = coll.ring_reduce_scatter(x, "x", N_DEV, order=True)
+        return (coll.ring_all_gather(mine, "x", N_DEV, order=True,
+                                     owner_shift=1),)
+
+    def naive_body(carry):
+        x, = carry
+        win = Window.allocate(x, "x", N_DEV,
+                              WindowConfig(scope="thread", order=True,
+                                           same_op="sum"))
+        res = naive.execute({"ring": win}, {"x": x})
+        return (res.outputs["out"],)
+
+    x0 = jnp.ones((args.size,), jnp.float32)
+    for name, body, phases in (
+            ("replay", planned_body, compiled.phases),
+            ("imperative", imperative_body, RING_HAND_PHASES),
+            ("naive", naive_body, naive.phases)):
+        fn, k = scan_op(body, 8)
+        g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
+        us = time_fn(g, ((x0,),), k_inner=k, iters=args.iters)
+        record(f"plan/{name}/ring{N_DEV}", us, f"phases={phases}")
+
+    # --- put fusion: the gather-write pass ---------------------------------
+    k = args.burst
+    fused = _burst_plan(k, fuse=True)
+    unfused = _burst_plan(k, fuse=False)
+    burst_naive = _burst_plan(k, fuse=False, naive=True)
+    phase_counts[f"burst{k}"] = {"planned": fused.phases,
+                                 "hand": unfused.phases,
+                                 "naive": burst_naive.phases}
+    assert fused.phases < unfused.phases < burst_naive.phases
+    for name, c in (("fused", fused), ("replay", unfused),
+                    ("naive", burst_naive)):
+        def body(carry, c=c):
+            buf, datas = carry
+            win = Window.allocate(buf, "x", N_DEV,
+                                  WindowConfig(scope="thread", order=True))
+            res = c.execute(
+                {"w": win}, {f"d{i}": datas[i] for i in range(k)})
+            return res.windows["w"].buffer, datas
+
+        fn, kk = scan_op(body, 8)
+        g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
+        buf = jnp.zeros((4 * k,), jnp.float32)
+        datas = jnp.ones((k, 4), jnp.float32)
+        us = time_fn(g, ((buf, datas),), k_inner=kk, iters=args.iters)
+        record(f"plan/{name}/burst{k}", us, f"phases={c.phases}")
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump({"section": "plan", "rows": rows,
+                   "phase_counts": phase_counts}, f, indent=1)
+    print(f"# wrote {JSON_PATH} ({len(rows)} rows)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,13 @@ Sections:
                      all-to-all vs the undeclared baseline vs GSPMD
   serve_disagg     — the disaggregated serving data plane: batched page-push
                      pages/s + per-token handle-vs-query read latency
+  plan_overhead    — the declarative-plan layer: build-once cost vs
+                     execute-many replay, planned/hand-tuned/naive phases
   roofline         — §Roofline summary from the dry-run artifacts (if present)
+
+``--summary`` skips running and merges every existing BENCH_*.json under
+``benchmarks/results/`` into one trajectory table (stdout + BENCH_summary
+CSV) — the cross-section view of how each configuration point has moved.
 """
 from __future__ import annotations
 
@@ -36,6 +42,7 @@ MODULES = [
     "benchmarks.rma_collectives",
     "benchmarks.moe_alltoall",
     "benchmarks.serve_disagg",
+    "benchmarks.plan_overhead",
 ]
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
@@ -93,7 +100,53 @@ def run_module(mod: str) -> int:
     return proc.returncode
 
 
+def summarize() -> str:
+    """Merge every BENCH_*.json into one trajectory table.
+
+    One row per measured configuration point across all sections, sorted by
+    section/name — the single artifact to diff between commits (each
+    section's JSON is written fresh by its module, so this is always the
+    latest complete sweep).  Also written to
+    ``benchmarks/results/BENCH_summary.csv``.
+    """
+    import glob
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "BENCH_*.json"))):
+        if path.endswith("BENCH_summary.json"):
+            continue
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            continue
+        section = doc.get("section", os.path.basename(path)[6:-5])
+        for row in doc.get("rows", []):
+            rows.append((section, row["name"], row["us_per_call"],
+                         row.get("derived", "")))
+    if not rows:
+        return "# no BENCH_*.json artifacts found — run benchmarks.run first"
+    rows.sort()
+    width = max(len(r[1]) for r in rows)
+    lines = [f"# trajectory: {len(rows)} points from "
+             f"{len({r[0] for r in rows})} sections",
+             f"{'name':<{width}}  us_per_call  derived"]
+    csv = ["section,name,us_per_call,derived"]
+    for section, name, us, derived in rows:
+        lines.append(f"{name:<{width}}  {us:>11.2f}  {derived}")
+        csv.append(f"{section},{name},{us:.2f},{derived}")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_csv = os.path.join(RESULTS_DIR, "BENCH_summary.csv")
+    with open(out_csv, "w") as f:
+        f.write("\n".join(csv) + "\n")
+    lines.append(f"# wrote {out_csv}")
+    return "\n".join(lines)
+
+
 def main() -> None:
+    if "--summary" in sys.argv:
+        print(summarize())
+        return
     print("name,us_per_call,derived")
     failures = 0
     for mod in MODULES:

@@ -75,7 +75,7 @@ def main():
             pool = pool._replace(window=pool.window._with(buffer=buf))
             for p in range(nb):
                 pool = pool.alloc_page(p)
-            pool = pool.transfer_pages(list(range(nb)), kvs, perm)
+            pool = pool.push_pages(list(range(nb)), kvs, perm)
             return (pool.window.buffer,)
 
         def push_per_page(carry):

@@ -12,7 +12,7 @@ The five-minute tour, in the order the demo runs it:
                                            # config (here: unordered bulk)
   win  = put_signal(win, data, perm, ...)  # P2: put + flag, no mid-flush
   win  = win.flush(stream=0)               # P1: thread-scoped flush epoch
-  out  = rma_all_reduce(x, "x", N)         # one-sided ring on the substrate
+  out  = plan_all_reduce(x, "x", N)        # one-sided ring (a compiled-plan replay)
 
 Window duplication is the cheapest tool in the box: configure *views* of one
 window per use case instead of allocating one window per configuration.  See
@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.rma import Window, WindowConfig, put_signal, rma_all_reduce
+from repro.core.rma import Window, WindowConfig, plan_all_reduce, put_signal
 from repro import compat
 
 N = 8
@@ -66,7 +66,9 @@ def demo_rma():
     assert (out[:, 4] == 1).all(), "signal flags must be raised everywhere"
 
     def allreduce(x):
-        return rma_all_reduce(x, "x", N, order=True)
+        # a compiled-plan replay: the ring schedule is planned once and
+        # cached; each call (and each jit retrace) only replays it
+        return plan_all_reduce(x, "x", N, order=True)
 
     g2 = jax.jit(compat.shard_map(allreduce, mesh=mesh, in_specs=P("x"),
                                out_specs=P("x"), check_vma=False))

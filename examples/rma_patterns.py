@@ -119,6 +119,34 @@ def a2a_undeclared(buf):
                           declare=False).data
 
 
+# --- the plan layer: record once, compile, replay (docs/rma_plan.md) --------
+from repro.core.rma import RmaPlan
+
+plan = RmaPlan("example-push-notify")
+plan.window("w", scope="thread", order=True, same_op="sum",
+            accumulate_ops=("sum",), dtype=jnp.float32, max_streams=2,
+            exit_epoch=True)
+plan.bind("a", (4,), jnp.float32)
+plan.bind("b", (4,), jnp.float32)
+_pa = plan.put("w", "a", perm, offset=0)               # independent chains →
+_pb = plan.put("w", "b", perm, offset=4)               # auto streams 0 and 1
+plan.signal("w", perm, flag_offset=8, after=(_pa, _pb))  # completion edges
+plan_compiled = plan.compile()                          # planner passes, once
+plan_naive = plan.compile(naive_flush=True)             # per-op-flush baseline
+
+
+def planned_pattern(buf):
+    """Replay of the compiled schedule: the signal chains behind both put
+    chains under P2 (no flush epochs between), one exit epoch per stream.
+    ``CompiledPlan.phases`` predicts the lowered phase count exactly."""
+    win = Window.allocate(buf, "x", N,
+                          WindowConfig(scope="thread", order=True,
+                                       same_op="sum", max_streams=2))
+    res = plan_compiled.execute(
+        {"w": win}, {"a": jnp.ones((4,)), "b": jnp.full((4,), 2.0)})
+    return res.windows["w"].buffer
+
+
 def main():
     print("pattern phase counts (collective-permutes in lowered HLO):")
     p1, p2 = phases(listing1), phases(listing2)
@@ -136,6 +164,14 @@ def main():
     print(f"  all-to-all declared:        {ad}")
     print(f"  all-to-all undeclared:      {au}  <- >=3 phases/peer saved")
     assert au - ad >= 3 * (N - 1)
+    # the plan layer: the compiled schedule predicts its own phase count,
+    # and the naive per-op-flush compile of the SAME recorded pattern shows
+    # what the coalescing pass saves (docs/rma_plan.md)
+    pp = phases(planned_pattern)
+    print(f"  compiled plan replay:       {pp}  (predicted "
+          f"{plan_compiled.phases}, naive baseline {plan_naive.phases})")
+    assert pp == plan_compiled.phases
+    assert plan_naive.phases > plan_compiled.phases
     # P3: the capability query applications use to pick an algorithm
     print("win_op_intrinsic('sum,cas', 8, int32):",
           win_op_intrinsic("sum,cas", 8, jnp.int32))

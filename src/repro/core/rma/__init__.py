@@ -60,6 +60,8 @@ from repro.core.rma.accumulate import (
     routed_accumulate,
 )
 from repro.core.rma.collectives import (
+    all_reduce_plan,
+    plan_all_reduce,
     put_signal,
     put_signal_pipelined,
     ring_all_gather,
@@ -69,6 +71,14 @@ from repro.core.rma.collectives import (
 from repro.core.rma.alltoall import (
     AllToAllResult,
     rma_all_to_all,
+)
+from repro.core.rma.plan import (
+    CompiledPlan,
+    OpRef,
+    PlanEnv,
+    PlanError,
+    PlanResult,
+    RmaPlan,
 )
 
 __all__ = [
@@ -99,10 +109,18 @@ __all__ = [
     "accumulate_signal",
     "crossover_elems",
     "rma_all_reduce",
+    "all_reduce_plan",
+    "plan_all_reduce",
     "ring_reduce_scatter",
     "ring_all_gather",
     "put_signal",
     "put_signal_pipelined",
     "rma_all_to_all",
     "AllToAllResult",
+    "RmaPlan",
+    "CompiledPlan",
+    "PlanEnv",
+    "PlanResult",
+    "PlanError",
+    "OpRef",
 ]

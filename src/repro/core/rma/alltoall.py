@@ -44,9 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.rma import accumulate as acc_engine
-from repro.core.rma.collectives import _ring_substrate
-from repro.core.rma.substrate import SCOPE_THREAD, _tie
+from repro.core.rma.substrate import SCOPE_THREAD
 from repro.core.rma.window import Window, WindowConfig
 
 Array = jax.Array
@@ -66,6 +64,180 @@ class AllToAllResult(NamedTuple):
 def _peer_stream(shift: int, n: int) -> int:
     """Forward half of the peer set on stream 0, backward half on stream 1."""
     return 0 if shift <= n // 2 else 1
+
+
+# ---------------------------------------------------------------------------
+# The planned exchange: the all-to-all pattern as a declarative RMA plan
+# ---------------------------------------------------------------------------
+
+_A2A_PLANS: dict[tuple, object] = {}
+
+
+def all_to_all_plan(axis: str, n: int, shape, dtype, *, chunks: int = 1,
+                    order: bool = True, declare: bool = True,
+                    op: str | None = None, lent: bool = False,
+                    naive_flush: bool = False):
+    """Build (or fetch from the build-once cache) the compiled all-to-all
+    plan for one static configuration.  ``shape`` is the full ``(n*m, ...)``
+    payload shape.  The recorded pattern is the module docstring's: per peer
+    one fetch_op count header, ``chunks`` data transfers on the direction's
+    stream, and a doorbell signal ordered behind the data (a completion
+    edge the planner resolves into a P2 chain or, without ordering, one
+    coalesced ack epoch per peer)."""
+    from repro.core.rma.plan import RmaPlan
+
+    dt = jnp.dtype(dtype)
+    key = (axis, n, tuple(shape), dt.name, chunks, order, declare, op, lent,
+           naive_flush)
+    if key in _A2A_PLANS:
+        return _A2A_PLANS[key]
+    m = shape[0] // n
+    step = m // chunks
+    trailing = tuple(shape[1:])
+    pshape = (step,) + trailing
+    streams = (0, 1) if n > 2 else (0,)
+    data_op = op if (op is not None and declare) else None
+    plan = RmaPlan(f"rma_all_to_all[n={n},chunks={chunks}]")
+    plan.window("data", scope=SCOPE_THREAD, order=order,
+                max_streams=len(streams), same_op=data_op,
+                accumulate_ops=(op,) if op is not None else ("sum",),
+                dtype=dt, entry_epoch=lent, exit_epoch=lent)
+    plan.window("hdr", scope=SCOPE_THREAD, order=order,
+                max_streams=len(streams),
+                same_op="sum" if declare else None, accumulate_ops=("sum",),
+                dtype=jnp.int32, exit_epoch=True)
+    plan.bind("x", tuple(shape), dt)
+    plan.bind("counts", (n,), jnp.int32)
+
+    out = plan.compute(
+        lambda env: lax.dynamic_update_slice_in_dim(
+            jnp.zeros(tuple(shape), dt),
+            lax.dynamic_slice_in_dim(env["x"], lax.axis_index(axis) * m, m,
+                                     axis=0),
+            lax.axis_index(axis) * m, axis=0),
+        shape=tuple(shape), dtype=dt, label="own-chunk")
+    for k in range(1, n):
+        s = _peer_stream(k, n)
+        perm = tuple((i, (i + k) % n) for i in range(n))
+        # header: publish this chunk's valid-row count at the target
+        cnt = plan.compute(
+            lambda env, k=k: lax.dynamic_slice_in_dim(
+                env["counts"], (lax.axis_index(axis) + k) % n, 1, axis=0),
+            shape=(1,), dtype=jnp.int32, label=f"peer{k}:count")
+        plan.fetch_op("hdr", cnt, perm, op="sum", offset=k, stream=s,
+                      shape=(1,), dtype=jnp.int32, label=f"peer{k}:hdr")
+        # data: chunked one-sided transfers on the direction's stream
+        last = None
+        for c in range(chunks):
+            pc = plan.compute(
+                lambda env, k=k, c=c: lax.dynamic_slice_in_dim(
+                    env["x"],
+                    ((lax.axis_index(axis) + k) % n) * m + c * step, step,
+                    axis=0),
+                shape=pshape, dtype=dt, label=f"peer{k}:piece{c}")
+            if op is None:
+                last = plan.send("data", pc, perm, stream=s, shape=pshape,
+                                 dtype=dt, label=f"peer{k}:data{c}")
+                got = last
+            else:
+                cur = plan.compute(
+                    lambda env, o=out, k=k, c=c: lax.dynamic_slice_in_dim(
+                        env[o],
+                        ((lax.axis_index(axis) - k) % n) * m + c * step,
+                        step, axis=0),
+                    reads=(out,), shape=pshape, dtype=dt,
+                    label=f"peer{k}:cur{c}")
+                last = plan.hop("data", pc, cur, perm, op=op, stream=s,
+                                shape=pshape, dtype=dt,
+                                label=f"peer{k}:acc{c}")
+                got = last
+            out = plan.compute(
+                lambda env, o=out, g=got, k=k, c=c:
+                    lax.dynamic_update_slice_in_dim(
+                        env[o], env[g],
+                        ((lax.axis_index(axis) - k) % n) * m + c * step,
+                        axis=0),
+                reads=(out, got), shape=tuple(shape), dtype=dt,
+                label=f"peer{k}:out{c}")
+        # doorbell: must not overtake the peer's data — a completion edge
+        # the planner turns into a P2 token chain, or one ack epoch per
+        # peer (paper Listing 1) without ordering
+        plan.signal("hdr", perm, flag_offset=n + k, stream=s, after=(last,),
+                    label=f"peer{k}:bell")
+    plan.output("out", out)
+    compiled = plan.compile(naive_flush=naive_flush)
+    _A2A_PLANS[key] = compiled
+    return compiled
+
+
+def plan_all_to_all(
+    x: Array,
+    axis: str,
+    axis_size: int,
+    *,
+    counts: Array | None = None,
+    chunks: int = 1,
+    order: bool = True,
+    declare: bool = True,
+    op: str | None = None,
+    win: Window | None = None,
+) -> AllToAllResult:
+    """Plan-native one-sided all-to-all: replay the cached compiled schedule
+    on this step's payload.  Same semantics and lowered phase structure as
+    the classic ``rma_all_to_all`` (now a deprecation-warning wrapper over
+    this)."""
+    n = axis_size
+    if x.shape[0] % n:
+        raise ValueError(
+            f"leading dim {x.shape[0]} not divisible by axis size {n}")
+    m = x.shape[0] // n
+    if m % chunks:
+        raise ValueError(f"per-peer rows {m} not divisible by chunks={chunks}")
+    if counts is not None and counts.shape != (n,):
+        raise ValueError(f"counts must have shape ({n},), got {counts.shape}")
+    if counts is None:
+        counts = jnp.full((n,), m, jnp.int32)
+    counts = counts.astype(jnp.int32)
+    if n == 1:
+        return AllToAllResult(x, counts, jnp.zeros((1,), jnp.int32))
+
+    rank = lax.axis_index(axis)
+    streams = (0, 1) if n > 2 else (0,)
+    compiled = all_to_all_plan(axis, n, x.shape, x.dtype, chunks=chunks,
+                               order=order, declare=declare, op=op,
+                               lent=win is not None)
+    hdr_cfg = WindowConfig(scope=SCOPE_THREAD, order=order,
+                           max_streams=len(streams),
+                           same_op="sum" if declare else None,
+                           accumulate_ops=("sum",))
+    hdr = Window.allocate(jnp.zeros((2 * n,), jnp.int32), axis, n, hdr_cfg)
+    if win is not None:
+        if max(streams) >= win.config.max_streams:
+            raise ValueError(
+                f"exchange needs streams {tuple(streams)} but the lent "
+                f"window has max_streams={win.config.max_streams} "
+                "(dup-immutable); allocate it with enough issue streams")
+        data = win
+    else:
+        data_op = op if (op is not None and declare) else None
+        acc_info = ({"same_op": data_op, "accumulate_ops": (data_op,)}
+                    if data_op is not None else {})
+        data = Window.allocate(
+            x, axis, n, WindowConfig(scope=SCOPE_THREAD, order=order,
+                                     max_streams=len(streams), **acc_info))
+    res = compiled.execute({"data": data, "hdr": hdr},
+                           {"x": x, "counts": counts})
+    out = res.outputs["out"]
+    hdr_buf = res.windows["hdr"].buffer
+
+    # re-index the shift-addressed header words by source rank
+    shift = jnp.arange(n)
+    src_of_shift = jnp.mod(rank - shift, n)
+    by_shift = hdr_buf[:n].at[0].set(
+        lax.dynamic_slice_in_dim(counts, rank, 1, axis=0)[0])
+    recv_counts = jnp.zeros((n,), jnp.int32).at[src_of_shift].set(by_shift)
+    bells = jnp.zeros((n,), jnp.int32).at[src_of_shift].set(hdr_buf[n:])
+    return AllToAllResult(out, recv_counts, bells)
 
 
 def rma_all_to_all(
@@ -98,94 +270,20 @@ def rma_all_to_all(
     through the engine (the MoE *combine* direction) instead of plain puts.
     ``win``: lend a window's substrate for the data phases (dup'd with the
     exchange's per-use config, paper P4) instead of allocating one.
+
+    .. deprecated:: the imperative call-site form is kept as a thin wrapper
+       that builds-and-executes the declarative plan (``all_to_all_plan`` /
+       ``plan_all_to_all``); it emits a ``DeprecationWarning`` once per
+       process.  Numerics and lowered phase structure are identical.
     """
-    n = axis_size
-    if x.shape[0] % n:
-        raise ValueError(
-            f"leading dim {x.shape[0]} not divisible by axis size {n}")
-    m = x.shape[0] // n
-    if m % chunks:
-        raise ValueError(f"per-peer rows {m} not divisible by chunks={chunks}")
-    if counts is not None and counts.shape != (n,):
-        raise ValueError(f"counts must have shape ({n},), got {counts.shape}")
-    if counts is None:
-        counts = jnp.full((n,), m, jnp.int32)
-    counts = counts.astype(jnp.int32)
-    if n == 1:
-        return AllToAllResult(x, counts, jnp.zeros((1,), jnp.int32))
+    from repro.core.rma.plan import warn_legacy_once
 
-    rank = lax.axis_index(axis)
-    step = m // chunks
-    streams = (0, 1) if n > 2 else (0,)
-
-    # control window: word k = count from the shift-k predecessor, word n+k =
-    # that peer's doorbell.  Shift-indexed words keep every displacement a
-    # trace-time constant (no shipped address word on the header phase).
-    hdr_cfg = WindowConfig(scope=SCOPE_THREAD, order=order,
-                           max_streams=len(streams),
-                           same_op="sum" if declare else None,
-                           accumulate_ops=("sum",))
-    hdr = Window.allocate(jnp.zeros((2 * n,), jnp.int32), axis, n, hdr_cfg)
-
-    # undeclared accumulate landings get a hint-less data view (same_op=None
-    # all the way through _ring_substrate), so route() takes the software path
-    data_op = op if (op is not None and declare) else None
-    sub, data_cfg = _ring_substrate(x, axis, n, order=order, win=win,
-                                    streams=streams, same_op=data_op)
-
-    out = jnp.zeros_like(x)
-    own = lax.dynamic_slice_in_dim(x, rank * m, m, axis=0)
-    out = lax.dynamic_update_slice_in_dim(out, own, rank * m, axis=0)
-
-    for k in range(1, n):
-        s = _peer_stream(k, n)
-        perm = tuple((i, (i + k) % n) for i in range(n))
-        dest = (rank + k) % n
-        src = (rank - k) % n
-        # -- header: publish this chunk's valid-row count at the target
-        dest_cnt = lax.dynamic_slice_in_dim(counts, dest, 1, axis=0)
-        hdr, _ = hdr.fetch_op(dest_cnt, perm, op="sum", offset=k, stream=s)
-        # -- data: chunked one-sided transfers on the direction's stream
-        piece = lax.dynamic_slice_in_dim(x, dest * m, m, axis=0)
-        for c in range(chunks):
-            pc = lax.dynamic_slice_in_dim(piece, c * step, step, axis=0)
-            if op is None:
-                sub, got = sub.channel_send(pc, perm, stream=s)
-            else:
-                cur = lax.dynamic_slice_in_dim(out, src * m + c * step, step,
-                                               axis=0)
-                sub, got = acc_engine.acc_hop(sub, data_cfg, cur, pc, perm,
-                                              op=op, stream=s)
-            out = lax.dynamic_update_slice_in_dim(out, got,
-                                                  src * m + c * step, axis=0)
-        # -- doorbell: notify the peer its chunk (and count) landed
-        if not order:
-            # no P2: the notification must not overtake the data — pay the
-            # completion-ack round-trip (paper Listing 1)
-            sub = sub.flush(scope=SCOPE_THREAD, stream=s)
-        bell = _tie(jnp.ones((1,), jnp.int32), sub.token(s))
-        hdr = acc_engine.routed_accumulate(hdr, bell, perm, op="sum",
-                                           offset=n + k, stream=s)
-
-    # exit epoch: complete the control window per stream (thread scope) and,
-    # on a lent data window, drain the streams the exchange used so the
-    # caller gets its substrate back with nothing in flight.
-    for s in streams:
-        hdr = hdr.flush(stream=s)
-        out = _tie(out, hdr.substrate.token(s))
-    if win is not None:
-        for s in streams:
-            sub = sub.flush(scope=SCOPE_THREAD, stream=s)
-            out = _tie(out, sub.token(s))
-
-    # re-index the shift-addressed header words by source rank
-    shift = jnp.arange(n)
-    src_of_shift = jnp.mod(rank - shift, n)
-    by_shift = hdr.buffer[:n].at[0].set(
-        lax.dynamic_slice_in_dim(counts, rank, 1, axis=0)[0])
-    recv_counts = jnp.zeros((n,), jnp.int32).at[src_of_shift].set(by_shift)
-    bells = jnp.zeros((n,), jnp.int32).at[src_of_shift].set(hdr.buffer[n:])
-    return AllToAllResult(out, recv_counts, bells)
+    warn_legacy_once("repro.core.rma.rma_all_to_all",
+                     "alltoall.all_to_all_plan(...).execute (or "
+                     "plan_all_to_all)")
+    return plan_all_to_all(x, axis, axis_size, counts=counts, chunks=chunks,
+                           order=order, declare=declare, op=op, win=win)
 
 
-__all__ = ["rma_all_to_all", "AllToAllResult"]
+__all__ = ["rma_all_to_all", "plan_all_to_all", "all_to_all_plan",
+           "AllToAllResult"]

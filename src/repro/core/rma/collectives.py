@@ -250,6 +250,184 @@ def ring_all_gather(
     return _finish_lent((sub,), out, win, (0,))
 
 
+# ---------------------------------------------------------------------------
+# The planned all-reduce: the ring pattern as a declarative RMA plan
+# ---------------------------------------------------------------------------
+
+
+def _refs(*xs):
+    """The OpRefs among ``xs`` (binding names carry no ordering edge)."""
+    from repro.core.rma.plan import OpRef
+
+    return tuple(r for r in xs if isinstance(r, OpRef))
+
+
+def _record_ring_direction(plan, axis: str, n: int, xref, dshape, dtype, *,
+                           shift: int, stream: int):
+    """Record one ring direction (reduce-scatter then all-gather) on plan
+    window ``"ring"``; returns the OpRef of the direction's gathered output.
+
+    The slicing arithmetic mirrors ``_ring_reduce_scatter_dir`` /
+    ``_ring_all_gather_dir`` exactly — what moves from there to the planner
+    is every *scheduling* decision: hop flushes under the no-P2 baseline,
+    the specialized-vs-generic accumulate path, stream placement, and the
+    entry/exit epochs of a lent window."""
+    chunk = dshape[0] // n
+    pshape, s = (chunk,) + tuple(dshape[1:]), (1 if shift == 1 else -1)
+    perm = _ring_perm(n, shift)
+    state = xref
+    prev_hop = None
+    for k in range(n - 1):
+        piece = plan.compute(
+            lambda env, st=state, k=k: lax.dynamic_slice_in_dim(
+                env[st], ((lax.axis_index(axis) - s * k) % n) * chunk,
+                chunk, axis=0),
+            reads=_refs(state), shape=pshape, dtype=dtype,
+            label=f"rs{shift:+d}:piece{k}")
+        cur = plan.compute(
+            lambda env, st=state, k=k: lax.dynamic_slice_in_dim(
+                env[st], ((lax.axis_index(axis) - s * (k + 1)) % n) * chunk,
+                chunk, axis=0),
+            reads=_refs(state), shape=pshape, dtype=dtype,
+            label=f"rs{shift:+d}:cur{k}")
+        # hop k incorporates hop k-1's received data: a *completion* edge —
+        # the no-P2 baseline pays an ack epoch here, P2 chains for free
+        prev_hop = plan.hop(
+            "ring", piece, cur, perm, op="sum", stream=stream,
+            after=_refs(prev_hop), shape=pshape, dtype=dtype,
+            label=f"rs{shift:+d}:hop{k}")
+        state = plan.compute(
+            lambda env, st=state, h=prev_hop, k=k:
+                lax.dynamic_update_slice_in_dim(
+                    env[st], env[h],
+                    ((lax.axis_index(axis) - s * (k + 1)) % n) * chunk,
+                    axis=0),
+            reads=_refs(state, prev_hop), shape=dshape, dtype=dtype,
+            label=f"rs{shift:+d}:state{k}")
+    mine = plan.compute(
+        lambda env, st=state: lax.dynamic_slice_in_dim(
+            env[st], ((lax.axis_index(axis) + s) % n) * chunk, chunk, axis=0),
+        reads=_refs(state), shape=pshape, dtype=dtype,
+        label=f"rs{shift:+d}:mine")
+    # all-gather with owner_shift = s (rank r owns chunk (r+s) % n after RS)
+    out = plan.compute(
+        lambda env, mn=mine: lax.dynamic_update_slice_in_dim(
+            jnp.zeros(dshape, dtype), env[mn],
+            ((lax.axis_index(axis) + s) % n) * chunk, axis=0),
+        reads=_refs(mine), shape=dshape, dtype=dtype,
+        label=f"ag{shift:+d}:out0")
+    piece, prev = mine, prev_hop
+    for k in range(n - 1):
+        # every hop forwards the previously received piece (RS→AG entry
+        # included): completion edges, flushed only without P2
+        sd = plan.send("ring", piece, perm, stream=stream, after=_refs(prev),
+                       shape=pshape, dtype=dtype,
+                       label=f"ag{shift:+d}:send{k}")
+        out = plan.compute(
+            lambda env, o=out, sd=sd, k=k: lax.dynamic_update_slice_in_dim(
+                env[o], env[sd],
+                ((lax.axis_index(axis) - s * (k + 1) + s) % n) * chunk,
+                axis=0),
+            reads=_refs(out, sd), shape=dshape, dtype=dtype,
+            label=f"ag{shift:+d}:out{k + 1}")
+        piece = prev = sd
+    return out
+
+
+_RING_PLANS: dict[tuple, "object"] = {}
+
+
+def all_reduce_plan(axis: str, n: int, shape, dtype, *, order: bool = True,
+                    bidirectional: bool = False, declare_op: bool = True,
+                    lent: bool = False, naive_flush: bool = False):
+    """Build (or fetch from the build-once cache) the compiled ring
+    all-reduce plan for one static configuration.  ``shape`` is the padded
+    input shape.  ``naive_flush=True`` compiles the per-op-flushing baseline
+    instead (never cached together with the planned schedule)."""
+    from repro.core.rma.plan import RmaPlan
+
+    dt = jnp.dtype(dtype)
+    key = (axis, n, tuple(shape), dt.name, order, bidirectional, declare_op,
+           lent, naive_flush)
+    if key in _RING_PLANS:
+        return _RING_PLANS[key]
+    plan = RmaPlan(f"rma_all_reduce[n={n}]")
+    streams = (0, 1) if bidirectional else (0,)
+    plan.window("ring", scope=SCOPE_THREAD, order=order,
+                max_streams=len(streams),
+                same_op="sum" if declare_op else None,
+                accumulate_ops=("sum",), dtype=dt,
+                entry_epoch=lent, exit_epoch=lent)
+    plan.bind("x", tuple(shape), dt)
+    if bidirectional:
+        h = shape[0] // 2
+        hshape = (h,) + tuple(shape[1:])
+        lo = plan.compute(lambda env: env["x"][:h], shape=hshape, dtype=dt,
+                          label="split:lo")
+        hi = plan.compute(lambda env: env["x"][h:], shape=hshape, dtype=dt,
+                          label="split:hi")
+        lo_full = _record_ring_direction(plan, axis, n, lo, hshape, dt,
+                                         shift=1, stream=0)
+        hi_full = _record_ring_direction(plan, axis, n, hi, hshape, dt,
+                                         shift=-1, stream=1)
+        out = plan.compute(
+            lambda env: jnp.concatenate([env[lo_full], env[hi_full]], axis=0),
+            reads=(lo_full, hi_full), shape=tuple(shape), dtype=dt,
+            label="concat")
+    else:
+        out = _record_ring_direction(plan, axis, n, "x", tuple(shape), dt,
+                                     shift=1, stream=0)
+    plan.output("out", out)
+    compiled = plan.compile(naive_flush=naive_flush)
+    _RING_PLANS[key] = compiled
+    return compiled
+
+
+def plan_all_reduce(
+    x: Array,
+    axis: str,
+    axis_size: int,
+    *,
+    order: bool = True,
+    bidirectional: bool = False,
+    win: Window | None = None,
+    declare_op: bool = True,
+) -> Array:
+    """Plan-native one-sided ring all-reduce: fetch the compiled schedule
+    from the build-once cache and replay it on this step's data.  Same
+    semantics and lowered phase structure as the classic ``rma_all_reduce``
+    (which is now a thin deprecation-warning wrapper over this)."""
+    n = axis_size
+    if n == 1:
+        return x
+    orig = x.shape[0]
+    pad = (-orig) % (2 * n if bidirectional else n)
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)],
+                            axis=0)
+    compiled = all_reduce_plan(axis, n, x.shape, x.dtype, order=order,
+                               bidirectional=bidirectional,
+                               declare_op=declare_op, lent=win is not None)
+    streams = (0, 1) if bidirectional else (0,)
+    if win is None:
+        same_op = "sum" if declare_op else None
+        acc_info = ({"same_op": same_op, "accumulate_ops": (same_op,)}
+                    if same_op is not None else {})
+        ring = Window.allocate(
+            x, axis, n, WindowConfig(scope=SCOPE_THREAD, order=order,
+                                     max_streams=len(streams), **acc_info))
+    else:
+        if max(streams) >= win.config.max_streams:
+            raise ValueError(
+                f"ring needs streams {tuple(streams)} but the lent window "
+                f"has max_streams={win.config.max_streams} (dup-immutable); "
+                "allocate it with enough issue streams")
+        ring = win
+    res = compiled.execute({"ring": ring}, {"x": x})
+    out = res.outputs["out"]
+    return out[:orig] if pad else out
+
+
 def rma_all_reduce(
     x: Array,
     axis: str,
@@ -262,6 +440,11 @@ def rma_all_reduce(
 ) -> Array:
     """One-sided ring all-reduce = reduce-scatter + all-gather, on one
     substrate.
+
+    .. deprecated:: the imperative call-site form is kept as a thin wrapper
+       that builds-and-executes the declarative plan (``all_reduce_plan`` /
+       ``plan_all_reduce``); it emits a ``DeprecationWarning`` once per
+       process.  Numerics and lowered phase structure are identical.
 
     2(n-1) data phases with P2 ordering; the no-P2 baseline additionally
     pays a thread-scoped flush epoch (one ack RTT) before every dependent
@@ -278,38 +461,14 @@ def rma_all_reduce(
     pays the conservative generic-path completion ack (one extra phase per
     reduce hop), the cost the paper's §2.3 hints exist to remove.
     """
-    n = axis_size
-    if n == 1:
-        return x
-    orig = x.shape[0]
-    pad = (-orig) % (2 * n if bidirectional else n)
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
-    same_op = "sum" if declare_op else None
-    if bidirectional:
-        h = x.shape[0] // 2
-        base, cfg = _ring_substrate(x, axis, n, order=order, win=win,
-                                    streams=(0, 1), same_op=same_op)
-        s_lo, lo = _ring_reduce_scatter_dir(base, x[:h], axis, n,
-                                            cfg=cfg, shift=1, stream=0)
-        s_hi, hi = _ring_reduce_scatter_dir(base, x[h:], axis, n,
-                                            cfg=cfg, shift=-1, stream=1)
-        s_lo, lo_full = _ring_all_gather_dir(s_lo, lo, axis, n, order=cfg.order,
-                                             shift=1, owner_shift=1, stream=0,
-                                             entry_dep=True)
-        s_hi, hi_full = _ring_all_gather_dir(s_hi, hi, axis, n, order=cfg.order,
-                                             shift=-1, owner_shift=-1, stream=1,
-                                             entry_dep=True)
-        out = jnp.concatenate([lo_full, hi_full], axis=0)
-        out = _finish_lent((s_lo, s_hi), out, win, (0, 1))
-    else:
-        sub, cfg = _ring_substrate(x, axis, n, order=order, win=win,
-                                   same_op=same_op)
-        sub, mine = _ring_reduce_scatter_dir(sub, x, axis, n, cfg=cfg, shift=1)
-        sub, out = _ring_all_gather_dir(sub, mine, axis, n, order=cfg.order,
-                                        shift=1, owner_shift=1, entry_dep=True)
-        out = _finish_lent((sub,), out, win, (0,))
-    return out[:orig] if pad else out
+    from repro.core.rma.plan import warn_legacy_once
+
+    warn_legacy_once("repro.core.rma.rma_all_reduce",
+                     "collectives.all_reduce_plan(...).execute (or "
+                     "plan_all_reduce)")
+    return plan_all_reduce(x, axis, axis_size, order=order,
+                           bidirectional=bidirectional, win=win,
+                           declare_op=declare_op)
 
 
 # ---------------------------------------------------------------------------
@@ -425,6 +584,8 @@ __all__ = [
     "ring_reduce_scatter",
     "ring_all_gather",
     "rma_all_reduce",
+    "all_reduce_plan",
+    "plan_all_reduce",
     "put_signal",
     "put_signal_pipelined",
 ]

@@ -1,0 +1,888 @@
+"""Declarative RMA plans — build-once, execute-many communication schedules.
+
+The paper's thesis is that applications should *declare anticipated usage* so
+the implementation can specialize.  The window info object (paper §2) makes
+that declaration one hint at a time, per window; this module lifts it to the
+level the applications actually think at — a whole **communication pattern**:
+
+1. **Record**: callers describe a pattern once on an :class:`RmaPlan` —
+   ``plan.put(...)``, ``plan.accumulate(...)``, ``plan.signal(...)``,
+   ``plan.fetch_op(...)`` — against *declared* plan windows, with per-op
+   hints and explicit cross-op ordering edges.  No arrays move; ops name
+   **bindings** (typed placeholders) or closures over earlier results.
+2. **Compile**: :meth:`RmaPlan.compile` runs planner passes over the
+   recorded op graph —
+
+   * *validation*: declaration violations (an op outside the window's
+     declared vocabulary, an over-envelope atomic under the P3 assertion,
+     an ordering cycle, a stream past the declaration) are rejected **at
+     build time**, not at trace time;
+   * *stream assignment*: issue streams are auto-assigned from the
+     dependency structure — independent chains land on distinct streams, so
+     P1 thread-scope completion never serializes them;
+   * *flush coalescing*: completion epochs are placed only where an ordering
+     edge requires one (P2-ordered same-stream edges need none) and
+     coalesced per scope, so each peer pays the minimum ack round-trips;
+   * *put fusion*: same-peer static-displacement puts marked fusable are
+     merged into one gather-write phase (:meth:`Substrate.put_multi`);
+   * *accumulate routing*: every accumulate-class op is routed through the
+     op-specialized engine (:mod:`repro.core.rma.accumulate`) using the
+     plan-wide declared op set, at compile time.
+
+3. **Execute**: :meth:`CompiledPlan.execute` replays the frozen schedule
+   under ``jit`` with fresh data each step — the dynamic-communication
+   analogue of what memory handles (P5) did for registration: pay the
+   planning once, then every steady-state iteration is pure issue.
+
+The compiled plan also *predicts* its lowered communication-phase count
+(:attr:`CompiledPlan.phases`), which tests assert against the real HLO —
+the planner's cost model and the substrate's are the same model.
+
+Echoes: foMPI's schedule-time specialization (Gerstenberger et al.) and
+RAMC's channel-plan separation of setup from issue.  See ``docs/rma_plan.md``
+for the builder tour and the migration guide from imperative call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rma import accumulate as acc_engine
+from repro.core.rma.substrate import SCOPE_THREAD, _is_static, _tie
+from repro.core.rma.window import KNOWN_ACC_OPS, WindowConfig
+
+Array = jax.Array
+Perm = Sequence[tuple[int, int]]
+
+
+class PlanError(ValueError):
+    """A build-time declaration violation in an :class:`RmaPlan`.
+
+    Raised by :meth:`RmaPlan.compile` (never at trace time): undeclared
+    accumulate ops, over-envelope atomics under the P3 assertion, ordering
+    cycles, streams past the declared count, unknown windows/bindings."""
+
+
+@dataclasses.dataclass(frozen=True)
+class OpRef:
+    """Handle to a recorded plan op — usable as a data source for later ops,
+    as an ``after=`` ordering edge, and as a plan output."""
+
+    idx: int
+    label: str = ""
+
+
+#: Comm-op kinds and their baseline phase cost (before routing/offset terms).
+_COMM_KINDS = frozenset({
+    "put", "get", "send", "hop", "accumulate", "fetch_op", "signal",
+    "put_handle",
+})
+
+
+@dataclasses.dataclass
+class _Op:
+    idx: int
+    kind: str                      # member of _COMM_KINDS, or "compute"
+    window: str | None = None
+    perm: tuple | None = None
+    source: Any = None             # binding name | OpRef | callable(env)
+    cur: Any = None                # hop: local accumulator input
+    offset: Any = 0                # int (static) | binding | OpRef | callable
+    size: int | None = None        # get
+    op: str | None = None          # accumulate-class op name
+    stream: int | None = None      # pinned issue stream (None = planner picks)
+    after: tuple = ()              # completion edges (OpRefs)
+    reads: tuple = ()              # value edges a closure consumes (OpRefs)
+    shape: tuple | None = None     # declared payload spec (for routing)
+    dtype: Any = None
+    fuse: bool = False             # put: may join a gather-write group
+    slot: int | None = None        # put_handle: static registration slot
+    handle: Any = None             # put_handle: handle source
+    value: Any = None              # signal: flag payload override
+    fn: Callable | None = None     # compute
+    label: str = ""
+    # -- filled by the compiler --
+    deps: frozenset = frozenset()       # value ∪ completion (scheduling)
+    sync_deps: frozenset = frozenset()  # completion only (flush/tie placement)
+    comm_deps: frozenset = frozenset()  # comm frontier of `deps`
+    comm_sync: frozenset = frozenset()  # comm frontier of `sync_deps`
+    path: str | None = None             # routed accumulate path
+
+
+@dataclasses.dataclass
+class _PlanWindow:
+    """A plan-level window declaration — the pattern-wide info object."""
+
+    name: str
+    scope: str = SCOPE_THREAD
+    order: bool = True
+    accumulate_ops: tuple = ("sum",)
+    same_op: str | None = None
+    assert_accumulate_intrinsic: bool = False
+    max_atomic_elems: int | None = None
+    max_streams: int = 1
+    dtype: Any = jnp.float32
+    entry_epoch: bool = False      # flush caller in-flight ops on entry
+    exit_epoch: bool = False       # complete the pattern's ops on exit
+
+    def config(self) -> WindowConfig:
+        return WindowConfig(
+            scope=self.scope, order=self.order,
+            accumulate_ops=self.accumulate_ops, same_op=self.same_op,
+            assert_accumulate_intrinsic=self.assert_accumulate_intrinsic,
+            max_atomic_elems=self.max_atomic_elems,
+            max_streams=self.max_streams)
+
+
+@dataclasses.dataclass
+class _Step:
+    """One entry of the compiled schedule."""
+
+    kind: str                      # "op" | "flush" | "entry" | "fused"
+    window: str | None = None
+    stream: int | None = None
+    op: _Op | None = None
+    group: tuple = ()              # fused puts
+    ties: tuple = ()               # ((window, stream), ...) token ties
+    phases: int = 0
+
+
+class PlanEnv:
+    """The execute-time environment a plan's closures see.
+
+    ``env[ref]`` reads an earlier op's result (by :class:`OpRef`) or a
+    binding (by name); :meth:`buffer` reads a plan window's current local
+    shard — everything a recorded transform needs, nothing it could use to
+    bypass the schedule."""
+
+    def __init__(self, bindings: dict, views: dict):
+        self.bindings = bindings
+        self.values: dict[int, Array] = {}
+        self._views = views
+
+    def __getitem__(self, key):
+        if isinstance(key, OpRef):
+            return self.values[key.idx]
+        return self.bindings[key]
+
+    def buffer(self, window: str) -> Array:
+        return self._views[window].buffer
+
+
+@dataclasses.dataclass
+class PlanResult:
+    """What one :meth:`CompiledPlan.execute` replay produced: the updated
+    window views (original configs restored), the declared outputs, and the
+    aggregated P5 stale-handle drop counter from any handle-path ops."""
+
+    windows: dict[str, Any]
+    outputs: dict[str, Array]
+    err_count: Array
+
+
+class RmaPlan:
+    """Builder: record a communication pattern once, then :meth:`compile`.
+
+    See the module docstring for the model.  Typical shape::
+
+        plan = RmaPlan("grad-sync")
+        plan.window("ring", scope="thread", order=True, same_op="sum")
+        plan.bind("g", (1024,), jnp.float32)
+        h = plan.accumulate("ring", "g", perm, op="sum")
+        plan.signal("ring", perm, flag_offset=0, after=(h,))
+        compiled = plan.compile()
+        ...
+        res = compiled.execute({"ring": win}, {"g": grads})   # every step
+    """
+
+    def __init__(self, name: str = "rma-plan"):
+        self.name = name
+        self._windows: dict[str, _PlanWindow] = {}
+        self._bindings: dict[str, tuple[tuple, Any]] = {}
+        self._ops: list[_Op] = []
+        self._edges: list[tuple[int, int]] = []   # plan.order(first, then)
+        self._outputs: list[tuple[str, Any]] = []
+
+    # -- declarations ---------------------------------------------------------
+    def window(self, name: str, **decl) -> str:
+        """Declare a plan window — the pattern-wide anticipated usage for one
+        region of remotely accessible memory.  Accepts the ``WindowConfig``
+        info keys plus ``dtype`` (element type, used to route flag
+        accumulates) and ``entry_epoch``/``exit_epoch`` (whether the plan
+        owes the caller completion epochs at its boundaries — lent windows
+        want both)."""
+        if name in self._windows:
+            raise PlanError(f"window {name!r} declared twice")
+        self._windows[name] = w = _PlanWindow(name=name, **decl)
+        w.config()  # surface invalid info-key combinations at declaration
+        return name
+
+    def bind(self, name: str, shape: Sequence[int], dtype) -> str:
+        """Declare a typed input placeholder, filled at execute time."""
+        if name in self._bindings:
+            raise PlanError(f"binding {name!r} declared twice")
+        self._bindings[name] = (tuple(shape), jnp.dtype(dtype))
+        return name
+
+    # -- recording ------------------------------------------------------------
+    def _record(self, **kw) -> OpRef:
+        op = _Op(idx=len(self._ops), **kw)
+        if op.kind != "compute":
+            if op.window not in self._windows:
+                raise PlanError(
+                    f"op {op.kind!r} names undeclared window {op.window!r}")
+            op.perm = tuple(tuple(p) for p in op.perm)
+        for ref in (*op.after, *op.reads):
+            if not isinstance(ref, OpRef) or ref.idx >= op.idx:
+                raise PlanError(
+                    "after=/reads= take OpRefs of already-recorded ops")
+        self._ops.append(op)
+        return OpRef(op.idx, op.label or f"{op.kind}#{op.idx}")
+
+    def put(self, window: str, source, perm, *, offset=0, stream=None,
+            after=(), fuse: bool = False, shape=None, dtype=None,
+            label: str = "") -> OpRef:
+        """Record an RDMA write.  ``fuse=True`` marks it joinable into a
+        same-peer gather-write phase (requires a static ``offset`` and a
+        declared payload spec)."""
+        return self._record(kind="put", window=window, source=source,
+                            perm=perm, offset=offset, stream=stream,
+                            after=tuple(after), fuse=fuse, shape=shape,
+                            dtype=dtype, label=label)
+
+    def get(self, window: str, perm, *, offset=0, size: int, stream=None,
+            after=(), label: str = "") -> OpRef:
+        """Record an RDMA read; the result is available as this op's value."""
+        return self._record(kind="get", window=window, perm=perm,
+                            offset=offset, size=size, stream=stream,
+                            after=tuple(after), label=label)
+
+    def send(self, window: str, source, perm, *, stream=None, after=(),
+             shape=None, dtype=None, label: str = "") -> OpRef:
+        """Record a raw one-phase channel transfer (the ring-collective hop
+        primitive); the value is what *this* device receives."""
+        return self._record(kind="send", window=window, source=source,
+                            perm=perm, stream=stream, after=tuple(after),
+                            shape=shape, dtype=dtype, label=label)
+
+    def hop(self, window: str, source, cur, perm, *, op: str = "sum",
+            stream=None, after=(), shape=None, dtype=None,
+            label: str = "") -> OpRef:
+        """Record one reduce-ring hop: send ``source`` along ``perm`` and
+        combine the received piece into ``cur`` under ``op``.  Routed through
+        the accumulate engine: a declared same-op window stays at one data
+        phase, an undeclared one pays the generic per-hop completion ack."""
+        return self._record(kind="hop", window=window, source=source, cur=cur,
+                            perm=perm, op=op, stream=stream,
+                            after=tuple(after), shape=shape, dtype=dtype,
+                            label=label)
+
+    def accumulate(self, window: str, source, perm, *, op: str = "sum",
+                   offset=0, stream=None, after=(), shape=None, dtype=None,
+                   label: str = "") -> OpRef:
+        """Record an ``MPI_Accumulate``; path selection happens at compile
+        time from the plan window's declared op set."""
+        return self._record(kind="accumulate", window=window, source=source,
+                            perm=perm, op=op, offset=offset, stream=stream,
+                            after=tuple(after), shape=shape, dtype=dtype,
+                            label=label)
+
+    def fetch_op(self, window: str, source, perm, *, op: str = "sum",
+                 offset=0, stream=None, after=(), shape=None, dtype=None,
+                 label: str = "") -> OpRef:
+        """Record an atomic fetch-and-op; the value is the fetched old word."""
+        return self._record(kind="fetch_op", window=window, source=source,
+                            perm=perm, op=op, offset=offset, stream=stream,
+                            after=tuple(after), shape=shape, dtype=dtype,
+                            label=label)
+
+    def signal(self, window: str, perm, *, flag_offset, value=None,
+               stream=None, after=(), label: str = "") -> OpRef:
+        """Record a notification flag — an accumulate of the window's
+        declared op (op-aware default payload) at ``flag_offset``, ordered
+        behind ``after``.  Cross-window/stream edges tie the flag to the
+        upstream token (and, without P2, cost one coalesced flush epoch) —
+        the paper's Listing-1/Listing-2 split, decided by the planner."""
+        return self._record(kind="signal", window=window, perm=perm,
+                            offset=flag_offset, value=value, stream=stream,
+                            after=tuple(after), label=label)
+
+    def put_handle(self, window: str, source, handle, perm, *, slot=None,
+                   offset=0, stream=None, after=(), shape=None, dtype=None,
+                   label: str = "") -> OpRef:
+        """Record a P5 memory-handle put: the payload and the handle's
+        ``[addr, epoch]`` header ride one packet (2 HLO phases); stale
+        handles are dropped and counted into :attr:`PlanResult.err_count`.
+        ``slot`` (static) arms the trace-time use-after-release check."""
+        return self._record(kind="put_handle", window=window, source=source,
+                            handle=handle, perm=perm, slot=slot,
+                            offset=offset, stream=stream, after=tuple(after),
+                            shape=shape, dtype=dtype, label=label)
+
+    def compute(self, fn: Callable[[PlanEnv], Array], *, reads=(), after=(),
+                shape=None, dtype=None, label: str = "") -> OpRef:
+        """Record a local (zero-phase) transform over earlier results.
+        ``fn(env)`` runs at execute time.  ``reads`` lists every OpRef the
+        closure consumes — a **value** edge (schedules the compute after its
+        inputs exist, but implies no remote-completion epoch).  ``after``
+        adds **completion** edges, same as on transport ops."""
+        return self._record(kind="compute", fn=fn, reads=tuple(reads),
+                            after=tuple(after), shape=shape, dtype=dtype,
+                            label=label)
+
+    def order(self, first: OpRef, then: OpRef) -> None:
+        """Add an explicit **completion** edge *after the fact* (``then``
+        must not issue before ``first`` completes remotely).  Unlike
+        ``after=`` this can express any edge — including, erroneously, a
+        cycle, which :meth:`compile` rejects."""
+        self._edges.append((first.idx, then.idx))
+
+    def output(self, name: str, value) -> None:
+        """Mark ``value`` (an OpRef or ``callable(env)``) as a named output
+        of every replay."""
+        self._outputs.append((name, value))
+
+    # -- compile: the planner passes -----------------------------------------
+    def _refs_in(self, *specs):
+        for s in specs:
+            if isinstance(s, OpRef):
+                yield s.idx
+
+    def _spec_of(self, op: _Op):
+        """Resolve an op's payload (shape, dtype) for routing/validation."""
+        if op.shape is not None and op.dtype is not None:
+            return tuple(op.shape), jnp.dtype(op.dtype)
+        src = op.source
+        if isinstance(src, str):
+            if src not in self._bindings:
+                raise PlanError(f"op {op.idx} reads undeclared binding {src!r}")
+            return self._bindings[src]
+        if isinstance(src, OpRef):
+            prev = self._ops[src.idx]
+            if prev.kind in ("send", "hop", "compute", "fetch_op"):
+                try:
+                    return self._spec_of(prev)
+                except PlanError:
+                    return None
+        return None
+
+    def compile(self, *, naive_flush: bool = False) -> "CompiledPlan":
+        """Run the planner passes and freeze the schedule.
+
+        ``naive_flush=True`` builds the conservative baseline instead: a
+        completion epoch after *every* transport op (the per-op flushing an
+        application without plans would write defensively) — used by
+        benchmarks and tests to quantify what coalescing saves."""
+        ops = [dataclasses.replace(o) for o in self._ops]
+
+        # pass 0 — dependency graph + cycle check.  Two edge classes:
+        # *value* edges (dataflow: sources, reads) only constrain the
+        # schedule; *completion* edges (after=, plan.order) additionally
+        # demand the upstream op's remote completion — they are what the
+        # flush/tie pass places epochs for.
+        for o in ops:
+            sync = {r.idx for r in o.after}
+            deps = set(sync)
+            deps.update(r.idx for r in o.reads)
+            deps.update(self._refs_in(o.source, o.cur, o.offset, o.handle,
+                                      o.value))
+            o.deps = frozenset(deps)
+            o.sync_deps = frozenset(sync)
+        succ: dict[int, set[int]] = {o.idx: set() for o in ops}
+        indeg = {o.idx: len(o.deps) for o in ops}
+        for o in ops:
+            for d in o.deps:
+                succ[d].add(o.idx)
+        for first, then in self._edges:
+            if then not in succ[first]:
+                succ[first].add(then)
+                indeg[then] += 1
+        ready = sorted(i for i, d in indeg.items() if d == 0)
+        topo: list[int] = []
+        while ready:
+            i = ready.pop(0)
+            topo.append(i)
+            for j in sorted(succ[i]):
+                indeg[j] -= 1
+                if indeg[j] == 0:
+                    ready.append(j)
+            ready.sort()
+        if len(topo) != len(ops):
+            cyc = sorted(i for i, d in indeg.items() if d > 0)
+            raise PlanError(
+                f"ordering cycle through ops {cyc} — the recorded edges "
+                "admit no schedule; remove one plan.order()/after= edge")
+        edge_extra: dict[int, set[int]] = {o.idx: set() for o in ops}
+        for first, then in self._edges:
+            edge_extra[then].add(first)
+
+        # pass 1 — declaration validation (build-time, per paper §2.3)
+        for o in ops:
+            if o.kind == "compute":
+                continue
+            w = self._windows[o.window]
+            if o.kind in ("accumulate", "hop", "fetch_op", "signal"):
+                name = o.op if o.kind != "signal" else (w.same_op or "sum")
+                if name not in KNOWN_ACC_OPS:
+                    raise PlanError(f"unknown accumulate op {name!r} (op {o.idx})")
+                if name not in w.accumulate_ops:
+                    raise PlanError(
+                        f"op {o.idx} ({o.kind}) uses {name!r} but window "
+                        f"{w.name!r} declares accumulate_ops="
+                        f"{w.accumulate_ops!r} — an undeclared operation is "
+                        "a declaration violation; extend the window's "
+                        "declared vocabulary at plan.window()")
+            if o.stream is not None and not (0 <= o.stream < w.max_streams):
+                raise PlanError(
+                    f"op {o.idx} pins stream {o.stream} but window {w.name!r} "
+                    f"declares max_streams={w.max_streams}")
+
+        # pass 2 — accumulate routing from the plan-wide declared op set
+        for o in ops:
+            if o.kind in ("accumulate", "hop"):
+                spec = self._spec_of(o)
+                if spec is None:
+                    raise PlanError(
+                        f"op {o.idx} ({o.kind}) needs a declared payload "
+                        "spec for routing — bind() the source or pass "
+                        "shape=/dtype=")
+                shape, dt = spec
+                count = 1
+                for dim in shape:
+                    count *= dim
+                w = self._windows[o.window]
+                try:
+                    o.path = acc_engine.route(o.op, count, dt, w.config())
+                except ValueError as e:
+                    raise PlanError(f"op {o.idx}: {e}") from None
+            elif o.kind == "signal":
+                w = self._windows[o.window]
+                flag_op = w.same_op if w.same_op is not None else "sum"
+                try:
+                    o.path = acc_engine.route(flag_op, 1, jnp.dtype(w.dtype),
+                                              w.config())
+                except ValueError as e:
+                    raise PlanError(f"op {o.idx}: {e}") from None
+
+        # pass 3 — stream assignment: chains inherit, independent chains
+        # spread round-robin over the declared streams (max P1 concurrency)
+        pos = {idx: k for k, idx in enumerate(topo)}
+        next_stream: dict[str, int] = {}
+        for idx in topo:
+            o = ops[idx]
+            if o.kind == "compute" or o.stream is not None:
+                continue
+            w = self._windows[o.window]
+            same_win = [d for d in self._comm_ancestors(ops, o)
+                        if ops[d].window == o.window
+                        and ops[d].stream is not None]
+            if same_win:
+                o.stream = ops[max(same_win, key=lambda d: pos[d])].stream
+            else:
+                nxt = next_stream.get(o.window, 0)
+                o.stream = nxt % w.max_streams
+                next_stream[o.window] = nxt + 1
+
+        # pass 4 — comm frontiers.  `comm_deps`: nearest comm ancestors of
+        # *all* edges (independence/fusion/stream analysis).  `comm_sync`:
+        # nearest comm ancestors of *completion* edges only — a completion
+        # edge landing on a compute means "after what that compute consumes
+        # has completed", so it expands through the compute's full deps.
+        comm: dict[int, frozenset] = {}
+        for idx in topo:
+            o = ops[idx]
+            acc: set[int] = set()
+            for d in sorted(o.deps | edge_extra[idx]):
+                if ops[d].kind == "compute":
+                    acc |= comm[d]
+                else:
+                    acc.add(d)
+            comm[idx] = frozenset(acc)
+            o.comm_deps = comm[idx]
+            sync: set[int] = set()
+            for d in sorted(o.sync_deps | edge_extra[idx]):
+                if ops[d].kind == "compute":
+                    sync |= comm[d]
+                else:
+                    sync.add(d)
+            o.comm_sync = frozenset(sync)
+
+        # pass 5 — put fusion: same (window, stream, perm), static offsets,
+        # identical dependency frontier => provably unordered among
+        # themselves => one gather-write phase
+        fused_groups: list[list[int]] = []
+        fused_of: dict[int, int] = {}
+        if not naive_flush:
+            buckets: dict[tuple, list[int]] = {}
+            for idx in topo:
+                o = ops[idx]
+                if (o.kind == "put" and o.fuse and _is_static(o.offset)
+                        and self._spec_of(o) is not None):
+                    key = (o.window, o.stream, o.perm, o.comm_deps)
+                    buckets.setdefault(key, []).append(idx)
+            for key, members in buckets.items():
+                if len(members) > 1:
+                    gid = len(fused_groups)
+                    fused_groups.append(members)
+                    for m in members:
+                        fused_of[m] = gid
+
+        # pass 6 — schedule with coalesced flush epochs
+        steps: list[_Step] = []
+        flushed: set[int] = set()          # op idxs whose completion is paid
+        pending: dict[tuple, list[int]] = {}
+        used_streams: dict[str, set] = {w: set() for w in self._windows}
+
+        def emit_flush(wname: str, stream: int | None):
+            w = self._windows[wname]
+            if w.scope == SCOPE_THREAD:
+                keys = [(wname, stream)]
+            else:  # process scope: the engine drains every stream, serialized
+                keys = [k for k in pending if k[0] == wname]
+                stream = None
+            ph = sum(2 for k in keys if pending.get(k))
+            steps.append(_Step(kind="flush", window=wname, stream=stream,
+                               phases=ph))
+            for k in keys:
+                flushed.update(pending.pop(k, ()))
+
+        for wname, w in self._windows.items():
+            if w.entry_epoch:
+                strs = sorted({o.stream for o in ops
+                               if o.kind != "compute" and o.window == wname})
+                for s in strs:
+                    # caller in-flight ops: unknowable at compile; 0 predicted
+                    steps.append(_Step(kind="entry", window=wname, stream=s))
+
+        for idx in topo:
+            o = ops[idx]
+            if o.kind == "compute":
+                steps.append(_Step(kind="op", op=o))
+                continue
+            gid = fused_of.get(idx)
+            if gid is not None and idx != fused_groups[gid][0]:
+                continue  # emitted with the group head
+            group = fused_groups[gid] if gid is not None else [idx]
+            ties: list[tuple] = []
+            for member in group:
+                for d in sorted(ops[member].comm_sync):
+                    u = ops[d]
+                    cross = (u.window != o.window) or (u.stream != o.stream)
+                    uw = self._windows[u.window]
+                    if cross:
+                        ties.append((u.window, u.stream))
+                    if (not uw.order) and d not in flushed:
+                        emit_flush(u.window, u.stream)
+            key = (o.window, o.stream)
+            if gid is not None:
+                steps.append(_Step(kind="fused", window=o.window,
+                                   stream=o.stream,
+                                   group=tuple(ops[m] for m in group),
+                                   ties=tuple(dict.fromkeys(ties)), phases=1))
+            else:
+                steps.append(_Step(kind="op", window=o.window,
+                                   stream=o.stream, op=o,
+                                   ties=tuple(dict.fromkeys(ties)),
+                                   phases=self._op_phases(o)))
+            pending.setdefault(key, []).extend(group)
+            used_streams[o.window].add(o.stream)
+            if naive_flush:
+                emit_flush(o.window, o.stream)
+
+        exit_ties: list[tuple] = []
+        for wname, w in self._windows.items():
+            if not w.exit_epoch:
+                continue
+            if w.scope == SCOPE_THREAD:
+                for s in sorted(used_streams[wname]):
+                    emit_flush(wname, s)
+                    exit_ties.append((wname, s))
+            else:
+                emit_flush(wname, None)
+                exit_ties.extend((wname, s) for s in sorted(used_streams[wname]))
+
+        return CompiledPlan(
+            name=self.name, windows=dict(self._windows),
+            bindings=dict(self._bindings), steps=tuple(steps),
+            outputs=tuple(self._outputs), exit_ties=tuple(exit_ties),
+            used_streams={w: tuple(sorted(s))
+                          for w, s in used_streams.items()},
+            naive=naive_flush)
+
+    @staticmethod
+    def _comm_ancestors(ops, o: _Op):
+        """Direct deps, looking through compute ops to their comm frontier
+        (used by stream inheritance before pass 4 runs)."""
+        seen, stack, out = set(), list(o.deps), []
+        while stack:
+            d = stack.pop()
+            if d in seen:
+                continue
+            seen.add(d)
+            if ops[d].kind == "compute":
+                stack.extend(ops[d].deps)
+            else:
+                out.append(d)
+        return out
+
+    def _op_phases(self, o: _Op) -> int:
+        """The substrate cost model, applied at compile time (the table in
+        ``window.py``'s docstring)."""
+        addr = 0 if _is_static(o.offset) else 1
+        if o.kind == "put":
+            return 1 + addr
+        if o.kind == "send":
+            return 1
+        if o.kind == "put_handle":
+            return 2                      # payload + [addr, epoch] header
+        if o.kind == "get":
+            return 2 + addr
+        if o.kind == "fetch_op":
+            return 2 + addr
+        if o.kind in ("accumulate", "signal"):
+            return (2 if o.path == acc_engine.PATH_SOFTWARE else 1) + addr
+        if o.kind == "hop":
+            return 2 if o.path == acc_engine.PATH_SOFTWARE else 1
+        raise AssertionError(o.kind)
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """A frozen, replayable communication schedule (see module docstring).
+
+    ``phases`` is the planner's predicted lowered communication-phase count
+    — the same cost model the substrate documents, so tests can assert
+    ``phases == HLO collective-permute count`` and catch either side lying.
+    """
+
+    name: str
+    windows: dict[str, _PlanWindow]
+    bindings: dict[str, tuple]
+    steps: tuple
+    outputs: tuple
+    exit_ties: tuple
+    used_streams: dict[str, tuple]
+    naive: bool = False
+
+    @property
+    def phases(self) -> int:
+        return sum(s.phases for s in self.steps)
+
+    def phase_table(self) -> list[tuple[str, int]]:
+        """Per-step (label, predicted phases) — the schedule, human-readable."""
+        rows = []
+        for s in self.steps:
+            if s.kind == "flush":
+                rows.append((f"flush[{s.window}/{s.stream}]", s.phases))
+            elif s.kind == "entry":
+                rows.append((f"entry[{s.window}/{s.stream}]", s.phases))
+            elif s.kind == "fused":
+                rows.append((f"fused-put[{s.window}/{s.stream}]x"
+                             f"{len(s.group)}", s.phases))
+            elif s.op.kind == "compute":
+                continue
+            else:
+                rows.append((s.op.label or f"{s.op.kind}#{s.op.idx}",
+                             s.phases))
+        return rows
+
+    # -- execute: replay the schedule ----------------------------------------
+    def _resolve(self, spec, env: PlanEnv):
+        if isinstance(spec, OpRef):
+            return env.values[spec.idx]
+        if isinstance(spec, str):
+            return env.bindings[spec]
+        if callable(spec):
+            return spec(env)
+        return spec
+
+    def execute(self, windows: dict[str, Any],
+                bindings: dict[str, Array] | None = None) -> PlanResult:
+        """Replay the schedule on live windows with fresh bindings.
+
+        ``windows`` maps every declared plan window to a live view whose
+        substrate it runs on (the plan's declared config is bound to it for
+        the replay — a zero-copy dup in all but name — and the caller's
+        config is restored on the returned views).  ``bindings`` fills the
+        declared placeholders.  Runs under ``jit``/``shard_map``; nothing
+        here re-plans."""
+        bindings = dict(bindings or {})
+        for bname, (shape, dt) in self.bindings.items():
+            if bname not in bindings:
+                raise PlanError(f"execute() missing binding {bname!r}")
+            got = bindings[bname]
+            if tuple(got.shape) != shape or jnp.dtype(got.dtype) != dt:
+                raise PlanError(
+                    f"binding {bname!r} expects shape={shape} dtype={dt}, "
+                    f"got shape={tuple(got.shape)} dtype={got.dtype} — "
+                    "rebuild the plan for a new pattern instead of rebinding")
+        views: dict[str, Any] = {}
+        for wname, decl in self.windows.items():
+            if wname not in windows:
+                raise PlanError(f"execute() missing window {wname!r}")
+            win = windows[wname]
+            need = max(self.used_streams[wname], default=0) + 1
+            if win.substrate.n_streams < need:
+                raise PlanError(
+                    f"plan {self.name!r} schedules {need} issue stream(s) on "
+                    f"window {wname!r} but its substrate was allocated with "
+                    f"{win.substrate.n_streams}; allocate with "
+                    f"max_streams>={need}")
+            cfg = decl.config().replace(max_streams=win.substrate.n_streams)
+            views[wname] = dataclasses.replace(win, config=cfg)
+        env = PlanEnv(bindings, views)
+        errs = jnp.zeros((), jnp.int32)
+
+        for step in self.steps:
+            if step.kind == "entry":
+                w = views[step.window]
+                views[step.window] = w._view(w.substrate.flush(
+                    scope=self.windows[step.window].scope,
+                    stream=step.stream))
+                continue
+            if step.kind == "flush":
+                w = views[step.window]
+                views[step.window] = w._view(w.substrate.flush(
+                    scope=self.windows[step.window].scope,
+                    stream=step.stream))
+                continue
+            if step.kind == "fused":
+                view = views[step.window]
+                datas = [self._resolve(o.source, env) for o in step.group]
+                datas = [self._apply_ties(d, step.ties, views)
+                         for d in datas[:1]] + datas[1:]
+                sub = view.substrate.put_multi(
+                    datas, step.group[0].perm,
+                    offsets=[o.offset for o in step.group],
+                    stream=step.stream,
+                    order=self.windows[step.window].order)
+                views[step.window] = view._view(sub)
+                continue
+            o = step.op
+            if o.kind == "compute":
+                env.values[o.idx] = o.fn(env)
+                continue
+            views, env, errs = self._exec_comm(step, o, views, env, errs)
+
+        outputs = {}
+        for name, spec in self.outputs:
+            val = self._resolve(spec, env)
+            val = self._apply_ties(val, self.exit_ties, views)
+            outputs[name] = val
+        restored = {
+            wname: dataclasses.replace(views[wname],
+                                       config=windows[wname].config)
+            for wname in self.windows
+        }
+        return PlanResult(windows=restored, outputs=outputs, err_count=errs)
+
+    def _apply_ties(self, value, ties, views):
+        for wname, s in ties:
+            value = _tie(value, views[wname].substrate.token(s))
+        return value
+
+    def _exec_comm(self, step: _Step, o: _Op, views, env: PlanEnv, errs):
+        decl = self.windows[o.window]
+        view = views[o.window]
+        sub = view.substrate
+        order = decl.order
+        offset = self._resolve(o.offset, env)
+        if o.kind == "put":
+            data = self._apply_ties(self._resolve(o.source, env), step.ties,
+                                    views)
+            sub = sub.put(data, o.perm, offset=offset, stream=o.stream,
+                          order=order)
+        elif o.kind == "get":
+            dep = None
+            for wname, s in step.ties:
+                tok = views[wname].substrate.token(s)
+                dep = tok if dep is None else _tie(dep, tok)
+            sub, data = sub.get(o.perm, offset=offset, size=o.size,
+                                stream=o.stream, order=order, dep=dep)
+            env.values[o.idx] = data
+        elif o.kind == "send":
+            data = self._apply_ties(self._resolve(o.source, env), step.ties,
+                                    views)
+            sub, recvd = sub.channel_send(data, o.perm, stream=o.stream)
+            env.values[o.idx] = recvd
+        elif o.kind == "hop":
+            piece = self._apply_ties(self._resolve(o.source, env), step.ties,
+                                     views)
+            cur = self._resolve(o.cur, env)
+            sub, recvd = sub.channel_send(piece, o.perm, stream=o.stream)
+            if o.path == acc_engine.PATH_SOFTWARE:
+                sub = sub.target_ack(o.perm, stream=o.stream)
+            env.values[o.idx] = acc_engine.apply_op(cur, recvd, o.op)
+        elif o.kind in ("accumulate", "signal"):
+            if o.kind == "signal":
+                op_name = decl.same_op if decl.same_op is not None else "sum"
+                data = self._resolve(o.value, env)
+                if data is None:
+                    data = acc_engine.default_flag_value(
+                        op_name, view.buffer.dtype)
+            else:
+                op_name, data = o.op, self._resolve(o.source, env)
+            data = self._apply_ties(data, step.ties, views)
+            software = o.path == acc_engine.PATH_SOFTWARE
+            sub = sub.rmw(data, o.perm, acc_engine.path_combine(o.path, op_name),
+                          offset=offset, stream=o.stream, order=order,
+                          software=software)
+        elif o.kind == "fetch_op":
+            data = self._apply_ties(self._resolve(o.source, env), step.ties,
+                                    views)
+            combine = lambda cur, upd: acc_engine.apply_op(cur, upd, o.op)
+            sub, old = sub.fetch_rmw(data, o.perm, combine, offset=offset,
+                                     stream=o.stream, order=order)
+            env.values[o.idx] = old
+        elif o.kind == "put_handle":
+            from repro.core.rma.memhandle import win_from_memhandle
+
+            data = self._apply_ties(self._resolve(o.source, env), step.ties,
+                                    views)
+            handle = self._resolve(o.handle, env)
+            mhwin = win_from_memhandle(view, handle, slot=o.slot)
+            mhwin = mhwin.put(data, o.perm, offset=offset, stream=o.stream)
+            errs = errs + mhwin.err_count
+            views[o.window] = mhwin.parent
+            return views, env, errs
+        else:
+            raise AssertionError(o.kind)
+        views[o.window] = view._view(sub)
+        return views, env, errs
+
+
+# ---------------------------------------------------------------------------
+# Legacy-wrapper deprecation bookkeeping (satellite: warn exactly once)
+# ---------------------------------------------------------------------------
+
+_LEGACY_WARNED: set[str] = set()
+
+
+def warn_legacy_once(entry: str, replacement: str) -> None:
+    """Emit the wrapped-legacy-signature ``DeprecationWarning`` exactly once
+    per process per entry point.  The wrappers stay supported (and
+    numerically identical — they build-and-execute the same plan), the
+    warning only points migrating callers at the plan-native surface."""
+    if entry in _LEGACY_WARNED:
+        return
+    _LEGACY_WARNED.add(entry)
+    warnings.warn(
+        f"{entry} is a legacy imperative entry point kept as a thin wrapper "
+        f"over the declarative plan API; build the pattern once with "
+        f"{replacement} and replay it (see docs/rma_plan.md, migration "
+        "guide)", DeprecationWarning, stacklevel=3)
+
+
+__all__ = [
+    "RmaPlan",
+    "CompiledPlan",
+    "PlanEnv",
+    "PlanResult",
+    "PlanError",
+    "OpRef",
+    "warn_legacy_once",
+]

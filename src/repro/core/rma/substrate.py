@@ -308,12 +308,55 @@ class Substrate:
         self.queues.note_op(stream, perm)
         return self.replace(buffer=buf, tokens=self.bump(stream, sent))
 
-    def get(self, perm: Perm, *, offset: int = 0, size: int,
-            stream: int = 0, order: bool = False) -> tuple["Substrate", Array]:
-        """RDMA read (``MPI_Get``): request + response = 1 RTT (2 phases)."""
+    def put_multi(self, datas: Sequence[Array], perm: Perm, *,
+                  offsets: Sequence[int], stream: int = 0,
+                  order: bool = False) -> "Substrate":
+        """Gather-write: several same-peer puts coalesced into **one** phase.
+
+        The NIC analogue is a single RDMA write with a scatter-gather list:
+        one packet carries every segment, the target's DMA engine lands each
+        at its own (trace-time constant) displacement.  This is what the plan
+        compiler's put-fusion pass lowers to — ``k`` static-displacement puts
+        to one peer cost one ``ppermute`` instead of ``k``.  All offsets must
+        be trace-time constants (a traced displacement would need its own
+        address word and break the single-packet claim)."""
+        for off in offsets:
+            if not _is_static(off):
+                raise ValueError(
+                    "put_multi requires trace-time constant offsets; traced "
+                    "displacements cannot share one gather-write packet")
+        payload = jnp.concatenate(
+            [d.astype(self.buffer.dtype) for d in datas], axis=0)
+        payload = self.ordered_payload(payload, stream, order)
+        sent = lax.ppermute(payload, self.axis, perm)  # the single phase
+        is_tgt = _is_target(self.axis, perm)
+        buf = self.buffer
+        pos = 0
+        for d, off in zip(datas, offsets):
+            seg = lax.dynamic_slice_in_dim(sent, pos, d.shape[0], axis=0)
+            buf = _write(buf, seg, off, is_tgt)
+            pos += d.shape[0]
+        self.queues.note_op(stream, perm)
+        return self.replace(buffer=buf, tokens=self.bump(stream, sent))
+
+    def get(self, perm: Perm, *, offset=0, size: int,
+            stream: int = 0, order: bool = False,
+            dep=None) -> tuple["Substrate", Array]:
+        """RDMA read (``MPI_Get``): request + response = 1 RTT (2 phases).
+
+        The displacement is *origin*-addressed like every other transport
+        op: a traced ``offset`` ships as an address word with the request
+        (one extra HLO ``ppermute``, same physical packet) — reading the
+        origin-local value at the target would silently serve the wrong
+        element whenever the displacement is rank-dependent.  ``dep``:
+        optional value the request is tied to (a completion edge from
+        another window/stream — the read must not issue before it)."""
         req = self.ordered_payload(jnp.float32(1.0), stream, order)
+        if dep is not None:
+            req = _tie(req, dep)
         req_at_tgt = lax.ppermute(req, self.axis, perm)  # phase 1: request
-        chunk = lax.dynamic_slice_in_dim(self.buffer, offset, size, axis=0)
+        sent_off = _ship_offset(offset, self.axis, perm)
+        chunk = lax.dynamic_slice_in_dim(self.buffer, sent_off, size, axis=0)
         chunk = _tie(chunk, req_at_tgt)
         data = lax.ppermute(chunk, self.axis, _inv(perm))  # phase 2: response
         self.queues.note_op(stream, perm)

@@ -46,7 +46,8 @@ put / intrinsic accumulate  1  (one ``collective-permute``; a *traced*
                             displacement adds one more for the address)
 tiled (declared) accumulate 1  (payload phase; the target's VPU applies it
                             through ``repro.kernels.accumulate``)
-get / fetch_op / cas        2  (request + response = 1 RTT)
+get / fetch_op / cas        2  (request + response = 1 RTT; a traced
+                            displacement adds one address-word phase)
 flush of one stream         2  (ack round-trip = 1 RTT)
 process-scope flush         2 × (#streams with pending ops), serialized —
                             the UCX endpoint-list walk of paper Fig. 7
@@ -236,7 +237,19 @@ class Window:
         — holding an independent ``WindowConfig``.
 
         Immutable keys are silently retained (the paper allows implementations
-        to reject changes; users check via ``get_info``)."""
+        to reject changes; users check via ``get_info``) — with one
+        exception: asking for **more** issue streams than the substrate's
+        token array was sized for at ``allocate`` time is not a rejectable
+        preference but a latent out-of-bounds (a view indexing past the
+        allocation), so it raises instead of silently lying."""
+        if ("max_streams" in info
+                and info["max_streams"] > self.substrate.n_streams):
+            raise ValueError(
+                f"dup_with_info(max_streams={info['max_streams']}) exceeds "
+                f"the {self.substrate.n_streams} issue stream(s) this "
+                "window's substrate was allocated with; max_streams sizes "
+                "the token array at allocate time and cannot grow on an "
+                "aliased window — allocate the parent with enough streams")
         accepted = {k: v for k, v in info.items() if k not in _DUP_IMMUTABLE_KEYS}
         cfg = self.config.replace(**accepted)
         return dataclasses.replace(self, config=cfg)
@@ -279,6 +292,16 @@ class Window:
             raise ValueError(
                 f"stream {stream} out of range for max_streams={self.config.max_streams}"
             )
+        if stream >= self.substrate.n_streams:
+            # a config rebuilt around the substrate (WindowConfig.replace +
+            # dataclasses.replace) can claim more streams than the token
+            # array holds; indexing past it would silently clamp, so the
+            # violation is caught here, on every op path
+            raise ValueError(
+                f"stream {stream} exceeds the {self.substrate.n_streams} "
+                "issue stream(s) this window's substrate was allocated with "
+                "(a view config cannot widen max_streams past the "
+                "allocate-time token array)")
 
     # -- one-sided operations --------------------------------------------------
     def put(
@@ -303,14 +326,17 @@ class Window:
         self,
         perm: Perm,
         *,
-        offset: int = 0,
+        offset=0,
         size: int,
         stream: int = 0,
     ) -> tuple["Window", Array]:
         """``MPI_Get``: read ``size`` elements at ``offset`` from the target.
 
         ``perm`` maps origin→target; the data travels target→origin.  One
-        request/response round-trip (2 phases), as on real RDMA reads.
+        request/response round-trip (2 phases), as on real RDMA reads.  A
+        traced displacement ships as an address word with the request (one
+        extra HLO phase, same packet), so rank-dependent offsets read the
+        location the *origin* named — the same protocol as ``fetch_op``.
         """
         self._check_stream(stream)
         sub, data = self.substrate.get(

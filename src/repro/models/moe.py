@@ -16,7 +16,7 @@ Dispatch strategy (pure JAX, GSPMD/EP-friendly):
 replaces step 3's partitioner-inserted exchange with the explicit one-sided
 path: tokens are sharded over the expert axis inside ``shard_map``, each
 device packs its assignments per *destination device* (first-level sort),
-dispatch rides :func:`repro.core.rma.alltoall.rma_all_to_all` (per-peer
+dispatch rides :func:`repro.core.rma.alltoall.plan_all_to_all` (per-peer
 chunked puts + fetch_op count headers + P2-chained doorbells), receivers run
 the second-level sort into their local ``(E/n, C, d)`` buffer, and the
 combine returns through the same collective with ``op="sum"`` — every
@@ -183,14 +183,15 @@ def _moe_ep_shard(params: dict, xt: Array, cfg, *, axis: str | None, n: int,
                   t_valid: int | None = None):
     """Per-device MoE over this shard's tokens ``xt`` (Tl, d), expert-
     parallel over ``axis``: route → first-level (per-peer) sort →
-    ``rma_all_to_all`` dispatch → second-level (per-local-expert) sort →
+    ``plan_all_to_all`` dispatch (a compiled-plan replay) → second-level
+    (per-local-expert) sort →
     expert matmuls → ``op="sum"`` all-to-all combine → gate-weighted merge.
     Runs inside ``shard_map`` when ``n > 1``; with ``n == 1`` the exchanges
     are identity and the two sort levels compose to the GSPMD path's single
     sort.  ``t_valid``: global count of real tokens — rows past it are
     divisibility padding and are excluded from routing statistics, dispatch
     and capacity."""
-    from repro.core.rma.alltoall import rma_all_to_all
+    from repro.core.rma.alltoall import plan_all_to_all
 
     mo = cfg.moe
     Tl, d = xt.shape
@@ -248,8 +249,8 @@ def _moe_ep_shard(params: dict, xt: Array, cfg, *, axis: str | None, n: int,
 
     # --- dispatch: declared one-sided all-to-all ---------------------------
     if n > 1:
-        res = rma_all_to_all(payload, axis, n, counts=send_counts,
-                             order=True, declare=True)
+        res = plan_all_to_all(payload, axis, n, counts=send_counts,
+                              order=True, declare=True)
         recv, recv_counts = res.data, res.counts
     else:
         recv, recv_counts = payload, send_counts
@@ -287,8 +288,8 @@ def _moe_ep_shard(params: dict, xt: Array, cfg, *, axis: str | None, n: int,
     y_back = jnp.zeros((n * Cp, d), wire_dt
                        ).at[order2].set(y_sorted.astype(wire_dt))
     if n > 1:
-        back = rma_all_to_all(y_back, axis, n, counts=recv_counts,
-                              op="sum", order=True, declare=True)
+        back = plan_all_to_all(y_back, axis, n, counts=recv_counts,
+                               op="sum", order=True, declare=True)
         y_ret = back.data
     else:
         y_ret = y_back

@@ -106,9 +106,10 @@ def push_sequence(pool: PagedKVWindow, ctrl: Window, seq: int,
     """Prefill side: push one sequence's filled pages into the decode pool
     and ring its doorbell.
 
-    The pages ride a single batched :meth:`PagedKVWindow.transfer_pages`
-    (one ordered dup'd view, one thread-scoped flush epoch for the whole
-    batch); the doorbell is a ``put_signal`` on the control window — the
+    The pages ride a single batched :meth:`PagedKVWindow.push_pages` (a
+    compiled-plan replay: one ordered view, one thread-scoped flush epoch
+    for the whole batch); the doorbell is a ``put_signal`` on the control
+    window — the
     page count lands in the sequence's meta word and the flag accumulate
     chains behind it on the same ordered channel.  The control window is a
     *different* substrate than the pool, so the doorbell is sequenced
@@ -117,7 +118,7 @@ def push_sequence(pool: PagedKVWindow, ctrl: Window, seq: int,
     that observes ``bell ≠ 0`` may read the pages with no flush of its own.
     Everything is issued on ``lane``'s stream, so concurrent sequences on
     different lanes neither share a flush epoch nor serialize."""
-    pool = pool.transfer_pages(pages, kvs, perm, stream=lane)
+    pool = pool.push_pages(pages, kvs, perm, stream=lane)
     ctrl = put_signal(ctrl, jnp.asarray([len(pages)], jnp.int32), perm,
                       data_offset=ctrl_meta_offset(seq),
                       flag_offset=ctrl_flag_offset(seq), stream=lane,

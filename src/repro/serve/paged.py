@@ -38,6 +38,37 @@ from repro.core.rma import (
 
 Array = jax.Array
 
+_TRANSFER_PLANS: dict[tuple, object] = {}
+
+
+def transfer_plan(pool_pages: int, pages: tuple, page_elems: int, dtype,
+                  perm: tuple, stream: int = 0, *,
+                  naive_flush: bool = False):
+    """Build (or fetch from the build-once cache) the compiled page-push
+    schedule: one :meth:`RmaPlan.put_handle` per page on the batch's ordered
+    stream, one exit flush epoch — 2 phases per page (payload + handle
+    header) + 2 for the epoch, never a per-page ack."""
+    from repro.core.rma.plan import RmaPlan
+
+    dt = jnp.dtype(dtype)
+    key = (pool_pages, tuple(pages), page_elems, dt.name, perm, stream,
+           naive_flush)
+    if key in _TRANSFER_PLANS:
+        return _TRANSFER_PLANS[key]
+    plan = RmaPlan(f"transfer_pages[{len(pages)}]")
+    plan.window("pool", scope="thread", order=True, max_streams=stream + 1,
+                dtype=dt, exit_epoch=True)
+    plan.bind("handles", (pool_pages, 4), jnp.int32)
+    for i, page in enumerate(pages):
+        plan.bind(f"kv{i}", (page_elems,), dt)
+        plan.put_handle("pool", f"kv{i}",
+                        lambda env, p=page: env["handles"][p], perm,
+                        slot=page, stream=stream, shape=(page_elems,),
+                        dtype=dt, label=f"page{page}")
+    compiled = plan.compile(naive_flush=naive_flush)
+    _TRANSFER_PLANS[key] = compiled
+    return compiled
+
 
 @dataclasses.dataclass(frozen=True)
 class PageSpec:
@@ -182,23 +213,42 @@ class PagedKVWindow:
         return self._replace(window=parent,
                              err_count=self.err_count + mhwin.err_count)
 
+    def push_pages(self, pages, kvs, perm, stream: int = 0,
+                   ) -> "PagedKVWindow":
+        """Batched disaggregated push as a **declarative-plan replay**: the
+        batch's schedule — every page issued back-to-back through its memory
+        handle on one ordered stream, one thread-scoped flush epoch for the
+        whole batch, no per-page acks — is planned once per (pages, shape)
+        signature and cached; each call replays it with this step's handles
+        and payloads.  ``pages`` must be static (Python ints): the per-page
+        registration slots are part of the plan, which is what arms the P5
+        trace-time use-after-release check on every replay."""
+        compiled = transfer_plan(
+            self.spec.n_pages, tuple(pages), self.spec.page_elems,
+            self.window.buffer.dtype, tuple(tuple(p) for p in perm), stream)
+        bindings = {"handles": self.handles}
+        for i, kv in enumerate(kvs):
+            bindings[f"kv{i}"] = kv.reshape(-1).astype(self.window.buffer.dtype)
+        res = compiled.execute({"pool": self.window}, bindings)
+        return self._replace(window=res.windows["pool"],
+                             err_count=self.err_count + res.err_count)
+
     def transfer_pages(self, pages, kvs, perm, stream: int = 0,
                        ) -> "PagedKVWindow":
         """Batched disaggregated push: every page is issued back-to-back on
         one dup'd ordered view and a **single** thread-scoped flush epoch
         completes the whole batch — the pipelined put+signal shape of the
         cross-pod exchange, applied to KV pages.  ``pages`` must be static
-        (Python ints): the per-page handles are resolved at trace time."""
-        xfer = self.window.dup_with_info(order=True, scope="thread")
-        errs = self.err_count
-        for page, kv in zip(pages, kvs):
-            mhwin = win_from_memhandle(xfer, self.handles[page], slot=page)
-            mhwin = mhwin.put(kv.reshape(-1), perm, stream=stream)
-            xfer = mhwin.parent
-            errs = errs + mhwin.err_count
-        xfer = xfer.flush(stream)
-        parent = dataclasses.replace(xfer, config=self.window.config)
-        return self._replace(window=parent, err_count=errs)
+        (Python ints): the per-page handles are resolved at trace time.
+
+        .. deprecated:: kept as a thin wrapper over the plan-native
+           :meth:`push_pages` (same numerics, same phase structure); emits a
+           ``DeprecationWarning`` once per process."""
+        from repro.core.rma.plan import warn_legacy_once
+
+        warn_legacy_once("PagedKVWindow.transfer_pages",
+                         "PagedKVWindow.push_pages (plan replay)")
+        return self.push_pages(pages, kvs, perm, stream=stream)
 
     def get_page_remote(self, page: int, perm, stream: int = 0,
                         ) -> tuple["PagedKVWindow", Array]:
@@ -221,4 +271,4 @@ class PagedKVWindow:
         return pool, flat.reshape(2, s.page_tokens, s.kv_heads, s.head_dim)
 
 
-__all__ = ["PageSpec", "PagedKVWindow"]
+__all__ = ["PageSpec", "PagedKVWindow", "transfer_plan"]

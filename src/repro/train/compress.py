@@ -99,11 +99,11 @@ def compressed_all_reduce(g: Array, err: Array, cfg: CompressionConfig,
     (decompressed) values enter the sum, so every pod applies the identical
     update — the residuals stay local.
     Returns (reduced, new_err)."""
-    from repro.core.rma.collectives import rma_all_reduce
+    from repro.core.rma.collectives import plan_all_reduce
 
     payload, new_err, restored = compress_with_feedback(g, err, cfg)
-    reduced = rma_all_reduce(restored.reshape(-1), axis, axis_size,
-                             order=True).reshape(g.shape)
+    reduced = plan_all_reduce(restored.reshape(-1), axis, axis_size,
+                              order=True).reshape(g.shape)
     return reduced / axis_size, new_err
 
 

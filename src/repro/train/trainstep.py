@@ -101,7 +101,7 @@ def make_train_step(
             return grads  # partitioner-inserted collectives
         if compressor is not None:
             return grads  # handled at caller level with state
-        from repro.core.rma.collectives import rma_all_reduce
+        from repro.core.rma.collectives import plan_all_reduce
         from repro.core.rma.window import Window, WindowConfig
 
         # One window, one ring, all leaves: the whole gradient pytree is
@@ -111,7 +111,10 @@ def make_train_step(
         # accumulate stream, so declare it: the ring runs on a
         # sum-specialized dup of the gradient window (paper §2.3 hints × P4
         # dup), lowering every reduce hop through the accumulate engine's
-        # specialized path.
+        # specialized path.  The exchange is a declarative-plan replay
+        # (``collectives.all_reduce_plan``): the schedule is planned once
+        # per gradient-vector shape and every subsequent step is pure
+        # issue — build-once, execute-many.
         flat, tdef = jax.tree.flatten(grads)
         sizes = [g.size for g in flat]
         vec = jnp.concatenate([g.reshape(-1).astype(jnp.float32) for g in flat])
@@ -119,8 +122,8 @@ def make_train_step(
             vec, data_axis, data_axis_size,
             WindowConfig(scope="thread", order=True, accumulate_ops=("sum",)))
         sumwin = win.dup_with_info(same_op="sum")
-        vec = rma_all_reduce(vec, data_axis, data_axis_size, order=True,
-                             win=sumwin) / data_axis_size
+        vec = plan_all_reduce(vec, data_axis, data_axis_size, order=True,
+                              win=sumwin) / data_axis_size
         out, off = [], 0
         for g, n in zip(flat, sizes):
             out.append(vec[off:off + n].reshape(g.shape))  # f32, as before

@@ -232,4 +232,56 @@ assert acc_unde - a2a[2, False] == (N - 1) * 2, \
 acc_decl = count_a2a(mk_a2a(2, True, True, op="sum"))
 assert acc_decl == a2a[2, True], \
     "declared accumulate landings route specialized: same phases as puts"
+
+# --- planner acceptance: every ported consumer's compiled schedule is
+# asserted phase-for-phase no worse than the hand-tuned counts measured
+# above, its *prediction* brackets the measured HLO (XLA may CSE an ack leg,
+# never add one), and the naive per-op-flush compile pays strictly more.
+from repro.core.rma.collectives import all_reduce_plan
+from repro.serve.paged import transfer_plan
+from repro.core.rma.alltoall import all_to_all_plan
+
+# ring all-reduce: planned == measured == the hand-tuned 2(n-1)
+for order, hand in ((True, 2 * (N - 1)), (False, counts[False])):
+    planned = all_reduce_plan("x", N, (4,), jnp.float32, order=order).phases
+    naive = all_reduce_plan("x", N, (4,), jnp.float32, order=order,
+                            naive_flush=True).phases
+    print(f"ring plan order={order}: planned={planned} measured="
+          f"{counts[order]} naive={naive}")
+    assert planned == counts[order], "plan prediction must match measured HLO"
+    assert planned <= hand, "planned schedule must not exceed hand-tuned"
+    assert naive > planned, "naive per-op flushing must pay strictly more"
+
+# ...including the undeclared-op and lent-window (grad-sync) shapes
+assert all_reduce_plan("x", N, (4,), jnp.float32,
+                       declare_op=False).phases == ring[False]
+assert all_reduce_plan("x", N, (4,), jnp.float32, lent=True).phases \
+    == dup_phases
+
+# batched page push: planned == measured == 2k+2; naive pays per-page acks
+for k, hand in push_counts.items():
+    tp = transfer_plan(4, tuple(range(k)), 8, jnp.float32,
+                       tuple((i, (i + 1) % N) for i in range(N)))
+    tn = transfer_plan(4, tuple(range(k)), 8, jnp.float32,
+                       tuple((i, (i + 1) % N) for i in range(N)),
+                       naive_flush=True)
+    assert tp.phases == hand == 2 * k + 2, (k, tp.phases, hand)
+    if k > 1:
+        assert tn.phases > tp.phases, "naive page push must pay per-page acks"
+
+# all-to-all: prediction is an upper bound on measured (CSE may merge one
+# ack leg) and within the hand-tuned budget; naive strictly more
+for chunks in (1, 2):
+    for declared in (True, False):
+        pl = all_to_all_plan("x", N, (N * 2,), jnp.float32, chunks=chunks,
+                             order=declared, declare=declared)
+        nv = all_to_all_plan("x", N, (N * 2,), jnp.float32, chunks=chunks,
+                             order=declared, declare=declared,
+                             naive_flush=True)
+        meas = a2a[chunks, declared]
+        print(f"a2a plan chunks={chunks} declared={declared}: "
+              f"planned={pl.phases} measured={meas} naive={nv.phases}")
+        assert meas <= pl.phases <= meas + 1, (pl.phases, meas)
+        assert nv.phases > pl.phases
+print("planner acceptance (predicted vs measured vs naive) OK")
 print("ALL HLO COUNT CHECKS PASSED")

@@ -62,13 +62,37 @@ def test_window_config_validation():
 
 def test_dup_retains_immutable_keys():
     win = Window.allocate(jnp.zeros((4,)), "x", 1, WindowConfig(max_streams=2))
-    dup = win.dup_with_info(order=True, max_streams=8)
+    dup = win.dup_with_info(order=True, max_streams=1)
     # order accepted; max_streams rejected (retained), per paper §3
     assert dup.config.order is True
     assert dup.config.max_streams == 2
     # dup shares the window memory (aliased leaf) and the group
     assert dup.buffer is win.buffer
     assert dup.group is win.group
+
+
+def test_dup_more_streams_than_allocated_raises():
+    """Asking a dup for more issue streams than the substrate's token array
+    was sized for is not a rejectable info-key change but a latent
+    out-of-bounds — it must raise, not silently retain."""
+    win = Window.allocate(jnp.zeros((4,)), "x", 1, WindowConfig(max_streams=2))
+    with pytest.raises(ValueError, match="allocated with"):
+        win.dup_with_info(order=True, max_streams=8)
+
+
+def test_config_replace_cannot_index_past_token_array():
+    """The ``WindowConfig.replace`` bypass: a view rebuilt with an inflated
+    ``max_streams`` must not let an op index past the allocate-time token
+    array (JAX would silently clamp the index) — every op path raises."""
+    import dataclasses
+
+    win = Window.allocate(jnp.zeros((4,)), "x", 1, WindowConfig(max_streams=2))
+    forged = dataclasses.replace(
+        win, config=win.config.replace(max_streams=8))
+    with pytest.raises(ValueError, match="allocated with"):
+        forged.put(jnp.ones((2,)), [(0, 0)], stream=5)
+    with pytest.raises(ValueError, match="allocated with"):
+        forged.accumulate(jnp.ones((1,)), [(0, 0)], stream=7)
 
 
 def test_intrinsic_envelope():

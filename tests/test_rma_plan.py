@@ -1,0 +1,401 @@
+"""Declarative-plan layer tests.
+
+Three pillars, per the plan-API acceptance criteria:
+
+* **replay fidelity** — a hypothesis sweep over op mixes (put / get /
+  accumulate / fetch_op), scopes, stream counts and dtypes asserting that
+  ``CompiledPlan.execute`` is *bit-identical* to the eager op-by-op
+  sequence on the same window (flush placement can reshape the lowered HLO,
+  never the landed values);
+* **build-time rejection** — declaration violations (an undeclared op, an
+  over-envelope atomic under the P3 assertion, an ordering cycle, a stream
+  past the declaration) raise :class:`PlanError` at ``compile()``, before
+  any array exists;
+* **legacy wrappers** — the imperative entry points
+  (``rma_all_reduce`` / ``rma_all_to_all`` / ``transfer_pages``) emit a
+  ``DeprecationWarning`` exactly once per process and stay numerically
+  identical to the plan-native path they delegate to.
+
+Multi-device phase structure lives in ``tests/mdev/rma_plan.py`` (also the
+CI `plan` smoke) and the planner section of ``tests/mdev/rma_hlo_counts.py``.
+"""
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.rma import (
+    PlanError,
+    RmaPlan,
+    Window,
+    WindowConfig,
+    plan_all_reduce,
+    rma_all_reduce,
+)
+from repro.core.rma import plan as plan_mod
+
+HERE = os.path.dirname(__file__)
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_crossover(monkeypatch):
+    """Routing must not depend on this machine's calibration artifact."""
+    monkeypatch.setenv("RMA_ACC_BENCH_JSON", "/nonexistent")
+    monkeypatch.delenv("RMA_ACC_CROSSOVER", raising=False)
+
+
+def _run_mdev(script: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "mdev", script)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, f"{script} failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_plan_multidevice_roundtrip():
+    """Mixed plan on 8 devices: numerics, predicted==measured phases,
+    auto-stream assignment, fusion, naive baseline strictly worse."""
+    out = _run_mdev("rma_plan.py")
+    assert "ALL PLAN CHECKS PASSED" in out
+
+
+# ---------------------------------------------------------------------------
+# replay fidelity: plan execute ≡ eager op-by-op, bit for bit
+# ---------------------------------------------------------------------------
+
+BUF = 16
+
+
+def _run1(f, n_out: int = BUF, dtype=jnp.float32):
+    mesh = compat.make_mesh((1,), ("x",))
+    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                                 check_vma=False))
+    return np.asarray(g(jnp.zeros((n_out,), dtype)))
+
+
+def _apply_eager(win, o):
+    kind = o["kind"]
+    if kind == "put":
+        return win.put(o["data"], [(0, 0)], offset=o["offset"],
+                       stream=o["stream"]), None
+    if kind == "accumulate":
+        return win.accumulate(o["data"], [(0, 0)], op=o["op"],
+                              offset=o["offset"], stream=o["stream"]), None
+    if kind == "fetch_op":
+        win, old = win.fetch_op(o["data"], [(0, 0)], op=o["op"],
+                                offset=o["offset"], stream=o["stream"])
+        return win, old
+    if kind == "get":
+        win, got = win.get([(0, 0)], offset=o["offset"], size=o["size"],
+                           stream=o["stream"])
+        return win, got
+    raise AssertionError(kind)
+
+
+def _record_plan(plan, o, prev, i):
+    after = (prev,) if prev is not None else ()
+    if o["kind"] == "put":
+        return plan.put("w", f"d{i}", [(0, 0)], offset=o["offset"],
+                        stream=o["stream"], after=after)
+    if o["kind"] == "accumulate":
+        return plan.accumulate("w", f"d{i}", [(0, 0)], op=o["op"],
+                               offset=o["offset"], stream=o["stream"],
+                               after=after)
+    if o["kind"] == "fetch_op":
+        return plan.fetch_op("w", f"d{i}", [(0, 0)], op=o["op"],
+                             offset=o["offset"], stream=o["stream"],
+                             after=after)
+    return plan.get("w", [(0, 0)], offset=o["offset"], size=o["size"],
+                    stream=o["stream"], after=after)
+
+
+def _plan_vs_eager(ops, *, scope, order, streams, dtype, same_op):
+    """Build both executions of one op mix; return (plan_out, eager_out)."""
+    acc_ops = tuple(sorted({o["op"] for o in ops if "op" in o} | {"sum"}))
+    cfg = dict(scope=scope, order=order, max_streams=streams,
+               accumulate_ops=acc_ops, same_op=same_op)
+
+    plan = RmaPlan("sweep")
+    plan.window("w", dtype=dtype, exit_epoch=True, **cfg)
+    refs, prev = [], None
+    for i, o in enumerate(ops):
+        if "data" in o:
+            plan.bind(f"d{i}", tuple(o["data"].shape), dtype)
+        prev = _record_plan(plan, o, prev, i)
+        if o["kind"] in ("get", "fetch_op"):
+            plan.output(f"v{i}", prev)
+            refs.append(i)
+    compiled = plan.compile()
+
+    def planned(buf):
+        win = Window.allocate(buf, "x", 1, WindowConfig(**cfg))
+        res = compiled.execute(
+            {"w": win},
+            {f"d{i}": o["data"] for i, o in enumerate(ops) if "data" in o})
+        extra = [res.outputs[f"v{i}"].reshape(-1).astype(dtype) for i in refs]
+        return jnp.concatenate([res.windows["w"].buffer] + extra)
+
+    def eager(buf):
+        win = Window.allocate(buf, "x", 1, WindowConfig(**cfg))
+        vals = []
+        for o in ops:
+            win, v = _apply_eager(win, o)
+            if v is not None:
+                vals.append(v.reshape(-1).astype(dtype))
+        for s in ({o["stream"] for o in ops} if scope == "thread"
+                  else {None}):
+            win = win.flush(s)
+        return jnp.concatenate([win.buffer] + vals)
+
+    n_out = BUF + sum(int(np.prod(ops[i].get("size", 1))) for i in refs)
+    return (_run1(planned, dtype=dtype)[:n_out],
+            _run1(eager, dtype=dtype)[:n_out])
+
+
+def test_plan_replay_fixed_mix_bit_identical():
+    ops = [
+        {"kind": "put", "data": jnp.arange(4, dtype=jnp.float32),
+         "offset": 0, "stream": 0},
+        {"kind": "accumulate", "data": jnp.full((2,), 3.0), "op": "sum",
+         "offset": 4, "stream": 1},
+        {"kind": "fetch_op", "data": jnp.ones((1,)), "op": "sum",
+         "offset": 0, "stream": 0},
+        {"kind": "get", "offset": 0, "size": 4, "stream": 1},
+        {"kind": "put", "data": jnp.full((3,), 9.0), "offset": 8,
+         "stream": 0},
+    ]
+    got, ref = _plan_vs_eager(ops, scope="thread", order=True, streams=2,
+                              dtype=jnp.float32, same_op=None)
+    assert (got == ref).all()
+
+
+def test_plan_get_carries_cross_window_completion_tie():
+    """A completion edge landing on a `get` must reach the lowered program:
+    the scheduled step records the upstream (window, stream) tie and the
+    request is tied to that token at execute time (regression: the get
+    branch used to drop its ties)."""
+    plan = RmaPlan()
+    plan.window("a", order=True, dtype=jnp.float32, exit_epoch=True)
+    plan.window("b", order=True, dtype=jnp.float32, exit_epoch=True)
+    plan.bind("d", (2,), jnp.float32)
+    p = plan.put("a", "d", [(0, 0)], offset=0)
+    g = plan.get("b", [(0, 0)], offset=0, size=2, after=(p,))
+    plan.output("got", g)
+    compiled = plan.compile()
+    get_steps = [s for s in compiled.steps
+                 if s.op is not None and s.op.kind == "get"]
+    assert get_steps and get_steps[0].ties == (("a", 0),)
+
+    def scenario(buf):
+        a = Window.allocate(buf, "x", 1, WindowConfig(order=True))
+        b = Window.allocate(jnp.full((4,), 5.0), "x", 1,
+                            WindowConfig(order=True))
+        res = compiled.execute({"a": a, "b": b}, {"d": jnp.ones((2,))})
+        return jnp.concatenate(
+            [res.outputs["got"], jnp.zeros((14,), jnp.float32)])
+
+    out = _run1(scenario)
+    assert np.allclose(out[:2], 5.0)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    _dtypes = st.sampled_from([jnp.float32, jnp.int32, jnp.bfloat16])
+    _acc = st.sampled_from(["sum", "max", "min", "replace"])
+
+    @st.composite
+    def _op_mixes(draw):
+        dtype = draw(_dtypes)
+        streams = draw(st.integers(1, 3))
+        scope = draw(st.sampled_from(["thread", "process"]))
+        order = draw(st.booleans())
+        same_op = draw(st.sampled_from([None, "sum"]))
+        n_ops = draw(st.integers(1, 6))
+        ops = []
+        for _ in range(n_ops):
+            kind = draw(st.sampled_from(
+                ["put", "accumulate", "fetch_op", "get"]))
+            stream = draw(st.integers(0, streams - 1))
+            if kind == "get":
+                size = draw(st.integers(1, 4))
+                off = draw(st.integers(0, BUF - size))
+                ops.append({"kind": "get", "offset": off, "size": size,
+                            "stream": stream})
+                continue
+            size = 1 if kind == "fetch_op" else draw(st.integers(1, 4))
+            off = draw(st.integers(0, BUF - size))
+            op = "sum" if same_op == "sum" else draw(_acc)
+            vals = draw(st.lists(st.integers(-4, 4), min_size=size,
+                                 max_size=size))
+            o = {"kind": kind, "data": jnp.asarray(vals, dtype),
+                 "offset": off, "stream": stream}
+            if kind in ("accumulate", "fetch_op"):
+                o["op"] = op
+            ops.append(o)
+        return ops, scope, order, streams, dtype, same_op
+
+    @given(_op_mixes())
+    @settings(max_examples=25, deadline=None)
+    def test_plan_replay_property_bit_identical(mix):
+        ops, scope, order, streams, dtype, same_op = mix
+        got, ref = _plan_vs_eager(ops, scope=scope, order=order,
+                                  streams=streams, dtype=dtype,
+                                  same_op=same_op)
+        assert (got == ref).all(), (ops, scope, order, streams, dtype)
+
+
+# ---------------------------------------------------------------------------
+# build-time rejection of declaration violations
+# ---------------------------------------------------------------------------
+
+
+def test_compile_rejects_undeclared_op():
+    plan = RmaPlan()
+    plan.window("w", accumulate_ops=("sum",), dtype=jnp.float32)
+    plan.bind("d", (2,), jnp.float32)
+    plan.accumulate("w", "d", [(0, 0)], op="min")
+    with pytest.raises(PlanError, match="undeclared operation"):
+        plan.compile()
+
+
+def test_compile_rejects_same_op_violation():
+    plan = RmaPlan()
+    plan.window("w", same_op="sum", accumulate_ops=("sum", "max"),
+                dtype=jnp.float32)
+    plan.bind("d", (2,), jnp.float32)
+    plan.accumulate("w", "d", [(0, 0)], op="max")
+    with pytest.raises(PlanError, match="declaration violation"):
+        plan.compile()
+
+
+def test_compile_rejects_over_envelope_atomic():
+    plan = RmaPlan()
+    plan.window("w", assert_accumulate_intrinsic=True, dtype=jnp.float32)
+    plan.bind("d", (4096,), jnp.float32)
+    plan.accumulate("w", "d", [(0, 0)], op="sum")
+    with pytest.raises(PlanError, match="outside the hardware envelope"):
+        plan.compile()
+
+
+def test_compile_rejects_ordering_cycle():
+    plan = RmaPlan()
+    plan.window("w", dtype=jnp.float32)
+    plan.bind("d", (2,), jnp.float32)
+    a = plan.put("w", "d", [(0, 0)], offset=0)
+    b = plan.put("w", "d", [(0, 0)], offset=2, after=(a,))
+    plan.order(b, a)  # b before a AND a before b
+    with pytest.raises(PlanError, match="ordering cycle"):
+        plan.compile()
+
+
+def test_compile_rejects_stream_past_declaration():
+    plan = RmaPlan()
+    plan.window("w", max_streams=2, dtype=jnp.float32)
+    plan.bind("d", (2,), jnp.float32)
+    plan.put("w", "d", [(0, 0)], stream=5)
+    with pytest.raises(PlanError, match="max_streams"):
+        plan.compile()
+
+
+def test_compile_rejects_unknown_window_and_binding():
+    plan = RmaPlan()
+    with pytest.raises(PlanError, match="undeclared window"):
+        plan.put("ghost", "d", [(0, 0)])
+    plan.window("w", dtype=jnp.float32)
+    plan.accumulate("w", "ghost", [(0, 0)], op="sum")
+    with pytest.raises(PlanError, match="undeclared binding"):
+        plan.compile()
+
+
+def test_execute_rejects_binding_and_stream_mismatch():
+    plan = RmaPlan()
+    plan.window("w", max_streams=2, dtype=jnp.float32)
+    plan.bind("d", (2,), jnp.float32)
+    plan.put("w", "d", [(0, 0)], stream=1)
+    compiled = plan.compile()
+    win = Window.allocate(jnp.zeros((4,)), "x", 1, WindowConfig())
+    with pytest.raises(PlanError, match="allocate with"):
+        compiled.execute({"w": win}, {"d": jnp.zeros((2,))})
+    win2 = Window.allocate(jnp.zeros((4,)), "x", 1,
+                           WindowConfig(max_streams=2))
+    with pytest.raises(PlanError, match="expects shape"):
+        compiled.execute({"w": win2}, {"d": jnp.zeros((3,))})
+
+
+# ---------------------------------------------------------------------------
+# legacy wrappers: warn exactly once, numerics identical
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_all_reduce_warns_once_and_matches():
+    plan_mod._LEGACY_WARNED.discard("repro.core.rma.rma_all_reduce")
+    x = jnp.arange(8, dtype=jnp.float32)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        a = rma_all_reduce(x, "x", 1)
+        b = rma_all_reduce(x, "x", 1)
+    dep = [m for m in w if issubclass(m.category, DeprecationWarning)
+           and "legacy imperative entry point" in str(m.message)]
+    assert len(dep) == 1, "wrapper must warn exactly once per process"
+    ref = plan_all_reduce(x, "x", 1)
+    assert (np.asarray(a) == np.asarray(ref)).all()
+    assert (np.asarray(b) == np.asarray(ref)).all()
+
+
+def test_legacy_all_to_all_warns_once_and_matches():
+    from repro.core.rma import rma_all_to_all
+    from repro.core.rma.alltoall import plan_all_to_all
+
+    plan_mod._LEGACY_WARNED.discard("repro.core.rma.rma_all_to_all")
+    x = jnp.arange(6, dtype=jnp.float32).reshape(6)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        a = rma_all_to_all(x, "x", 1)
+        rma_all_to_all(x, "x", 1)
+    dep = [m for m in w if issubclass(m.category, DeprecationWarning)
+           and "legacy imperative entry point" in str(m.message)]
+    assert len(dep) == 1
+    ref = plan_all_to_all(x, "x", 1)
+    assert (np.asarray(a.data) == np.asarray(ref.data)).all()
+    assert (np.asarray(a.counts) == np.asarray(ref.counts)).all()
+
+
+def test_legacy_transfer_pages_warns_once_and_matches():
+    from repro.serve.paged import PagedKVWindow, PageSpec
+
+    plan_mod._LEGACY_WARNED.discard("PagedKVWindow.transfer_pages")
+    spec = PageSpec(page_tokens=2, kv_heads=1, head_dim=2, n_pages=2)
+
+    def scenario(buf):
+        pool = PagedKVWindow.create(spec, "x", 1, dtype=jnp.float32)
+        pool = pool.alloc_page(0).alloc_page(1)
+        kvs = [jnp.full((spec.page_elems,), 1.0 + p) for p in range(2)]
+        legacy = pool.transfer_pages([0, 1], kvs, [(0, 0)])
+        native = pool.push_pages([0, 1], kvs, [(0, 0)])
+        return jnp.concatenate([legacy.window.buffer, native.window.buffer])
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = _run1(scenario, n_out=2 * spec.page_elems)
+    dep = [m for m in w if issubclass(m.category, DeprecationWarning)
+           and "legacy imperative entry point" in str(m.message)]
+    assert len(dep) == 1
+    half = 2 * spec.page_elems
+    assert (out[:half] == out[half:]).all(), "wrapper != plan-native push"
