@@ -20,6 +20,8 @@ Sections:
                      pages/s + per-token handle-vs-query read latency
   plan_overhead    — the declarative-plan layer: build-once cost vs
                      execute-many replay, planned/hand-tuned/naive phases
+  hier_collectives — topology-aware hierarchical plans vs flat: per-tier
+                     phase splits + wall-clock across g×l factorizations
   roofline         — §Roofline summary from the dry-run artifacts (if present)
 
 ``--summary`` skips running and merges every existing BENCH_*.json under
@@ -43,6 +45,7 @@ MODULES = [
     "benchmarks.moe_alltoall",
     "benchmarks.serve_disagg",
     "benchmarks.plan_overhead",
+    "benchmarks.hier_collectives",
 ]
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")

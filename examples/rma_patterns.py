@@ -147,6 +147,34 @@ def planned_pattern(buf):
     return res.windows["w"].buffer
 
 
+# --- the two-level tour: topology as a plan input (docs/rma_plan.md) --------
+# Declare the 8-rank axis as 2 hosts x 4 local devices and the SAME recorded
+# ring all-reduce compiles hierarchically: intra-node reduce-scatter (shared
+# memory, no acks) -> inter-node ring over one leader lane per local index ->
+# intra-node all-gather.  Inter-node phases: 2(n-1)=14 flat -> 2(g-1)=2.
+from repro.core.rma import Topology, classify_cp
+from repro.core.rma.collectives import all_reduce_plan, plan_all_reduce
+
+TOPO = Topology(2, 4)
+ring_flat = all_reduce_plan("x", N, (8,), jnp.float32, order=True)
+ring_hier = all_reduce_plan("x", N, (8,), jnp.float32, order=True,
+                            topology=TOPO)
+
+
+def hier_ring(buf):
+    """Replay of the topology-declared ring: numerics identical to flat
+    (``tests/mdev/rma_topology.py`` asserts bit-identity), schedule split
+    across the two tiers."""
+    return plan_all_reduce(buf[:8], "x", N, order=True, topology=TOPO)
+
+
+def hier_split():
+    g = jax.jit(compat.shard_map(hier_ring, mesh=mesh, in_specs=P(),
+                                 out_specs=P("x"), check_vma=False))
+    txt = g.lower(jnp.zeros((16,), jnp.float32)).compile().as_text()
+    return classify_cp(txt, TOPO)
+
+
 def main():
     print("pattern phase counts (collective-permutes in lowered HLO):")
     p1, p2 = phases(listing1), phases(listing2)
@@ -172,6 +200,15 @@ def main():
           f"{plan_compiled.phases}, naive baseline {plan_naive.phases})")
     assert pp == plan_compiled.phases
     assert plan_naive.phases > plan_compiled.phases
+    # the hierarchical pass: same ring, topology declared — the inter-node
+    # phase count collapses to 2(g-1) and the rest rides shared memory
+    inter, intra = hier_split()
+    print(f"  ring flat:                  inter={ring_flat.phases_inter} "
+          f"intra={ring_flat.phases_intra}")
+    print(f"  ring topology=2x4:          inter={inter} intra={intra}  "
+          f"<- 2(g-1) inter-node")
+    assert (inter, intra) == (ring_hier.phases_inter, ring_hier.phases_intra)
+    assert inter == 2 * (TOPO.hosts - 1) < ring_flat.phases_inter
     # P3: the capability query applications use to pick an algorithm
     print("win_op_intrinsic('sum,cas', 8, int32):",
           win_op_intrinsic("sum,cas", 8, jnp.int32))

@@ -22,6 +22,11 @@ Public surface:
   :func:`ring_all_gather`, :func:`put_signal`, :func:`put_signal_pipelined`,
   and :func:`rma_all_to_all` — the declared-usage MoE token exchange
   (``alltoall.py``; see ``docs/moe_ep.md``).
+* :class:`Topology` / :func:`topology_from_mesh` / :func:`default_topology` /
+  :func:`classify_cp` — the host×device factorization as a first-class plan
+  input (``topology.py``): declared on ``RmaPlan``, it rewrites rings and
+  all-to-alls hierarchically (2(g−1) inter-node phases) and routes same-host
+  traffic through the substrate's shared-memory tier.
 """
 from repro.core.rma.substrate import (
     SCOPE_PROCESS,
@@ -70,7 +75,16 @@ from repro.core.rma.collectives import (
 )
 from repro.core.rma.alltoall import (
     AllToAllResult,
+    hier_applies,
+    plan_all_to_all,
     rma_all_to_all,
+)
+from repro.core.rma.topology import (
+    Topology,
+    classify_cp,
+    default_topology,
+    topology_fingerprint,
+    topology_from_mesh,
 )
 from repro.core.rma.plan import (
     CompiledPlan,
@@ -116,7 +130,14 @@ __all__ = [
     "put_signal",
     "put_signal_pipelined",
     "rma_all_to_all",
+    "plan_all_to_all",
+    "hier_applies",
     "AllToAllResult",
+    "Topology",
+    "topology_from_mesh",
+    "default_topology",
+    "topology_fingerprint",
+    "classify_cp",
     "RmaPlan",
     "CompiledPlan",
     "PlanEnv",

@@ -45,9 +45,30 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.rma.substrate import SCOPE_THREAD
+from repro.core.rma.topology import Topology, default_topology, \
+    topology_fingerprint
 from repro.core.rma.window import Window, WindowConfig
 
 Array = jax.Array
+
+
+def _refs(*xs):
+    """The OpRefs among ``xs`` (binding names carry no ordering edge)."""
+    from repro.core.rma.plan import OpRef
+
+    return tuple(r for r in xs if isinstance(r, OpRef))
+
+
+def hier_applies(topo: "Topology | None", n: int, *, chunks: int = 1,
+                 op: str | None = None) -> bool:
+    """Whether the hierarchical all-to-all rewrite fires: a non-degenerate
+    ``g×l`` topology matching the axis, unchunked payloads, and a landing
+    rule the relay preserves (plain puts or the single declared ``"sum"``).
+    Everything else declines to the flat per-peer lowering — chunked
+    pipelining and exotic landing ops are per-peer decisions the two-stage
+    relay has no equivalent for."""
+    return (topo is not None and topo.axis_size == n and topo.hosts > 1
+            and topo.local > 1 and chunks == 1 and op in (None, "sum"))
 
 
 class AllToAllResult(NamedTuple):
@@ -70,73 +91,49 @@ def _peer_stream(shift: int, n: int) -> int:
 # The planned exchange: the all-to-all pattern as a declarative RMA plan
 # ---------------------------------------------------------------------------
 
-_A2A_PLANS: dict[tuple, object] = {}
 
-
-def all_to_all_plan(axis: str, n: int, shape, dtype, *, chunks: int = 1,
-                    order: bool = True, declare: bool = True,
-                    op: str | None = None, lent: bool = False,
-                    naive_flush: bool = False):
-    """Build (or fetch from the build-once cache) the compiled all-to-all
-    plan for one static configuration.  ``shape`` is the full ``(n*m, ...)``
-    payload shape.  The recorded pattern is the module docstring's: per peer
-    one fetch_op count header, ``chunks`` data transfers on the direction's
-    stream, and a doorbell signal ordered behind the data (a completion
-    edge the planner resolves into a P2 chain or, without ordering, one
-    coalesced ack epoch per peer)."""
-    from repro.core.rma.plan import RmaPlan
-
+def _record_flat_a2a(plan, data_window: str, hdr_window: str, source, counts,
+                     axis: str, n: int, *, shape, dtype, op, chunks):
+    """Record the flat per-peer exchange (module docstring pattern) plus the
+    in-plan decode of the shift-addressed header words.  Returns
+    ``(out, counts, bells)`` OpRefs."""
     dt = jnp.dtype(dtype)
-    key = (axis, n, tuple(shape), dt.name, chunks, order, declare, op, lent,
-           naive_flush)
-    if key in _A2A_PLANS:
-        return _A2A_PLANS[key]
     m = shape[0] // n
     step = m // chunks
-    trailing = tuple(shape[1:])
-    pshape = (step,) + trailing
-    streams = (0, 1) if n > 2 else (0,)
-    data_op = op if (op is not None and declare) else None
-    plan = RmaPlan(f"rma_all_to_all[n={n},chunks={chunks}]")
-    plan.window("data", scope=SCOPE_THREAD, order=order,
-                max_streams=len(streams), same_op=data_op,
-                accumulate_ops=(op,) if op is not None else ("sum",),
-                dtype=dt, entry_epoch=lent, exit_epoch=lent)
-    plan.window("hdr", scope=SCOPE_THREAD, order=order,
-                max_streams=len(streams),
-                same_op="sum" if declare else None, accumulate_ops=("sum",),
-                dtype=jnp.int32, exit_epoch=True)
-    plan.bind("x", tuple(shape), dt)
-    plan.bind("counts", (n,), jnp.int32)
+    pshape = (step,) + tuple(shape[1:])
 
     out = plan.compute(
         lambda env: lax.dynamic_update_slice_in_dim(
             jnp.zeros(tuple(shape), dt),
-            lax.dynamic_slice_in_dim(env["x"], lax.axis_index(axis) * m, m,
+            lax.dynamic_slice_in_dim(env[source], lax.axis_index(axis) * m, m,
                                      axis=0),
             lax.axis_index(axis) * m, axis=0),
-        shape=tuple(shape), dtype=dt, label="own-chunk")
+        reads=_refs(source), shape=tuple(shape), dtype=dt, label="own-chunk")
+    hdr_refs = []
     for k in range(1, n):
         s = _peer_stream(k, n)
         perm = tuple((i, (i + k) % n) for i in range(n))
         # header: publish this chunk's valid-row count at the target
         cnt = plan.compute(
             lambda env, k=k: lax.dynamic_slice_in_dim(
-                env["counts"], (lax.axis_index(axis) + k) % n, 1, axis=0),
-            shape=(1,), dtype=jnp.int32, label=f"peer{k}:count")
-        plan.fetch_op("hdr", cnt, perm, op="sum", offset=k, stream=s,
-                      shape=(1,), dtype=jnp.int32, label=f"peer{k}:hdr")
+                env[counts], (lax.axis_index(axis) + k) % n, 1, axis=0),
+            reads=_refs(counts), shape=(1,), dtype=jnp.int32,
+            label=f"peer{k}:count")
+        hdr_refs.append(plan.fetch_op(
+            hdr_window, cnt, perm, op="sum", offset=k, stream=s, shape=(1,),
+            dtype=jnp.int32, label=f"peer{k}:hdr"))
         # data: chunked one-sided transfers on the direction's stream
         last = None
         for c in range(chunks):
             pc = plan.compute(
                 lambda env, k=k, c=c: lax.dynamic_slice_in_dim(
-                    env["x"],
+                    env[source],
                     ((lax.axis_index(axis) + k) % n) * m + c * step, step,
                     axis=0),
-                shape=pshape, dtype=dt, label=f"peer{k}:piece{c}")
+                reads=_refs(source), shape=pshape, dtype=dt,
+                label=f"peer{k}:piece{c}")
             if op is None:
-                last = plan.send("data", pc, perm, stream=s, shape=pshape,
+                last = plan.send(data_window, pc, perm, stream=s, shape=pshape,
                                  dtype=dt, label=f"peer{k}:data{c}")
                 got = last
             else:
@@ -147,7 +144,7 @@ def all_to_all_plan(axis: str, n: int, shape, dtype, *, chunks: int = 1,
                         step, axis=0),
                     reads=(out,), shape=pshape, dtype=dt,
                     label=f"peer{k}:cur{c}")
-                last = plan.hop("data", pc, cur, perm, op=op, stream=s,
+                last = plan.hop(data_window, pc, cur, perm, op=op, stream=s,
                                 shape=pshape, dtype=dt,
                                 label=f"peer{k}:acc{c}")
                 got = last
@@ -162,9 +159,265 @@ def all_to_all_plan(axis: str, n: int, shape, dtype, *, chunks: int = 1,
         # doorbell: must not overtake the peer's data — a completion edge
         # the planner turns into a P2 token chain, or one ack epoch per
         # peer (paper Listing 1) without ordering
-        plan.signal("hdr", perm, flag_offset=n + k, stream=s, after=(last,),
-                    label=f"peer{k}:bell")
+        hdr_refs.append(plan.signal(
+            hdr_window, perm, flag_offset=n + k, stream=s, after=(last,),
+            label=f"peer{k}:bell"))
+
+    # decode: re-index the shift-addressed header words by source rank
+    def _counts(env):
+        rank = lax.axis_index(axis)
+        hdr_buf = env.buffer(hdr_window)
+        src_of_shift = jnp.mod(rank - jnp.arange(n), n)
+        own = lax.dynamic_slice_in_dim(env[counts], rank, 1, axis=0)[0]
+        by_shift = hdr_buf[:n].astype(jnp.int32).at[0].set(own)
+        return jnp.zeros((n,), jnp.int32).at[src_of_shift].set(by_shift)
+
+    def _bells(env):
+        rank = lax.axis_index(axis)
+        hdr_buf = env.buffer(hdr_window)
+        src_of_shift = jnp.mod(rank - jnp.arange(n), n)
+        return jnp.zeros((n,), jnp.int32).at[src_of_shift].set(
+            hdr_buf[n:2 * n].astype(jnp.int32))
+
+    cnts = plan.compute(_counts, reads=_refs(counts), after=tuple(hdr_refs),
+                        shape=(n,), dtype=jnp.int32, label="counts")
+    bells = plan.compute(_bells, after=tuple(hdr_refs), shape=(n,),
+                         dtype=jnp.int32, label="bells")
+    return out, cnts, bells
+
+
+def _record_hier_a2a(plan, data_window: str, hdr_window: str, source, counts,
+                     axis: str, n: int, *, shape, dtype, op):
+    """The hierarchical all-to-all rewrite: intra-node redistribution →
+    one exchange per *host* shift.
+
+    Stage 1 (shared-memory tier) re-sorts blocks by **destination local
+    index**: for every local shift k the rank hands its same-host peer
+    ``(h, j+k)`` the g blocks (one per destination host) addressed to that
+    peer's local index, with their count words alongside.  After it, rank
+    ``(h, j)`` holds one *lane* per same-host source — every block in the
+    machine that starts on host h and ends at local index j.
+
+    Stage 2 crosses the network once per host shift k2: one send carrying
+    the l blocks bound for host ``(h+k2) % g`` (payload position k ↔ the
+    lane of same-host source ``(j−k) % l`` — receivers share j, so the
+    position decodes without any address word), and one doorbell signal
+    on the header window whose ``(l+1,)`` payload piggybacks the l relayed
+    count words behind the arrival flag — exactly ``2(g−1)`` inter-node
+    phases, vs the flat lowering's per-peer headers and doorbells.  The
+    header window completes by doorbell (no exit epoch): its words are
+    consumed by the in-plan decode, not by a caller-visible flush."""
+    topo = plan.topology
+    g, l = topo.hosts, topo.local
+    dt = jnp.dtype(dtype)
+    i32 = jnp.int32
+    m = shape[0] // n
+    gshape = (g * m,) + tuple(shape[1:])
+    lshape = (l * m,) + tuple(shape[1:])
+
+    def _h():
+        return lax.axis_index(axis) // l
+
+    def _j():
+        return lax.axis_index(axis) % l
+
+    def lane_gather(env, k):
+        tgt = (_j() + k) % l
+        xs = env[source]
+        return jnp.concatenate(
+            [lax.dynamic_slice_in_dim(xs, (h2 * l + tgt) * m, m, axis=0)
+             for h2 in range(g)], axis=0)
+
+    def lane_counts(env, k):
+        tgt = (_j() + k) % l
+        cs = env[counts]
+        return jnp.concatenate(
+            [lax.dynamic_slice_in_dim(cs, h2 * l + tgt, 1, axis=0)
+             for h2 in range(g)], axis=0)
+
+    # Stage 1 — intra-node redistribution.  lanes[k] holds the g blocks
+    # sourced from same-host peer (h, (j-k) % l) and destined to local
+    # index j (lane 0 is the rank's own contribution, gathered locally).
+    lanes = [plan.compute(lambda env: lane_gather(env, 0), reads=_refs(source),
+                          shape=gshape, dtype=dt, label="h1:lane0")]
+    lane_cnt = [plan.compute(lambda env: lane_counts(env, 0),
+                             reads=_refs(counts), shape=(g,), dtype=i32,
+                             label="h1:lanecnt0")]
+    for k in range(1, l):
+        perm = topo.intra_ring_perm(k)
+        dk = plan.compute(lambda env, k=k: lane_gather(env, k),
+                          reads=_refs(source), shape=gshape, dtype=dt,
+                          label=f"h1:gather{k}")
+        ck = plan.compute(lambda env, k=k: lane_counts(env, k),
+                          reads=_refs(counts), shape=(g,), dtype=i32,
+                          label=f"h1:gathercnt{k}")
+        lanes.append(plan.send(data_window, dk, perm, stream=0, shape=gshape,
+                               dtype=dt, label=f"h1:relay{k}"))
+        lane_cnt.append(plan.send(hdr_window, ck, perm, stream=0, shape=(g,),
+                                  dtype=i32, label=f"h1:relaycnt{k}"))
+
+    # Stage 2 — one exchange per host shift: data + doorbell-with-counts.
+    recv2, sigs = [], []
+    for k2 in range(1, g):
+        perm = topo.inter_ring_perm(k2)
+        pay = plan.compute(
+            lambda env, k2=k2: jnp.concatenate(
+                [lax.dynamic_slice_in_dim(env[lk], ((_h() + k2) % g) * m, m,
+                                          axis=0) for lk in lanes], axis=0),
+            reads=_refs(*lanes), shape=lshape, dtype=dt, label=f"h2:pay{k2}")
+        if op is None:
+            got = plan.send(data_window, pay, perm, stream=0, shape=lshape,
+                            dtype=dt, label=f"h2:data{k2}")
+        else:
+            # combine direction: land through the accumulate engine, same
+            # as the flat lowering's per-peer landings (zero-initialized
+            # slots, so the declared op reproduces the put numerics)
+            cur = plan.compute(lambda env: jnp.zeros(lshape, dt),
+                              shape=lshape, dtype=dt, label=f"h2:cur{k2}")
+            got = plan.hop(data_window, pay, cur, perm, op=op, stream=0,
+                           shape=lshape, dtype=dt, label=f"h2:acc{k2}")
+        recv2.append(got)
+        cpay = plan.compute(
+            lambda env, k2=k2: jnp.concatenate(
+                [jnp.ones((1,), i32)] +
+                [lax.dynamic_slice_in_dim(env[ck], (_h() + k2) % g, 1, axis=0)
+                 for ck in lane_cnt], axis=0),
+            reads=_refs(*lane_cnt), shape=(l + 1,), dtype=i32,
+            label=f"h2:cnt{k2}")
+        sigs.append(plan.signal(
+            hdr_window, perm, flag_offset=(k2 - 1) * (l + 1), value=cpay,
+            stream=0, after=(got,), label=f"h2:bell{k2}"))
+
+    # Assembly — every (Δhost, Δlocal) offset is a static loop iteration;
+    # only the per-rank positions are traced.
+    def assemble(env):
+        rank = lax.axis_index(axis)
+        out = jnp.zeros(tuple(shape), dt)
+        own = lax.dynamic_slice_in_dim(env[source], rank * m, m, axis=0)
+        out = lax.dynamic_update_slice_in_dim(out, own, rank * m, axis=0)
+        for k in range(1, l):
+            src = _h() * l + (_j() - k) % l
+            blk = lax.dynamic_slice_in_dim(env[lanes[k]], _h() * m, m, axis=0)
+            out = lax.dynamic_update_slice_in_dim(out, blk, src * m, axis=0)
+        for k2 in range(1, g):
+            for k in range(l):
+                src = ((_h() - k2) % g) * l + (_j() - k) % l
+                blk = lax.slice_in_dim(env[recv2[k2 - 1]], k * m, (k + 1) * m,
+                                       axis=0)
+                out = lax.dynamic_update_slice_in_dim(out, blk, src * m,
+                                                      axis=0)
+        return out
+
+    out = plan.compute(assemble, reads=_refs(source, *lanes, *recv2),
+                       shape=tuple(shape), dtype=dt, label="h:out")
+
+    def decode_counts(env):
+        rank = lax.axis_index(axis)
+        hdr = env.buffer(hdr_window)
+        cvec = jnp.zeros((n,), i32)
+        own = lax.dynamic_slice_in_dim(env[counts], rank, 1, axis=0)
+        cvec = lax.dynamic_update_slice(cvec, own, (rank,))
+        for k in range(1, l):
+            src = _h() * l + (_j() - k) % l
+            w = lax.dynamic_slice_in_dim(env[lane_cnt[k]], _h(), 1, axis=0)
+            cvec = lax.dynamic_update_slice(cvec, w, (src,))
+        for k2 in range(1, g):
+            for k in range(l):
+                src = ((_h() - k2) % g) * l + (_j() - k) % l
+                w = hdr[(k2 - 1) * (l + 1) + 1 + k][None].astype(i32)
+                cvec = lax.dynamic_update_slice(cvec, w, (src,))
+        return cvec
+
+    def decode_bells(env):
+        hdr = env.buffer(hdr_window)
+        bvec = jnp.zeros((n,), i32)
+        for k in range(1, l):
+            src = _h() * l + (_j() - k) % l
+            # shared-memory arrival: the relayed counts came in-trace, so
+            # the bell is a constant tied to them (integer-exact)
+            w = 1 + 0 * lax.dynamic_slice_in_dim(env[lane_cnt[k]], _h(), 1,
+                                                 axis=0)
+            bvec = lax.dynamic_update_slice(bvec, w, (src,))
+        for k2 in range(1, g):
+            flag = hdr[(k2 - 1) * (l + 1)][None].astype(i32)
+            for k in range(l):
+                src = ((_h() - k2) % g) * l + (_j() - k) % l
+                bvec = lax.dynamic_update_slice(bvec, flag, (src,))
+        return bvec
+
+    cnts = plan.compute(decode_counts, reads=_refs(counts, *lane_cnt),
+                        after=tuple(sigs), shape=(n,), dtype=i32,
+                        label="h:counts")
+    bells = plan.compute(decode_bells, reads=_refs(*lane_cnt),
+                         after=tuple(sigs), shape=(n,), dtype=i32,
+                         label="h:bells")
+    return out, cnts, bells
+
+
+def lower_all_to_all(plan, data_window: str, hdr_window: str, source, counts,
+                     axis: str, n: int, *, shape, dtype, op: str | None = None,
+                     chunks: int = 1):
+    """Lower ``RmaPlan.all_to_all``: the hierarchical two-stage relay when
+    :func:`hier_applies` under the plan's declared topology, otherwise the
+    flat per-peer exchange.  Returns ``(out, counts, bells)`` OpRefs."""
+    if hier_applies(plan.topology, n, chunks=chunks, op=op):
+        return _record_hier_a2a(plan, data_window, hdr_window, source, counts,
+                                axis, n, shape=tuple(shape), dtype=dtype,
+                                op=op)
+    return _record_flat_a2a(plan, data_window, hdr_window, source, counts,
+                            axis, n, shape=tuple(shape), dtype=dtype, op=op,
+                            chunks=chunks)
+
+
+_A2A_PLANS: dict[tuple, object] = {}
+
+
+def all_to_all_plan(axis: str, n: int, shape, dtype, *, chunks: int = 1,
+                    order: bool = True, declare: bool = True,
+                    op: str | None = None, lent: bool = False,
+                    naive_flush: bool = False,
+                    topology: Topology | None = None):
+    """Build (or fetch from the build-once cache) the compiled all-to-all
+    plan for one static configuration.  ``shape`` is the full ``(n*m, ...)``
+    payload shape.  The recorded pattern is the module docstring's: per peer
+    one fetch_op count header, ``chunks`` data transfers on the direction's
+    stream, and a doorbell signal ordered behind the data (a completion
+    edge the planner resolves into a P2 chain or, without ordering, one
+    coalesced ack epoch per peer).
+
+    ``topology``: a declared ``g×l`` host topology.  When
+    :func:`hier_applies` the exchange is recorded as the hierarchical
+    two-stage relay (``2(g−1)`` inter-node phases; header words consumed by
+    doorbell instead of an exit epoch); the fingerprint is part of the cache
+    key so factorizations never alias."""
+    from repro.core.rma.plan import RmaPlan
+
+    dt = jnp.dtype(dtype)
+    key = (axis, n, tuple(shape), dt.name, chunks, order, declare, op, lent,
+           naive_flush, topology_fingerprint(topology))
+    if key in _A2A_PLANS:
+        return _A2A_PLANS[key]
+    streams = (0, 1) if n > 2 else (0,)
+    data_op = op if (op is not None and declare) else None
+    hier = hier_applies(topology, n, chunks=chunks, op=op)
+    plan = RmaPlan(f"rma_all_to_all[n={n},chunks={chunks}]",
+                   topology=topology)
+    plan.window("data", scope=SCOPE_THREAD, order=order,
+                max_streams=len(streams), same_op=data_op,
+                accumulate_ops=(op,) if op is not None else ("sum",),
+                dtype=dt, entry_epoch=lent, exit_epoch=lent)
+    plan.window("hdr", scope=SCOPE_THREAD, order=order,
+                max_streams=len(streams),
+                same_op="sum" if declare else None, accumulate_ops=("sum",),
+                dtype=jnp.int32, exit_epoch=not hier)
+    plan.bind("x", tuple(shape), dt)
+    plan.bind("counts", (n,), jnp.int32)
+    out, cnts, bells = plan.all_to_all("data", "hdr", "x", "counts", axis, n,
+                                       shape=tuple(shape), dtype=dt, op=op,
+                                       chunks=chunks)
     plan.output("out", out)
+    plan.output("counts", cnts)
+    plan.output("bells", bells)
     compiled = plan.compile(naive_flush=naive_flush)
     _A2A_PLANS[key] = compiled
     return compiled
@@ -181,11 +434,17 @@ def plan_all_to_all(
     declare: bool = True,
     op: str | None = None,
     win: Window | None = None,
+    topology: Topology | None = None,
 ) -> AllToAllResult:
     """Plan-native one-sided all-to-all: replay the cached compiled schedule
     on this step's payload.  Same semantics and lowered phase structure as
     the classic ``rma_all_to_all`` (now a deprecation-warning wrapper over
-    this)."""
+    this).
+
+    ``topology``: declared host topology (``None`` consults the
+    ``RMA_TOPOLOGY`` environment override via ``default_topology``); when
+    :func:`hier_applies` the replayed plan is the hierarchical relay —
+    identical results, 2(g−1) inter-node phases."""
     n = axis_size
     if x.shape[0] % n:
         raise ValueError(
@@ -201,11 +460,12 @@ def plan_all_to_all(
     if n == 1:
         return AllToAllResult(x, counts, jnp.zeros((1,), jnp.int32))
 
-    rank = lax.axis_index(axis)
+    if topology is None:
+        topology = default_topology(n)
     streams = (0, 1) if n > 2 else (0,)
     compiled = all_to_all_plan(axis, n, x.shape, x.dtype, chunks=chunks,
                                order=order, declare=declare, op=op,
-                               lent=win is not None)
+                               lent=win is not None, topology=topology)
     hdr_cfg = WindowConfig(scope=SCOPE_THREAD, order=order,
                            max_streams=len(streams),
                            same_op="sum" if declare else None,
@@ -227,17 +487,10 @@ def plan_all_to_all(
                                      max_streams=len(streams), **acc_info))
     res = compiled.execute({"data": data, "hdr": hdr},
                            {"x": x, "counts": counts})
-    out = res.outputs["out"]
-    hdr_buf = res.windows["hdr"].buffer
-
-    # re-index the shift-addressed header words by source rank
-    shift = jnp.arange(n)
-    src_of_shift = jnp.mod(rank - shift, n)
-    by_shift = hdr_buf[:n].at[0].set(
-        lax.dynamic_slice_in_dim(counts, rank, 1, axis=0)[0])
-    recv_counts = jnp.zeros((n,), jnp.int32).at[src_of_shift].set(by_shift)
-    bells = jnp.zeros((n,), jnp.int32).at[src_of_shift].set(hdr_buf[n:])
-    return AllToAllResult(out, recv_counts, bells)
+    # decode (header re-indexing by source rank) happens in-plan now — both
+    # lowerings return the same three named outputs
+    return AllToAllResult(res.outputs["out"], res.outputs["counts"],
+                          res.outputs["bells"])
 
 
 def rma_all_to_all(
@@ -286,4 +539,4 @@ def rma_all_to_all(
 
 
 __all__ = ["rma_all_to_all", "plan_all_to_all", "all_to_all_plan",
-           "AllToAllResult"]
+           "lower_all_to_all", "hier_applies", "AllToAllResult"]

@@ -50,6 +50,8 @@ from jax import lax
 
 from repro.core.rma import accumulate as acc_engine
 from repro.core.rma.substrate import SCOPE_THREAD, Substrate, _tie
+from repro.core.rma.topology import Topology, default_topology, \
+    topology_fingerprint
 from repro.core.rma.window import Window, WindowConfig
 
 Array = jax.Array
@@ -263,7 +265,8 @@ def _refs(*xs):
 
 
 def _record_ring_direction(plan, axis: str, n: int, xref, dshape, dtype, *,
-                           shift: int, stream: int):
+                           shift: int, stream: int, window: str = "ring",
+                           op: str = "sum"):
     """Record one ring direction (reduce-scatter then all-gather) on plan
     window ``"ring"``; returns the OpRef of the direction's gathered output.
 
@@ -293,7 +296,7 @@ def _record_ring_direction(plan, axis: str, n: int, xref, dshape, dtype, *,
         # hop k incorporates hop k-1's received data: a *completion* edge —
         # the no-P2 baseline pays an ack epoch here, P2 chains for free
         prev_hop = plan.hop(
-            "ring", piece, cur, perm, op="sum", stream=stream,
+            window, piece, cur, perm, op=op, stream=stream,
             after=_refs(prev_hop), shape=pshape, dtype=dtype,
             label=f"rs{shift:+d}:hop{k}")
         state = plan.compute(
@@ -320,7 +323,7 @@ def _record_ring_direction(plan, axis: str, n: int, xref, dshape, dtype, *,
     for k in range(n - 1):
         # every hop forwards the previously received piece (RS→AG entry
         # included): completion edges, flushed only without P2
-        sd = plan.send("ring", piece, perm, stream=stream, after=_refs(prev),
+        sd = plan.send(window, piece, perm, stream=stream, after=_refs(prev),
                        shape=pshape, dtype=dtype,
                        label=f"ag{shift:+d}:send{k}")
         out = plan.compute(
@@ -334,24 +337,173 @@ def _record_ring_direction(plan, axis: str, n: int, xref, dshape, dtype, *,
     return out
 
 
+def _record_tier_rs(plan, window: str, xref, dshape, dtype, *, size: int,
+                    perm, idx, op: str, stream: int, tag: str, after=None):
+    """Record a reduce-scatter over one tier's ring (shift ``+1``).
+
+    Generalization of the RS half of :func:`_record_ring_direction` to a
+    *tier* ring: ``size`` ranks per ring, ``perm`` the tier's permutation
+    (every global rank participates — intra rings run one per host, inter
+    rings one per local-index "leader lane"), and ``idx`` a thunk producing
+    the traced position of this rank within its ring.  Returns ``(mine,
+    last_hop)`` — the rank's reduced chunk (owner shift ``+1``) and the
+    final hop's OpRef."""
+    chunk = dshape[0] // size
+    pshape = (chunk,) + tuple(dshape[1:])
+    state, prev_hop = xref, None
+    for k in range(size - 1):
+        piece = plan.compute(
+            lambda env, st=state, k=k: lax.dynamic_slice_in_dim(
+                env[st], ((idx() - k) % size) * chunk, chunk, axis=0),
+            reads=_refs(state), shape=pshape, dtype=dtype,
+            label=f"{tag}:rs:piece{k}")
+        cur = plan.compute(
+            lambda env, st=state, k=k: lax.dynamic_slice_in_dim(
+                env[st], ((idx() - (k + 1)) % size) * chunk, chunk, axis=0),
+            reads=_refs(state), shape=pshape, dtype=dtype,
+            label=f"{tag}:rs:cur{k}")
+        # hop k incorporates hop k-1's received data (completion edge); the
+        # tier's first hop additionally waits on the previous stage's last op
+        prev_hop = plan.hop(
+            window, piece, cur, perm, op=op, stream=stream,
+            after=_refs(prev_hop, *(after or ())), shape=pshape, dtype=dtype,
+            label=f"{tag}:rs:hop{k}")
+        state = plan.compute(
+            lambda env, st=state, h=prev_hop, k=k:
+                lax.dynamic_update_slice_in_dim(
+                    env[st], env[h], ((idx() - (k + 1)) % size) * chunk,
+                    axis=0),
+            reads=_refs(state, prev_hop), shape=dshape, dtype=dtype,
+            label=f"{tag}:rs:state{k}")
+    mine = plan.compute(
+        lambda env, st=state: lax.dynamic_slice_in_dim(
+            env[st], ((idx() + 1) % size) * chunk, chunk, axis=0),
+        reads=_refs(state), shape=pshape, dtype=dtype,
+        label=f"{tag}:rs:mine")
+    return mine, prev_hop
+
+
+def _record_tier_ag(plan, window: str, xref, pshape, dtype, *, size: int,
+                    perm, idx, stream: int, tag: str, entry=None):
+    """Record an all-gather (owner shift ``+1``, composing with
+    :func:`_record_tier_rs`) over one tier's ring.  ``entry`` is the
+    previous stage's last op — the first send's completion edge.  Returns
+    ``(out, last_send)``."""
+    chunk = pshape[0]
+    oshape = (chunk * size,) + tuple(pshape[1:])
+    out = plan.compute(
+        lambda env, mn=xref: lax.dynamic_update_slice_in_dim(
+            jnp.zeros(oshape, dtype), env[mn],
+            ((idx() + 1) % size) * chunk, axis=0),
+        reads=_refs(xref), shape=oshape, dtype=dtype, label=f"{tag}:ag:out0")
+    piece, prev = xref, entry
+    for k in range(size - 1):
+        sd = plan.send(window, piece, perm, stream=stream, after=_refs(prev),
+                       shape=pshape, dtype=dtype, label=f"{tag}:ag:send{k}")
+        out = plan.compute(
+            lambda env, o=out, sd=sd, k=k: lax.dynamic_update_slice_in_dim(
+                env[o], env[sd], ((idx() - (k + 1) + 1) % size) * chunk,
+                axis=0),
+            reads=_refs(out, sd), shape=oshape, dtype=dtype,
+            label=f"{tag}:ag:out{k + 1}")
+        piece = prev = sd
+    return out, prev
+
+
+def _record_hier_ring(plan, window: str, source, axis: str, topo: Topology,
+                      dshape, dtype, *, op: str, stream: int):
+    """The hierarchical ring rewrite: intra-node reduce-scatter →
+    inter-node ring all-reduce over the ``g`` host leaders → intra-node
+    all-gather.
+
+    Leader election is *per local index* (j-plane lanes): the inter-node
+    permutation connects rank ``(h, j)`` to ``((h+1) % g, j)``, so each of
+    the ``l`` local indices forms its own ring across hosts and carries
+    ``1/l``-th of the inter-node bytes — no single-leader bottleneck.  The
+    intra stages run on same-host perms, which the planner classifies as
+    the shared-memory tier: same data phases, but no flush epoch owed, so
+    the plan's *inter-node* phase count is exactly ``2(g−1)``."""
+    g, l = topo.hosts, topo.local
+
+    def local():
+        return lax.axis_index(axis) % l
+
+    def host():
+        return lax.axis_index(axis) // l
+
+    perm_i = topo.intra_ring_perm(1)
+    perm_x = topo.inter_ring_perm(1)
+    chunk_a = dshape[0] // l
+    ashape = (chunk_a,) + tuple(dshape[1:])
+    bshape = (chunk_a // g,) + tuple(dshape[1:])
+    # Stage A — intra-node reduce-scatter: after it, rank (h, j) holds its
+    # host's partial sum of chunk (j+1) % l.
+    mine_a, last_a = _record_tier_rs(
+        plan, window, source, dshape, dtype, size=l, perm=perm_i, idx=local,
+        op=op, stream=stream, tag="hA")
+    # Stage B — inter-node ring all-reduce (RS then AG) of that chunk across
+    # the g hosts in each j-plane lane: 2(g−1) inter-node phases total.
+    mine_b, last_rs = _record_tier_rs(
+        plan, window, mine_a, ashape, dtype, size=g, perm=perm_x, idx=host,
+        op=op, stream=stream, tag="hB", after=_refs(last_a))
+    full_a, last_b = _record_tier_ag(
+        plan, window, mine_b, bshape, dtype, size=g, perm=perm_x, idx=host,
+        stream=stream, tag="hB", entry=last_rs)
+    # Stage C — intra-node all-gather broadcasts each lane's fully-reduced
+    # chunk back to its host's other ranks (shared-memory tier again).
+    out, _ = _record_tier_ag(
+        plan, window, full_a, ashape, dtype, size=l, perm=perm_i, idx=local,
+        stream=stream, tag="hC", entry=last_b)
+    return out
+
+
+def lower_ring_all_reduce(plan, window: str, source, axis: str, n: int, *,
+                          shape, dtype, op: str = "sum", stream: int = 0,
+                          label: str = ""):
+    """Lower ``RmaPlan.ring_all_reduce``: the hierarchical pass when the
+    plan declares a non-degenerate ``g×l`` topology matching the axis,
+    otherwise the flat ring.  ``label`` is accepted for interface symmetry
+    with the other macro lowerings (the recorders emit their own labels)."""
+    del label
+    dshape, dt = tuple(shape), jnp.dtype(dtype)
+    topo = plan.topology
+    if (topo is not None and topo.axis_size == n
+            and topo.hosts > 1 and topo.local > 1):
+        return _record_hier_ring(plan, window, source, axis, topo, dshape,
+                                 dt, op=op, stream=stream)
+    return _record_ring_direction(plan, axis, n, source, dshape, dt,
+                                  shift=1, stream=stream, window=window,
+                                  op=op)
+
+
 _RING_PLANS: dict[tuple, "object"] = {}
 
 
 def all_reduce_plan(axis: str, n: int, shape, dtype, *, order: bool = True,
                     bidirectional: bool = False, declare_op: bool = True,
-                    lent: bool = False, naive_flush: bool = False):
+                    lent: bool = False, naive_flush: bool = False,
+                    topology: Topology | None = None):
     """Build (or fetch from the build-once cache) the compiled ring
     all-reduce plan for one static configuration.  ``shape`` is the padded
     input shape.  ``naive_flush=True`` compiles the per-op-flushing baseline
-    instead (never cached together with the planned schedule)."""
+    instead (never cached together with the planned schedule).
+
+    ``topology``: a declared ``g×l`` host topology.  With ``g > 1`` and
+    ``l > 1`` the unidirectional ring is rewritten hierarchically (2(g−1)
+    inter-node phases instead of 2(n−1)); the bidirectional split keeps the
+    flat directions (the rewrite declines — both directions would contend
+    for the same inter-node lanes) but still benefits from same-host hops
+    being classified into the shared-memory tier.  The topology fingerprint
+    is part of the cache key: plans compiled for different factorizations
+    never alias."""
     from repro.core.rma.plan import RmaPlan
 
     dt = jnp.dtype(dtype)
     key = (axis, n, tuple(shape), dt.name, order, bidirectional, declare_op,
-           lent, naive_flush)
+           lent, naive_flush, topology_fingerprint(topology))
     if key in _RING_PLANS:
         return _RING_PLANS[key]
-    plan = RmaPlan(f"rma_all_reduce[n={n}]")
+    plan = RmaPlan(f"rma_all_reduce[n={n}]", topology=topology)
     streams = (0, 1) if bidirectional else (0,)
     plan.window("ring", scope=SCOPE_THREAD, order=order,
                 max_streams=len(streams),
@@ -375,8 +527,8 @@ def all_reduce_plan(axis: str, n: int, shape, dtype, *, order: bool = True,
             reads=(lo_full, hi_full), shape=tuple(shape), dtype=dt,
             label="concat")
     else:
-        out = _record_ring_direction(plan, axis, n, "x", tuple(shape), dt,
-                                     shift=1, stream=0)
+        out = plan.ring_all_reduce("ring", "x", axis, n, shape=tuple(shape),
+                                   dtype=dt, op="sum", stream=0)
     plan.output("out", out)
     compiled = plan.compile(naive_flush=naive_flush)
     _RING_PLANS[key] = compiled
@@ -392,14 +544,22 @@ def plan_all_reduce(
     bidirectional: bool = False,
     win: Window | None = None,
     declare_op: bool = True,
+    topology: Topology | None = None,
 ) -> Array:
     """Plan-native one-sided ring all-reduce: fetch the compiled schedule
     from the build-once cache and replay it on this step's data.  Same
     semantics and lowered phase structure as the classic ``rma_all_reduce``
-    (which is now a thin deprecation-warning wrapper over this)."""
+    (which is now a thin deprecation-warning wrapper over this).
+
+    ``topology``: declared host topology (``None`` consults the
+    ``RMA_TOPOLOGY`` environment override via ``default_topology``); with
+    a non-degenerate factorization the cached plan is the hierarchical
+    rewrite — bit-identical results, 2(g−1) inter-node phases."""
     n = axis_size
     if n == 1:
         return x
+    if topology is None:
+        topology = default_topology(n)
     orig = x.shape[0]
     pad = (-orig) % (2 * n if bidirectional else n)
     if pad:
@@ -407,7 +567,8 @@ def plan_all_reduce(
                             axis=0)
     compiled = all_reduce_plan(axis, n, x.shape, x.dtype, order=order,
                                bidirectional=bidirectional,
-                               declare_op=declare_op, lent=win is not None)
+                               declare_op=declare_op, lent=win is not None,
+                               topology=topology)
     streams = (0, 1) if bidirectional else (0,)
     if win is None:
         same_op = "sum" if declare_op else None

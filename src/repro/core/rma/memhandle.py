@@ -155,6 +155,16 @@ class MemhandleWindow:
             self, parent=parent,
             err_count=self.err_count if err_count is None else err_count)
 
+    def _note_op(self, stream: int, perm) -> None:
+        """Enter the op into the dup family's flush ledger — unless the
+        parent's config declares a topology under which ``perm`` is
+        node-local: a shared-memory transfer completes with a store fence
+        and owes no flush epoch (same tier rule as ``Window._shm``)."""
+        topo = getattr(self.parent.config, "topology", None)
+        if topo is not None and topo.perm_is_intra(perm):
+            return
+        self.parent.group.note_op(stream, perm)
+
     def _lifetime_guard(self, p: DynamicWindow, shipped_epoch, perm):
         """The traced half of the P5 guarantee, shared by put/get/accumulate:
         validate the epoch that rode the packet against the slot's live
@@ -185,7 +195,7 @@ class MemhandleWindow:
         sent_off, sent_epoch = hdr[0], hdr[1]
         fresh, is_tgt, errs = self._lifetime_guard(p, sent_epoch, perm)
         buf = _write(p.buffer, sent, sent_off, is_tgt & fresh)
-        p.group.note_op(stream, perm)
+        self._note_op(stream, perm)
         new_parent = p._with_dyn(buffer=buf, tokens=p._bump(stream, sent))
         return self._rewrap(new_parent, err_count=errs)
 
@@ -212,7 +222,7 @@ class MemhandleWindow:
         fresh, _, errs = self._lifetime_guard(p, req_epoch, perm)
         chunk = jnp.where(fresh, chunk, jnp.zeros_like(chunk))
         data = lax.ppermute(chunk, p.axis, _inv(perm))  # response
-        p.group.note_op(stream, perm)
+        self._note_op(stream, perm)
         new_parent = p._with(tokens=p._bump(stream, data))
         return self._rewrap(new_parent, err_count=errs), data
 
@@ -244,7 +254,7 @@ class MemhandleWindow:
         new = _engine.path_combine(path, op)(current, sent)
         fresh, is_tgt, errs = self._lifetime_guard(p, sent_epoch, perm)
         buf = _write(p.buffer, new, sent_off, is_tgt & fresh)
-        p.group.note_op(stream, perm)
+        self._note_op(stream, perm)
         tok_dep = sent
         if path == _engine.PATH_SOFTWARE:
             # conservative generic path: one completion-ack phase per op —

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 
 from repro.core.rma import accumulate as acc_engine
 from repro.core.rma.substrate import SCOPE_THREAD, _is_static, _tie
+from repro.core.rma.topology import Topology
 from repro.core.rma.window import KNOWN_ACC_OPS, WindowConfig
 
 Array = jax.Array
@@ -111,6 +112,7 @@ class _Op:
     comm_deps: frozenset = frozenset()  # comm frontier of `deps`
     comm_sync: frozenset = frozenset()  # comm frontier of `sync_deps`
     path: str | None = None             # routed accumulate path
+    tier: str = "inter"                 # "inter" | "intra" (topology pass)
 
 
 @dataclasses.dataclass
@@ -149,6 +151,7 @@ class _Step:
     group: tuple = ()              # fused puts
     ties: tuple = ()               # ((window, stream), ...) token ties
     phases: int = 0
+    tier: str = "inter"            # which ledger the phases bill to
 
 
 class PlanEnv:
@@ -199,8 +202,13 @@ class RmaPlan:
         res = compiled.execute({"ring": win}, {"g": grads})   # every step
     """
 
-    def __init__(self, name: str = "rma-plan"):
+    def __init__(self, name: str = "rma-plan",
+                 topology: Topology | None = None):
+        if topology is not None and not isinstance(topology, Topology):
+            raise PlanError(
+                f"topology must be a Topology or None, got {topology!r}")
         self.name = name
+        self.topology = topology
         self._windows: dict[str, _PlanWindow] = {}
         self._bindings: dict[str, tuple[tuple, Any]] = {}
         self._ops: list[_Op] = []
@@ -333,6 +341,50 @@ class RmaPlan:
         return self._record(kind="compute", fn=fn, reads=tuple(reads),
                             after=tuple(after), shape=shape, dtype=dtype,
                             label=label)
+
+    # -- declared collective macros (topology-aware lowering) -----------------
+    def ring_all_reduce(self, window: str, source, axis: str, n: int, *,
+                        shape, dtype, op: str = "sum", stream: int = 0,
+                        label: str = "") -> OpRef:
+        """Record a whole declared ring all-reduce of ``source`` (a binding
+        or OpRef holding ``shape`` rows, ``shape[0] % n == 0``) on plan
+        window ``window``.
+
+        This is the hierarchical pass's entry point: with a topology of
+        ``g hosts × l local`` declared on the plan (``RmaPlan(topology=…)``)
+        and ``g > 1 and l > 1``, the flat ring is rewritten into
+        reduce-scatter **intra-node** → ring over the ``g`` host leaders
+        **inter-node** → all-gather back **intra-node**, dropping the
+        inter-node phase count from ``2(n−1)`` to ``2(g−1)``.  Without a
+        topology (or at a degenerate ``g==1`` / ``l==1`` factorization) it
+        records exactly the flat ring.  Returns the OpRef of the reduced
+        result."""
+        from repro.core.rma import collectives as _coll
+
+        return _coll.lower_ring_all_reduce(
+            self, window, source, axis, n, shape=tuple(shape),
+            dtype=dtype, op=op, stream=stream, label=label)
+
+    def all_to_all(self, data_window: str, hdr_window: str, source, counts,
+                   axis: str, n: int, *, shape, dtype, op: str | None = None,
+                   chunks: int = 1) -> tuple[OpRef, OpRef, OpRef]:
+        """Record a whole declared all-to-all (``shape[0] == n*m`` rows, the
+        k-th ``m``-row block addressed to rank k) with its count headers and
+        doorbells.  Returns ``(out, counts, bells)`` OpRefs — the exchanged
+        data, per-source received row counts, and per-source arrival flags.
+
+        Under a declared ``g×l`` topology with ``g > 1 and l > 1`` (and
+        ``chunks == 1``, ``op in (None, "sum")``) the exchange is lowered
+        hierarchically: blocks are first routed to the same-host peer that
+        shares the destination's local index (shared-memory tier), then one
+        exchange per host shift crosses the network with the relayed counts
+        piggybacked on the doorbell — exactly ``2(g−1)`` inter-node phases.
+        Otherwise the flat per-peer lowering is recorded."""
+        from repro.core.rma import alltoall as _a2a
+
+        return _a2a.lower_all_to_all(
+            self, data_window, hdr_window, source, counts, axis, n,
+            shape=tuple(shape), dtype=dtype, op=op, chunks=chunks)
 
     def order(self, first: OpRef, then: OpRef) -> None:
         """Add an explicit **completion** edge *after the fact* (``then``
@@ -468,6 +520,20 @@ class RmaPlan:
                 except ValueError as e:
                     raise PlanError(f"op {o.idx}: {e}") from None
 
+        # pass 2b — topology tier classification.  With a declared topology
+        # every comm op is billed to one of two ledgers: **intra** (its whole
+        # permute stays on one host — the op rides the shared-memory tier,
+        # owes no flush epoch, and never enters the pending queues) or
+        # **inter** (at least one pair crosses hosts — the flat treatment).
+        # Without a topology everything is inter, which keeps every
+        # pre-existing plan byte-identical.
+        tdecl = self.topology
+        for o in ops:
+            if o.kind == "compute":
+                continue
+            o.tier = ("intra" if tdecl is not None
+                      and tdecl.perm_is_intra(o.perm) else "inter")
+
         # pass 3 — stream assignment: chains inherit, independent chains
         # spread round-robin over the declared streams (max P1 concurrency)
         pos = {idx: k for k, idx in enumerate(topo)}
@@ -531,9 +597,14 @@ class RmaPlan:
                     for m in members:
                         fused_of[m] = gid
 
-        # pass 6 — schedule with coalesced flush epochs
+        # pass 6 — schedule with coalesced flush epochs.  Intra-tier ops are
+        # born completed (shared-memory completion is a store fence): they
+        # start in `flushed` and never enter `pending`, so no epoch is ever
+        # placed or billed for them — mirroring the runtime, where shm ops
+        # skip the flush-queue ledger and a flush over them drains nothing.
         steps: list[_Step] = []
-        flushed: set[int] = set()          # op idxs whose completion is paid
+        flushed: set[int] = {o.idx for o in ops
+                             if o.kind != "compute" and o.tier == "intra"}
         pending: dict[tuple, list[int]] = {}
         used_streams: dict[str, set] = {w: set() for w in self._windows}
 
@@ -582,13 +653,15 @@ class RmaPlan:
                 steps.append(_Step(kind="fused", window=o.window,
                                    stream=o.stream,
                                    group=tuple(ops[m] for m in group),
-                                   ties=tuple(dict.fromkeys(ties)), phases=1))
+                                   ties=tuple(dict.fromkeys(ties)), phases=1,
+                                   tier=o.tier))
             else:
                 steps.append(_Step(kind="op", window=o.window,
                                    stream=o.stream, op=o,
                                    ties=tuple(dict.fromkeys(ties)),
-                                   phases=self._op_phases(o)))
-            pending.setdefault(key, []).extend(group)
+                                   phases=self._op_phases(o), tier=o.tier))
+            pending.setdefault(key, []).extend(
+                m for m in group if ops[m].tier == "inter")
             used_streams[o.window].add(o.stream)
             if naive_flush:
                 emit_flush(o.window, o.stream)
@@ -611,7 +684,7 @@ class RmaPlan:
             outputs=tuple(self._outputs), exit_ties=tuple(exit_ties),
             used_streams={w: tuple(sorted(s))
                           for w, s in used_streams.items()},
-            naive=naive_flush)
+            naive=naive_flush, topology=self.topology)
 
     @staticmethod
     def _comm_ancestors(ops, o: _Op):
@@ -657,6 +730,13 @@ class CompiledPlan:
     ``phases`` is the planner's predicted lowered communication-phase count
     — the same cost model the substrate documents, so tests can assert
     ``phases == HLO collective-permute count`` and catch either side lying.
+    Under a declared topology the prediction is kept **per tier**:
+    ``phases_inter`` bills the network phases (pairs crossing a host
+    boundary), ``phases_intra`` the node-local shared-memory phases; the
+    measurement side splits the same way with
+    :func:`repro.core.rma.topology.classify_cp`, so an intra op miscounted
+    as network traffic (or vice versa) fails the per-tier assertion even
+    when the totals happen to agree.
     """
 
     name: str
@@ -667,27 +747,42 @@ class CompiledPlan:
     exit_ties: tuple
     used_streams: dict[str, tuple]
     naive: bool = False
+    topology: Topology | None = None
 
     @property
     def phases(self) -> int:
         return sum(s.phases for s in self.steps)
 
+    @property
+    def phases_inter(self) -> int:
+        """Predicted phases whose pairs cross a host boundary (NIC traffic);
+        with no declared topology this equals :attr:`phases`."""
+        return sum(s.phases for s in self.steps if s.tier == "inter")
+
+    @property
+    def phases_intra(self) -> int:
+        """Predicted node-local shared-memory phases (zero flush share —
+        intra ops never enter the epoch ledger)."""
+        return sum(s.phases for s in self.steps if s.tier == "intra")
+
     def phase_table(self) -> list[tuple[str, int]]:
-        """Per-step (label, predicted phases) — the schedule, human-readable."""
+        """Per-step (label, predicted phases) — the schedule, human-readable.
+        Node-local steps are tagged ``[intra]`` (absent on flat plans)."""
         rows = []
         for s in self.steps:
+            tag = " [intra]" if s.tier == "intra" else ""
             if s.kind == "flush":
                 rows.append((f"flush[{s.window}/{s.stream}]", s.phases))
             elif s.kind == "entry":
                 rows.append((f"entry[{s.window}/{s.stream}]", s.phases))
             elif s.kind == "fused":
                 rows.append((f"fused-put[{s.window}/{s.stream}]x"
-                             f"{len(s.group)}", s.phases))
+                             f"{len(s.group)}{tag}", s.phases))
             elif s.op.kind == "compute":
                 continue
             else:
-                rows.append((s.op.label or f"{s.op.kind}#{s.op.idx}",
-                             s.phases))
+                rows.append((f"{s.op.label or f'{s.op.kind}#{s.op.idx}'}"
+                             f"{tag}", s.phases))
         return rows
 
     # -- execute: replay the schedule ----------------------------------------
@@ -732,7 +827,8 @@ class CompiledPlan:
                     f"window {wname!r} but its substrate was allocated with "
                     f"{win.substrate.n_streams}; allocate with "
                     f"max_streams>={need}")
-            cfg = decl.config().replace(max_streams=win.substrate.n_streams)
+            cfg = decl.config().replace(max_streams=win.substrate.n_streams,
+                                        topology=self.topology)
             views[wname] = dataclasses.replace(win, config=cfg)
         env = PlanEnv(bindings, views)
         errs = jnp.zeros((), jnp.int32)
@@ -759,7 +855,8 @@ class CompiledPlan:
                     datas, step.group[0].perm,
                     offsets=[o.offset for o in step.group],
                     stream=step.stream,
-                    order=self.windows[step.window].order)
+                    order=self.windows[step.window].order,
+                    shm=step.tier == "intra")
                 views[step.window] = view._view(sub)
                 continue
             o = step.op
@@ -790,30 +887,34 @@ class CompiledPlan:
         view = views[o.window]
         sub = view.substrate
         order = decl.order
+        shm = o.tier == "intra"
         offset = self._resolve(o.offset, env)
         if o.kind == "put":
             data = self._apply_ties(self._resolve(o.source, env), step.ties,
                                     views)
             sub = sub.put(data, o.perm, offset=offset, stream=o.stream,
-                          order=order)
+                          order=order, shm=shm)
         elif o.kind == "get":
             dep = None
             for wname, s in step.ties:
                 tok = views[wname].substrate.token(s)
                 dep = tok if dep is None else _tie(dep, tok)
             sub, data = sub.get(o.perm, offset=offset, size=o.size,
-                                stream=o.stream, order=order, dep=dep)
+                                stream=o.stream, order=order, dep=dep,
+                                shm=shm)
             env.values[o.idx] = data
         elif o.kind == "send":
             data = self._apply_ties(self._resolve(o.source, env), step.ties,
                                     views)
-            sub, recvd = sub.channel_send(data, o.perm, stream=o.stream)
+            sub, recvd = sub.channel_send(data, o.perm, stream=o.stream,
+                                          shm=shm)
             env.values[o.idx] = recvd
         elif o.kind == "hop":
             piece = self._apply_ties(self._resolve(o.source, env), step.ties,
                                      views)
             cur = self._resolve(o.cur, env)
-            sub, recvd = sub.channel_send(piece, o.perm, stream=o.stream)
+            sub, recvd = sub.channel_send(piece, o.perm, stream=o.stream,
+                                          shm=shm)
             if o.path == acc_engine.PATH_SOFTWARE:
                 sub = sub.target_ack(o.perm, stream=o.stream)
             env.values[o.idx] = acc_engine.apply_op(cur, recvd, o.op)
@@ -830,13 +931,13 @@ class CompiledPlan:
             software = o.path == acc_engine.PATH_SOFTWARE
             sub = sub.rmw(data, o.perm, acc_engine.path_combine(o.path, op_name),
                           offset=offset, stream=o.stream, order=order,
-                          software=software)
+                          software=software, shm=shm)
         elif o.kind == "fetch_op":
             data = self._apply_ties(self._resolve(o.source, env), step.ties,
                                     views)
             combine = lambda cur, upd: acc_engine.apply_op(cur, upd, o.op)
             sub, old = sub.fetch_rmw(data, o.perm, combine, offset=offset,
-                                     stream=o.stream, order=order)
+                                     stream=o.stream, order=order, shm=shm)
             env.values[o.idx] = old
         elif o.kind == "put_handle":
             from repro.core.rma.memhandle import win_from_memhandle

@@ -296,8 +296,17 @@ class Substrate:
         return payload
 
     # -- transport primitives -------------------------------------------------
+    #
+    # Node-local tier: every transport op takes ``shm=False``.  ``shm=True``
+    # declares the permute same-host (see ``topology.Topology.perm_is_intra``)
+    # — the transfer rides a shared-memory window view, whose completion is a
+    # store fence, not a NIC ack — so the op is **not** entered into the
+    # flush queues: a later epoch owes it nothing, and a flush over purely
+    # node-local traffic drains an empty queue (zero phases).  The data
+    # movement itself is unchanged (one ``ppermute`` in the simulation);
+    # only the completion ledger differs.
     def put(self, data: Array, perm: Perm, *, offset=0, stream: int = 0,
-            order: bool = False) -> "Substrate":
+            order: bool = False, shm: bool = False) -> "Substrate":
         """Origin-addressed RDMA write (``MPI_Put``). One communication phase
         for static displacements; a traced displacement adds a second HLO
         ``ppermute`` for the address word."""
@@ -305,12 +314,13 @@ class Substrate:
         sent = lax.ppermute(data, self.axis, perm)
         sent_off = _ship_offset(offset, self.axis, perm)
         buf = _write(self.buffer, sent, sent_off, _is_target(self.axis, perm))
-        self.queues.note_op(stream, perm)
+        if not shm:
+            self.queues.note_op(stream, perm)
         return self.replace(buffer=buf, tokens=self.bump(stream, sent))
 
     def put_multi(self, datas: Sequence[Array], perm: Perm, *,
                   offsets: Sequence[int], stream: int = 0,
-                  order: bool = False) -> "Substrate":
+                  order: bool = False, shm: bool = False) -> "Substrate":
         """Gather-write: several same-peer puts coalesced into **one** phase.
 
         The NIC analogue is a single RDMA write with a scatter-gather list:
@@ -336,12 +346,13 @@ class Substrate:
             seg = lax.dynamic_slice_in_dim(sent, pos, d.shape[0], axis=0)
             buf = _write(buf, seg, off, is_tgt)
             pos += d.shape[0]
-        self.queues.note_op(stream, perm)
+        if not shm:
+            self.queues.note_op(stream, perm)
         return self.replace(buffer=buf, tokens=self.bump(stream, sent))
 
     def get(self, perm: Perm, *, offset=0, size: int,
             stream: int = 0, order: bool = False,
-            dep=None) -> tuple["Substrate", Array]:
+            dep=None, shm: bool = False) -> tuple["Substrate", Array]:
         """RDMA read (``MPI_Get``): request + response = 1 RTT (2 phases).
 
         The displacement is *origin*-addressed like every other transport
@@ -359,12 +370,13 @@ class Substrate:
         chunk = lax.dynamic_slice_in_dim(self.buffer, sent_off, size, axis=0)
         chunk = _tie(chunk, req_at_tgt)
         data = lax.ppermute(chunk, self.axis, _inv(perm))  # phase 2: response
-        self.queues.note_op(stream, perm)
+        if not shm:
+            self.queues.note_op(stream, perm)
         return self.replace(tokens=self.bump(stream, data)), data
 
     def rmw(self, data: Array, perm: Perm, combine: Callable[[Array, Array], Array],
             *, offset=0, stream: int = 0, order: bool = False,
-            software: bool = False) -> "Substrate":
+            software: bool = False, shm: bool = False) -> "Substrate":
         """Remote read-modify-write (the accumulate transport).
 
         ``software=True`` models the active-message path of paper §2.3: the
@@ -386,7 +398,8 @@ class Substrate:
         if software:
             new = _tie(new, self.token(stream))
         buf = _write(self.buffer, new, sent_off, _is_target(self.axis, perm))
-        self.queues.note_op(stream, perm)
+        if not shm:
+            self.queues.note_op(stream, perm)
         tok_dep = sent
         if software:
             ack = lax.ppermute(_tie(jnp.float32(1.0), new), self.axis, _inv(perm))
@@ -395,7 +408,7 @@ class Substrate:
 
     def fetch_rmw(self, data: Array, perm: Perm,
                   combine: Callable[[Array, Array], Array], *, offset=0,
-                  stream: int = 0, order: bool = False,
+                  stream: int = 0, order: bool = False, shm: bool = False,
                   ) -> tuple["Substrate", Array]:
         """Atomic fetch-and-op: always one RTT (the old value travels back).
 
@@ -413,12 +426,13 @@ class Substrate:
         new = combine(current, sent)
         buf = _write(self.buffer, new, sent_off, _is_target(self.axis, perm))
         old = lax.ppermute(current, self.axis, _inv(perm))  # phase 2
-        self.queues.note_op(stream, perm)
+        if not shm:
+            self.queues.note_op(stream, perm)
         return self.replace(buffer=buf, tokens=self.bump(stream, old)), old
 
     def compare_swap(self, compare: Array, new: Array, perm: Perm, *,
                      offset=0, stream: int = 0, order: bool = False,
-                     ) -> tuple["Substrate", Array]:
+                     shm: bool = False) -> tuple["Substrate", Array]:
         """``MPI_Compare_and_swap`` on a single element; one RTT.  The
         displacement rides the request as a shipped address word when traced
         (same protocol as ``fetch_rmw``)."""
@@ -434,7 +448,8 @@ class Substrate:
         buf = _write(self.buffer, value[None], sent_off,
                      _is_target(self.axis, perm))
         old = lax.ppermute(current, self.axis, _inv(perm))
-        self.queues.note_op(stream, perm)
+        if not shm:
+            self.queues.note_op(stream, perm)
         return self.replace(buffer=buf, tokens=self.bump(stream, old)), old
 
     def target_ack(self, perm: Perm, *, stream: int = 0) -> "Substrate":
@@ -450,7 +465,7 @@ class Substrate:
         return self.replace(tokens=self.bump(stream, ack))
 
     def channel_send(self, payload: Array, perm: Perm, *, stream: int = 0,
-                     ) -> tuple["Substrate", Array]:
+                     shm: bool = False) -> tuple["Substrate", Array]:
         """Raw one-phase transfer on a stream's issue channel.
 
         The building block the ring collectives use: the payload is tied to
@@ -460,7 +475,8 @@ class Substrate:
         """
         payload = _tie(payload, self.token(stream))
         recvd = lax.ppermute(payload, self.axis, perm)
-        self.queues.note_op(stream, perm)
+        if not shm:
+            self.queues.note_op(stream, perm)
         return self.replace(tokens=self.bump(stream, recvd)), recvd
 
     # -- the epoch engine -----------------------------------------------------

@@ -55,6 +55,11 @@ ordered put→put (P2)        2, chained, **no** ack in between
 unordered put→flush→put     4, with a full RTT barrier in the middle
 software (AM) accumulate    2  (payload + completion ack) + target
                             ``progress()`` dependence
+same-host op (``topology``  same data phases, but **no flush epoch owed**:
+declared, intra perm)       the op never enters the flush queues — shared-
+                            memory completion is a store fence, not a NIC
+                            ack — so a later flush over purely node-local
+                            traffic costs zero phases
 ==========================  =============================================
 
 Accumulate path selection (which row an ``MPI_Accumulate`` lowers to) lives
@@ -80,6 +85,7 @@ from repro.core.rma.substrate import (  # noqa: F401  (re-exported for views)
     _tie,
     _write,
 )
+from repro.core.rma.topology import Topology
 
 Array = jax.Array
 Perm = Sequence[tuple[int, int]]
@@ -131,6 +137,13 @@ class WindowConfig:
         :func:`repro.core.rma.accumulate.crossover_elems`.
       max_streams: number of issue streams (thread analogue).  Sizes the
         token array; fixed at creation.
+      topology: optional :class:`repro.core.rma.topology.Topology` declaring
+        the host×device factorization of the window's axis.  With it set,
+        any operation whose permute stays on one host rides the node-local
+        **shared-memory tier**: same data movement, but the op is never
+        entered into the flush queues (its completion is a store fence, not
+        a NIC ack), so epochs over purely same-host traffic are free.
+        ``None`` (default) is the flat declaration — every peer is remote.
     """
 
     scope: str = SCOPE_PROCESS
@@ -140,10 +153,14 @@ class WindowConfig:
     same_op: str | None = None
     max_atomic_elems: int | None = None
     max_streams: int = 1
+    topology: "Topology | None" = None
 
     def __post_init__(self):
         if self.scope not in (SCOPE_PROCESS, SCOPE_THREAD):
             raise ValueError(f"invalid scope {self.scope!r}")
+        if self.topology is not None and not isinstance(self.topology, Topology):
+            raise ValueError(
+                f"topology must be a Topology or None, got {self.topology!r}")
         if self.max_streams < 1:
             raise ValueError("max_streams must be >= 1")
         for op in self.accumulate_ops:
@@ -287,6 +304,13 @@ class Window:
     def _ordered_payload(self, payload, stream: int):
         return self.substrate.ordered_payload(payload, stream, self.config.order)
 
+    def _shm(self, perm: Perm) -> bool:
+        """Does ``perm`` ride the node-local shared-memory tier?  True only
+        when the window declares a topology and every pair stays on one
+        host — the op then skips the flush-queue ledger (see substrate)."""
+        t = self.config.topology
+        return t is not None and t.perm_is_intra(perm)
+
     def _check_stream(self, stream: int) -> None:
         if not (0 <= stream < self.config.max_streams):
             raise ValueError(
@@ -320,7 +344,8 @@ class Window:
         """
         self._check_stream(stream)
         return self._view(self.substrate.put(
-            data, perm, offset=offset, stream=stream, order=self.config.order))
+            data, perm, offset=offset, stream=stream, order=self.config.order,
+            shm=self._shm(perm)))
 
     def get(
         self,
@@ -340,7 +365,8 @@ class Window:
         """
         self._check_stream(stream)
         sub, data = self.substrate.get(
-            perm, offset=offset, size=size, stream=stream, order=self.config.order)
+            perm, offset=offset, size=size, stream=stream,
+            order=self.config.order, shm=self._shm(perm))
         return self._view(sub), data
 
     def accumulate(
@@ -388,7 +414,7 @@ class Window:
         return self._view(self.substrate.rmw(
             data, perm, _engine.path_combine(_engine.PATH_INTRINSIC, op),
             offset=offset, stream=stream, order=self.config.order,
-            software=False))
+            software=False, shm=self._shm(perm)))
 
     def _accumulate_tiled(self, data, perm, *, op, offset, stream) -> "Window":
         # Declared bandwidth path: one communication phase ships the update,
@@ -401,7 +427,7 @@ class Window:
         return self._view(self.substrate.rmw(
             data, perm, _engine.path_combine(_engine.PATH_TILED, op),
             offset=offset, stream=stream, order=self.config.order,
-            software=False))
+            software=False, shm=self._shm(perm)))
 
     def _accumulate_software(self, data, perm, *, op, offset, stream) -> "Window":
         # Software path == AM emulation; only DynamicWindow carries a real AM
@@ -414,7 +440,7 @@ class Window:
         return self._view(self.substrate.rmw(
             data, perm, _engine.path_combine(_engine.PATH_SOFTWARE, op),
             offset=offset, stream=stream, order=self.config.order,
-            software=True))
+            software=True, shm=self._shm(perm)))
 
     def fetch_op(
         self,
@@ -434,7 +460,7 @@ class Window:
         combine = lambda cur, upd: self._apply_op(cur, upd, op)
         sub, old = self.substrate.fetch_rmw(
             data, perm, combine, offset=offset, stream=stream,
-            order=self.config.order)
+            order=self.config.order, shm=self._shm(perm))
         return self._view(sub), old
 
     def compare_and_swap(
@@ -450,7 +476,7 @@ class Window:
         self._check_stream(stream)
         sub, old = self.substrate.compare_swap(
             compare, new, perm, offset=offset, stream=stream,
-            order=self.config.order)
+            order=self.config.order, shm=self._shm(perm))
         return self._view(sub), old
 
     # -- synchronization -------------------------------------------------------

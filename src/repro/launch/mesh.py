@@ -23,6 +23,21 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return make_mesh((data, model), ("data", "model"))
 
 
+def mesh_topology(mesh, axis: str):
+    """The ``g hosts × l local`` factorization of one mesh axis, or ``None``
+    for the flat treatment.
+
+    Thin launch-layer hook over :func:`repro.core.rma.topology_from_mesh`:
+    multi-host meshes are grouped by ``process_index``; single-process
+    (simulated) meshes honor the ``RMA_TOPOLOGY=GxL`` environment override.
+    Feed the result to ``make_train_step(topology=…)``,
+    ``plan_all_reduce`` / ``plan_all_to_all``, or ``RmaPlan(topology=…)``
+    so compiled plans use the hierarchical inter/intra-node lowering."""
+    from repro.core.rma.topology import topology_from_mesh
+
+    return topology_from_mesh(mesh, axis)
+
+
 MODEL_AXIS_SIZE = 16  # both production meshes have model=16
 
 
@@ -70,4 +85,5 @@ def rules_for(cfg: ModelConfig, shape: ShapeConfig, *, fsdp: bool = True) -> dic
     return rules
 
 
-__all__ = ["make_production_mesh", "make_host_mesh", "rules_for"]
+__all__ = ["make_production_mesh", "make_host_mesh", "mesh_topology",
+           "rules_for"]

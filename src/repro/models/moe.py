@@ -192,7 +192,9 @@ def _moe_ep_shard(params: dict, xt: Array, cfg, *, axis: str | None, n: int,
     divisibility padding and are excluded from routing statistics, dispatch
     and capacity."""
     from repro.core.rma.alltoall import plan_all_to_all
+    from repro.core.rma.topology import default_topology
 
+    topo = default_topology(n) if n > 1 else None
     mo = cfg.moe
     Tl, d = xt.shape
     E, k = mo.num_experts, mo.top_k
@@ -250,7 +252,7 @@ def _moe_ep_shard(params: dict, xt: Array, cfg, *, axis: str | None, n: int,
     # --- dispatch: declared one-sided all-to-all ---------------------------
     if n > 1:
         res = plan_all_to_all(payload, axis, n, counts=send_counts,
-                              order=True, declare=True)
+                              order=True, declare=True, topology=topo)
         recv, recv_counts = res.data, res.counts
     else:
         recv, recv_counts = payload, send_counts
@@ -289,7 +291,8 @@ def _moe_ep_shard(params: dict, xt: Array, cfg, *, axis: str | None, n: int,
                        ).at[order2].set(y_sorted.astype(wire_dt))
     if n > 1:
         back = plan_all_to_all(y_back, axis, n, counts=recv_counts,
-                               op="sum", order=True, declare=True)
+                               op="sum", order=True, declare=True,
+                               topology=topo)
         y_ret = back.data
     else:
         y_ret = y_back

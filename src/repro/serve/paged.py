@@ -43,19 +43,27 @@ _TRANSFER_PLANS: dict[tuple, object] = {}
 
 def transfer_plan(pool_pages: int, pages: tuple, page_elems: int, dtype,
                   perm: tuple, stream: int = 0, *,
-                  naive_flush: bool = False):
+                  naive_flush: bool = False, topology=None):
     """Build (or fetch from the build-once cache) the compiled page-push
     schedule: one :meth:`RmaPlan.put_handle` per page on the batch's ordered
     stream, one exit flush epoch — 2 phases per page (payload + handle
-    header) + 2 for the epoch, never a per-page ack."""
+    header) + 2 for the epoch, never a per-page ack.
+
+    ``topology``: the declared host factorization (see
+    ``repro.core.rma.Topology``).  A push whose ``perm`` stays on one host
+    (e.g. prefill and decode pools co-located) is classified into the
+    shared-memory tier — same 2-phase pages, but the exit epoch drains
+    nothing.  Part of the cache key: a pool re-created under a different
+    factorization never replays the old schedule."""
     from repro.core.rma.plan import RmaPlan
+    from repro.core.rma.topology import topology_fingerprint
 
     dt = jnp.dtype(dtype)
     key = (pool_pages, tuple(pages), page_elems, dt.name, perm, stream,
-           naive_flush)
+           naive_flush, topology_fingerprint(topology))
     if key in _TRANSFER_PLANS:
         return _TRANSFER_PLANS[key]
-    plan = RmaPlan(f"transfer_pages[{len(pages)}]")
+    plan = RmaPlan(f"transfer_pages[{len(pages)}]", topology=topology)
     plan.window("pool", scope="thread", order=True, max_streams=stream + 1,
                 dtype=dt, exit_epoch=True)
     plan.bind("handles", (pool_pages, 4), jnp.int32)
@@ -123,11 +131,12 @@ class PagedKVWindow:
     # -- construction ---------------------------------------------------------
     @classmethod
     def create(cls, spec: PageSpec, axis: str, axis_size: int,
-               dtype=jnp.bfloat16) -> "PagedKVWindow":
+               dtype=jnp.bfloat16, *, topology=None) -> "PagedKVWindow":
         pool = jnp.zeros((spec.n_pages * spec.page_elems,), dtype)
         win = DynamicWindow.create_dynamic(
             pool, axis, axis_size,
-            WindowConfig(scope="thread", order=True, max_streams=4),
+            WindowConfig(scope="thread", order=True, max_streams=4,
+                         topology=topology),
             max_attach=spec.n_pages, am_slots=1, am_msg=1)
         return cls(
             window=win,
@@ -225,7 +234,8 @@ class PagedKVWindow:
         trace-time use-after-release check on every replay."""
         compiled = transfer_plan(
             self.spec.n_pages, tuple(pages), self.spec.page_elems,
-            self.window.buffer.dtype, tuple(tuple(p) for p in perm), stream)
+            self.window.buffer.dtype, tuple(tuple(p) for p in perm), stream,
+            topology=self.window.config.topology)
         bindings = {"handles": self.handles}
         for i, kv in enumerate(kvs):
             bindings[f"kv{i}"] = kv.reshape(-1).astype(self.window.buffer.dtype)

@@ -52,6 +52,7 @@ def make_train_step(
     data_axis_size: int = 1,
     compressor=None,
     moe_ep: str | None = None,
+    topology=None,
 ):
     """Build ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
 
@@ -60,6 +61,14 @@ def make_train_step(
 
     ``moe_ep``: override the MoE expert-parallel dispatch mode
     (``"gspmd"`` | ``"rma"``) for this step's model; requires an MoE config.
+
+    ``topology``: the data axis's ``g hosts × l local`` factorization (a
+    ``repro.core.rma.Topology``, e.g. from ``launch.mesh.mesh_topology``);
+    ``None`` consults the ``RMA_TOPOLOGY`` environment override.  With a
+    non-degenerate factorization the ``"rma_ring"`` gradient sync replays
+    the hierarchical plan — intra-node reduce-scatter, inter-node ring over
+    host leaders, intra-node all-gather — cutting inter-node phases from
+    2(n−1) to 2(g−1) with bit-identical numerics.
     """
     if moe_ep is not None:
         if model.cfg.moe is None:
@@ -102,7 +111,11 @@ def make_train_step(
         if compressor is not None:
             return grads  # handled at caller level with state
         from repro.core.rma.collectives import plan_all_reduce
+        from repro.core.rma.topology import default_topology
         from repro.core.rma.window import Window, WindowConfig
+
+        topo = (topology if topology is not None
+                else default_topology(data_axis_size))
 
         # One window, one ring, all leaves: the whole gradient pytree is
         # synced as a single concatenated vector, so the per-step cost is
@@ -120,10 +133,11 @@ def make_train_step(
         vec = jnp.concatenate([g.reshape(-1).astype(jnp.float32) for g in flat])
         win = Window.allocate(
             vec, data_axis, data_axis_size,
-            WindowConfig(scope="thread", order=True, accumulate_ops=("sum",)))
+            WindowConfig(scope="thread", order=True, accumulate_ops=("sum",),
+                         topology=topo))
         sumwin = win.dup_with_info(same_op="sum")
         vec = plan_all_reduce(vec, data_axis, data_axis_size, order=True,
-                              win=sumwin) / data_axis_size
+                              win=sumwin, topology=topo) / data_axis_size
         out, off = [], 0
         for g, n in zip(flat, sizes):
             out.append(vec[off:off + n].reshape(g.shape))  # f32, as before

@@ -284,4 +284,90 @@ for chunks in (1, 2):
         assert meas <= pl.phases <= meas + 1, (pl.phases, meas)
         assert nv.phases > pl.phases
 print("planner acceptance (predicted vs measured vs naive) OK")
+
+# --- two-level phase matrix: topology-declared hierarchical plans --------
+# For every g×l factorization of the 8-device axis the compiled plan's
+# per-tier prediction (phases_inter, phases_intra) must equal the measured
+# HLO split (classify_cp parses each permute's source_target_pairs), the
+# hierarchical lowerings — the grad-sync ring and the MoE op="sum" combine —
+# must emit exactly 2(g-1) inter-node phases, the single-host declaration
+# (1x8) must emit zero, and the degenerate factorizations (flat, 8x1) must
+# reproduce the flat rows asserted above unchanged.  This is the per-tier
+# upgrade of the planner-acceptance predicted==measured assertion: the
+# split, not just the total, must match.
+from repro.core.rma import Topology, classify_cp
+from repro.core.rma.collectives import plan_all_reduce
+from repro.core.rma.alltoall import plan_all_to_all
+
+TOPOS = [None, Topology(1, 8), Topology(2, 4), Topology(4, 2),
+         Topology(8, 1)]
+
+def hlo_of(f, global_shape):
+    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"),
+                                 out_specs=P("x")))
+    return g.lower(jnp.zeros(global_shape, jnp.float32)).compile().as_text()
+
+print("two-level phase matrix (grad-sync ring / MoE combine):")
+for topo in TOPOS:
+    label = "flat" if topo is None else f"{topo.hosts}x{topo.local}"
+    hier = topo is not None and topo.hosts > 1 and topo.local > 1
+    g_hosts = topo.hosts if topo is not None else N
+
+    # grad-sync consumer shape: the non-lent plan_all_reduce ring
+    def fring(x, topo=topo):
+        return plan_all_reduce(x, "x", N, order=True, topology=topo)
+    ring_meas = classify_cp(hlo_of(fring, (N * 8,)), topo)
+    rp = all_reduce_plan("x", N, (8,), jnp.float32, order=True,
+                         topology=topo)
+    ring_pred = (rp.phases_inter, rp.phases_intra)
+
+    # MoE combine consumer shape: plan_all_to_all with op="sum" landings.
+    # All three outputs are consumed — with data alone, DCE strips the
+    # header-window traffic (hier plans anchor it on the doorbell payload,
+    # not an exit epoch) and the measured split undercounts.
+    def fcomb(x, topo=topo):
+        r = plan_all_to_all(x, "x", N, op="sum", topology=topo)
+        return (r.data + r.counts.sum().astype(x.dtype)
+                + r.bells.sum().astype(x.dtype))
+    comb_meas = classify_cp(hlo_of(fcomb, (N * N * 2,)), topo)
+    cp = all_to_all_plan("x", N, (N * 2,), jnp.float32, op="sum",
+                         topology=topo)
+    comb_pred = (cp.phases_inter, cp.phases_intra)
+
+    print(f"  {label:>4}: ring inter/intra={ring_meas} "
+          f"combine inter/intra={comb_meas}")
+    # per-tier predicted == measured (satellite of the planner acceptance)
+    assert ring_meas == ring_pred, (label, ring_meas, ring_pred)
+    assert comb_meas == comb_pred, (label, comb_meas, comb_pred)
+    # totals always equal the raw collective-permute count by construction;
+    # the *flat-equivalent* rows must reproduce the flat numbers exactly
+    if topo is None or topo.local == 1:
+        assert ring_meas == (2 * (N - 1), 0), (label, ring_meas)
+        assert comb_meas == ((N - 1) * 4 + 4, 0), (label, comb_meas)
+    if hier:
+        # the tentpole claim: exactly 2(g-1) inter-node phases
+        assert ring_meas[0] == 2 * (g_hosts - 1), (label, ring_meas)
+        assert comb_meas[0] == 2 * (g_hosts - 1), (label, comb_meas)
+    if topo is not None and topo.hosts == 1:
+        # single host: everything rides the shared-memory tier
+        assert ring_meas[0] == 0 and comb_meas[0] == 0, (label, ring_meas,
+                                                         comb_meas)
+print("two-level phase matrix OK")
+
+# --- topology-fingerprint cache regression: a factorization change must
+# recompile, never replay the old schedule (the caches key on the
+# fingerprint, and distinct factorizations produce distinct schedules)
+r24 = all_reduce_plan("x", N, (8,), jnp.float32, order=True,
+                      topology=Topology(2, 4))
+r42 = all_reduce_plan("x", N, (8,), jnp.float32, order=True,
+                      topology=Topology(4, 2))
+assert r24 is not r42 and r24.phases_inter != r42.phases_inter
+assert r24 is all_reduce_plan("x", N, (8,), jnp.float32, order=True,
+                              topology=Topology(2, 4)), "cache must still hit"
+c24 = all_to_all_plan("x", N, (N * 2,), jnp.float32, op="sum",
+                      topology=Topology(2, 4))
+c42 = all_to_all_plan("x", N, (N * 2,), jnp.float32, op="sum",
+                      topology=Topology(4, 2))
+assert c24 is not c42 and c24.phases_inter != c42.phases_inter
+print("topology-fingerprint cache keys OK")
 print("ALL HLO COUNT CHECKS PASSED")

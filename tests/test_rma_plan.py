@@ -399,3 +399,125 @@ def test_legacy_transfer_pages_warns_once_and_matches():
     assert len(dep) == 1
     half = 2 * spec.page_elems
     assert (out[:half] == out[half:]).all(), "wrapper != plan-native push"
+
+
+# ---------------------------------------------------------------------------
+# topology-aware hierarchical lowering (compile-level; schedules only)
+# ---------------------------------------------------------------------------
+
+from repro.core.rma import Topology, hier_applies, topology_fingerprint
+from repro.core.rma.alltoall import all_to_all_plan
+from repro.core.rma.collectives import all_reduce_plan
+
+NT = 8
+FACTS = [(1, 8), (2, 4), (4, 2), (8, 1)]
+
+# expected (inter, intra) splits for the ordered ring over 8 ranks: hier =
+# 2(g-1) leader phases + 2(l-1) shared-memory phases; degenerate shapes
+# lower flat (all-intra for 1x8, all-inter for 8x1)
+RING_SPLITS = {(1, 8): (0, 14), (2, 4): (2, 6), (4, 2): (6, 2),
+               (8, 1): (14, 0)}
+
+
+def _ring(topo, dtype=jnp.float32, order=True):
+    return all_reduce_plan("x", NT, (8,), dtype, order=order, topology=topo)
+
+
+def _a2a(topo, dtype=jnp.float32, op=None):
+    return all_to_all_plan("x", NT, (NT * 2,), dtype, op=op, topology=topo)
+
+
+def test_topology_hier_phase_split():
+    flat = _ring(None)
+    assert (flat.phases_inter, flat.phases_intra) == (2 * (NT - 1), 0)
+    for (g, l), want in RING_SPLITS.items():
+        c = _ring(Topology(g, l))
+        assert (c.phases_inter, c.phases_intra) == want, (g, l)
+        assert c.phases == c.phases_inter + c.phases_intra
+        if g > 1 and l > 1:
+            assert c.phases_inter == 2 * (g - 1)
+
+
+def test_topology_a2a_hier_phase_split():
+    for op in (None, "sum"):
+        flat = _a2a(None, op=op)
+        assert flat.phases_intra == 0
+        for g, l in FACTS:
+            topo = Topology(g, l)
+            c = _a2a(topo, op=op)
+            assert c.phases == c.phases_inter + c.phases_intra
+            if hier_applies(topo, NT, op=op):
+                assert c.phases_inter == 2 * (g - 1), (g, l, op)
+            elif l == 1:
+                assert c.phases_intra == 0
+    # the pass declines what it cannot lower hierarchically
+    t = Topology(2, 4)
+    assert not hier_applies(t, NT, chunks=2)
+    assert not hier_applies(t, NT, op="max")
+    assert not hier_applies(Topology(1, 8), NT)
+    assert not hier_applies(Topology(8, 1), NT)
+    assert not hier_applies(None, NT)
+    assert not hier_applies(t, 4)  # axis-size mismatch
+
+
+def test_topology_degenerate_compiles_to_flat_schedule():
+    """8x1 (one device per host) is the flat mesh said out loud: the
+    compiled schedule must be phase-for-phase the flat plan's."""
+    assert _ring(Topology(NT, 1)).phase_table() == _ring(None).phase_table()
+    for op in (None, "sum"):
+        assert _a2a(Topology(NT, 1), op=op).phase_table() == \
+            _a2a(None, op=op).phase_table(), op
+
+
+def test_topology_cache_fingerprint_regression():
+    """Distinct factorizations must never alias one cache entry (the bug
+    class: a mesh change replaying the old factorization's schedule)."""
+    assert topology_fingerprint(None) is None
+    assert topology_fingerprint(Topology(2, 4)) != \
+        topology_fingerprint(Topology(4, 2))
+    r24, r42 = _ring(Topology(2, 4)), _ring(Topology(4, 2))
+    assert r24 is not r42 and r24.phases_inter != r42.phases_inter
+    assert _ring(Topology(2, 4)) is r24, "repeat must hit the cache"
+    a24, a42 = _a2a(Topology(2, 4), op="sum"), _a2a(Topology(4, 2), op="sum")
+    assert a24 is not a42 and a24.phases_inter != a42.phases_inter
+
+
+def test_topology_multidevice_parity():
+    """8-device numerics: hier vs flat vs GSPMD bit-identical (integer
+    payloads) for every factorization, dtypes f32/i32/bf16, both a2a op
+    modes; train-step grads through the hierarchical sync; runtime cache
+    regression across simulated topology changes."""
+    out = _run_mdev("rma_topology.py")
+    assert "ALL TOPOLOGY CHECKS PASSED" in out
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.sampled_from(FACTS),
+           st.sampled_from([jnp.float32, jnp.int32, jnp.bfloat16]),
+           st.sampled_from([None, "sum"]),
+           st.booleans())
+    @settings(max_examples=30, deadline=None)
+    def test_topology_compile_sweep(fact, dtype, op, order):
+        """Factorization × dtype × op-mix sweep of the compile-level
+        invariants: per-tier counts always partition the total, the
+        hierarchical rewrite emits exactly 2(g-1) inter-node phases when it
+        fires, and the degenerate shapes reproduce the flat schedule."""
+        g, l = fact
+        topo = Topology(g, l)
+        flat = all_reduce_plan("x", NT, (8,), dtype, order=order)
+        c = all_reduce_plan("x", NT, (8,), dtype, order=order, topology=topo)
+        assert c.phases == c.phases_inter + c.phases_intra
+        assert flat.phases_intra == 0
+        if l == 1:
+            assert c.phase_table() == flat.phase_table()
+        if g == 1:
+            assert c.phases_inter == 0
+        if order and g > 1 and l > 1:
+            assert c.phases_inter == 2 * (g - 1)
+        fa = all_to_all_plan("x", NT, (NT * 2,), dtype, op=op)
+        a = all_to_all_plan("x", NT, (NT * 2,), dtype, op=op, topology=topo)
+        assert a.phases == a.phases_inter + a.phases_intra
+        if hier_applies(topo, NT, op=op):
+            assert a.phases_inter == 2 * (g - 1)
+        elif l == 1:
+            assert a.phase_table() == fa.phase_table()
