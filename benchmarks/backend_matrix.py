@@ -1,0 +1,190 @@
+"""Per-backend latency matrix for the plan lowering targets (``auto``'s
+calibration artifact).
+
+Each recognized macro pattern (ring all-reduce, all-to-all) is measured on
+every backend that can lower it in-mesh — the RMA substrate schedule and
+the GSPMD collective it collapses to — plus the single-host interpret
+walk as an informational point (never an ``auto`` candidate: it is a
+harness, not a mesh lowering).  Rows:
+
+* ``backend_matrix/ring/{rma,gspmd,interpret}``
+* ``backend_matrix/a2a/{rma,gspmd,interpret}``
+
+The structured artifact ``benchmarks/results/BENCH_backends.json`` carries
+the rows plus an ``auto_pick`` verdict per pattern — exactly what
+``repro.core.rma.backends.costmodel.choose`` will read back at
+``compile(backend="auto")`` time, so the suite can assert the pick is
+justified by the measurements.  Before measuring, every backend's result
+is checked bit-identical against the others (a calibration artifact must
+never bless a wrong backend).
+
+``--table`` renders an existing artifact as markdown.
+"""
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from benchmarks._harness import (N_DEV, emit, mesh1d, require_devices,
+                                 scan_op, smap, time_fn)
+from repro.core.rma import alltoall as a2a
+from repro.core.rma import collectives as coll
+from repro.core.rma.backends import costmodel
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+JSON_PATH = os.path.join(RESULTS_DIR, "BENCH_backends.json")
+
+#: in-mesh lowering targets (the ``auto`` candidates) + the host walk
+BACKENDS = ("rma", "gspmd", "interpret")
+
+
+def render_table(path: str = JSON_PATH) -> str:
+    with open(path) as f:
+        doc = json.load(f)
+    lines = ["| pattern/backend | µs/call | note |", "|:---|---:|:---|"]
+    picks = doc.get("auto_pick", {})
+    for row in doc["rows"]:
+        _, pat, backend = row["name"].split("/")
+        note = row.get("derived", "")
+        if picks.get(pat, {}).get("target") == backend:
+            note = (note + " " if note else "") + "<- auto pick"
+        lines.append(f"| {pat}/{backend} | {row['us_per_call']:.1f} | "
+                     f"{note} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--iters", type=int, default=15)
+    ap.add_argument("--size", type=int, default=64,
+                    help="per-device all-reduce elements")
+    ap.add_argument("--rows", type=int, default=4,
+                    help="all-to-all rows per peer")
+    ap.add_argument("--width", type=int, default=8,
+                    help="all-to-all row width")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes / few iters for CI")
+    ap.add_argument("--table", action="store_true")
+    args = ap.parse_args()
+    if args.table:
+        print(render_table())
+        return
+    if args.smoke:
+        args.iters, args.size, args.rows, args.width = 3, 16, 2, 4
+    require_devices()
+    mesh = mesh1d()
+    rows = []
+
+    def record(name, us, derived=""):
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+
+    def measure(body, x0):
+        fn, k = scan_op(body, 8)
+        g = smap(fn, mesh, in_specs=P(), out_specs=P("x"))
+        # best-of-two medians: the auto verdict should reflect the
+        # schedules, not scheduler jitter on the shared CI host
+        return min(time_fn(g, ((x0,),), k_inner=k, iters=args.iters)
+                   for _ in range(2))
+
+    def measure_host(fn, x0):
+        # interpret runs with no mesh: time the jitted host walk directly
+        import jax
+
+        g = jax.jit(fn)
+        return time_fn(g, (x0,), iters=args.iters)
+
+    # --- the two macro patterns, integer-valued payloads (exact sums) ------
+    ring_shard = np.arange(args.size, dtype=np.float32) % 7
+    ring_x = jnp.asarray(ring_shard)
+    ring_stacked = jnp.asarray(
+        np.broadcast_to(ring_shard, (N_DEV, args.size)).copy())
+
+    a2a_shape = (N_DEV * args.rows, args.width)
+    a2a_full = np.arange(N_DEV * a2a_shape[0] * args.width,
+                         dtype=np.float32).reshape((N_DEV,) + a2a_shape) % 13
+    a2a_x0 = jnp.asarray(a2a_full[0])
+    a2a_stacked = jnp.asarray(a2a_full)
+
+    def ring_body(backend):
+        def body(carry, backend=backend):
+            x, = carry
+            return (coll.plan_all_reduce(x, "x", N_DEV, order=True,
+                                         backend=backend) / N_DEV,)
+        return body
+
+    def a2a_body(backend):
+        def body(carry, backend=backend):
+            x, = carry
+            r = a2a.plan_all_to_all(x, "x", N_DEV, op="sum", backend=backend)
+            return (r.data / N_DEV,)
+        return body
+
+    def ring_host(x):
+        return coll.plan_all_reduce(x, "x", N_DEV, order=True,
+                                    backend="interpret") / N_DEV
+
+    def a2a_host(x):
+        return a2a.plan_all_to_all(x, "x", N_DEV, op="sum",
+                                   backend="interpret").data / N_DEV
+
+    # --- conformance gate: never calibrate off a wrong backend -------------
+    ring_out = {}
+    for backend in ("rma", "gspmd"):
+        g = smap(lambda v, b=backend: coll.plan_all_reduce(
+            v, "x", N_DEV, order=True, backend=b), mesh)
+        ring_out[backend] = np.asarray(g(ring_stacked.reshape(-1)))
+    ring_out["interpret"] = np.asarray(
+        ring_host(ring_stacked) * N_DEV).reshape(-1)
+    a2a_out = {}
+    for backend in ("rma", "gspmd"):
+        g = smap(lambda v, b=backend: a2a.plan_all_to_all(
+            v, "x", N_DEV, op="sum", backend=b).data, mesh)
+        a2a_out[backend] = np.asarray(g(a2a_stacked.reshape(
+            (-1,) + a2a_shape[1:])))
+    a2a_out["interpret"] = np.asarray(
+        a2a_host(a2a_stacked) * N_DEV).reshape(a2a_out["rma"].shape)
+    for name, outs in (("ring", ring_out), ("a2a", a2a_out)):
+        for backend in ("gspmd", "interpret"):
+            assert (outs[backend] == outs["rma"]).all(), \
+                f"{name}: {backend} != rma — refusing to calibrate"
+    print("# conformance: all backends bit-identical, calibrating",
+          flush=True)
+
+    # --- the matrix --------------------------------------------------------
+    for pat, make_body, x0, host_fn, host_x in (
+            ("ring", ring_body, ring_x, ring_host, ring_stacked),
+            ("a2a", a2a_body, a2a_x0, a2a_host, a2a_stacked)):
+        table = {}
+        for backend in BACKENDS:
+            if backend == "interpret":
+                us = measure_host(host_fn, host_x)
+                note = "single-host walk (not an auto candidate)"
+            else:
+                us = measure(make_body(backend), x0)
+                note = ""
+            table[backend] = us
+            record(f"backend_matrix/{pat}/{backend}", us, note)
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    # the pick must come from the same reader compile(backend="auto") uses,
+    # pointed at the artifact we are about to finalize — write rows first,
+    # read them back through costmodel, then stamp the verdict
+    with open(JSON_PATH, "w") as f:
+        json.dump({"section": "backends", "rows": rows}, f, indent=1)
+    auto_pick = {}
+    for pat in ("ring", "a2a"):
+        target, reason = costmodel.choose(pat, JSON_PATH)
+        auto_pick[pat] = {"target": target, "reason": reason}
+        print(f"# auto[{pat}] -> {target}: {reason}", flush=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump({"section": "backends", "rows": rows,
+                   "auto_pick": auto_pick}, f, indent=1)
+    print(f"# wrote {JSON_PATH} ({len(rows)} rows)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,8 @@ Sections:
                      execute-many replay, planned/hand-tuned/naive phases
   hier_collectives — topology-aware hierarchical plans vs flat: per-tier
                      phase splits + wall-clock across g×l factorizations
+  backend_matrix   — plan lowering targets (rma / gspmd / interpret) per
+                     macro pattern; calibrates ``compile(backend="auto")``
   roofline         — §Roofline summary from the dry-run artifacts (if present)
 
 ``--summary`` skips running and merges every existing BENCH_*.json under
@@ -46,6 +48,7 @@ MODULES = [
     "benchmarks.serve_disagg",
     "benchmarks.plan_overhead",
     "benchmarks.hier_collectives",
+    "benchmarks.backend_matrix",
 ]
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")

@@ -175,6 +175,36 @@ def hier_split():
     return classify_cp(txt, TOPO)
 
 
+# --- the backend tour: one plan, three lowering targets (docs/rma_plan.md) --
+# The SAME recorded ring all-reduce compiles to (a) the RMA substrate
+# schedule, (b) the GSPMD collective it is recognized as (permute-free
+# ``lax.psum``), and (c) a meshless single-host walk.  Same numerics on all
+# three — the plan is the portable artifact, the target a compile knob.
+ring_gspmd = all_reduce_plan("x", N, (8,), jnp.float32, order=True,
+                             backend="gspmd")
+
+
+def ring_on(backend):
+    def body(buf):
+        return plan_all_reduce(buf[:8], "x", N, order=True, backend=backend)
+    return body
+
+
+def backend_tour():
+    shard = jnp.arange(8, dtype=jnp.float32) % 5
+    outs = {}
+    for backend in ("rma", "gspmd"):
+        g = jax.jit(compat.shard_map(ring_on(backend), mesh=mesh,
+                                     in_specs=P(), out_specs=P("x"),
+                                     check_vma=False))
+        outs[backend] = g(jnp.pad(shard, (0, 8)))[:8]
+    # interpret: no mesh at all — the consumer takes stacked (n, ...) rows
+    stacked = jnp.broadcast_to(shard, (N, 8))
+    outs["interpret"] = plan_all_reduce(stacked, "x", N, order=True,
+                                        backend="interpret")[0]
+    return outs
+
+
 def main():
     print("pattern phase counts (collective-permutes in lowered HLO):")
     p1, p2 = phases(listing1), phases(listing2)
@@ -209,6 +239,19 @@ def main():
           f"<- 2(g-1) inter-node")
     assert (inter, intra) == (ring_hier.phases_inter, ring_hier.phases_intra)
     assert inter == 2 * (TOPO.hosts - 1) < ring_flat.phases_inter
+    # the backend tour: same plan, three lowering targets, same numerics
+    outs = backend_tour()
+    assert (outs["gspmd"] == outs["rma"]).all()
+    assert (outs["interpret"] == outs["rma"]).all()
+    bg = phases(ring_on("gspmd"))
+    print(f"  ring backend=rma:           {ring_flat.phases} phases "
+          f"(substrate schedule)")
+    print(f"  ring backend=gspmd:         {bg} permutes  <- macro lowered "
+          f"to lax.psum, {ring_gspmd.phases} phases")
+    print(f"  ring backend=interpret:     meshless host walk, "
+          f"same result on all three")
+    assert ring_gspmd.backend == "gspmd" and ring_gspmd.phases == 0
+    assert bg == 0
     # P3: the capability query applications use to pick an algorithm
     print("win_op_intrinsic('sum,cas', 8, int32):",
           win_op_intrinsic("sum,cas", 8, jnp.int32))

@@ -29,6 +29,11 @@ class MoEConfig:
     #: the expert axis through the one-sided declared-usage collective
     #: (repro.core.rma.alltoall; see docs/moe_ep.md).
     ep_mode: str = "gspmd"
+    #: lowering backend for the ``ep_mode="rma"`` dispatch/combine plans:
+    #: "rma" (the substrate), "gspmd" (recognized macros collapse to
+    #: lax.all_to_all), or "auto" (calibrated cost-model pick); the
+    #: host-side "interpret" target is invalid inside a mesh.
+    ep_backend: str = "rma"
 
     def capacity(self, tokens: int) -> int:
         c = math.ceil(tokens * self.top_k * self.capacity_factor / self.num_experts)

@@ -94,6 +94,14 @@ from repro.core.rma.plan import (
     PlanResult,
     RmaPlan,
 )
+from repro.core.rma.backends import (
+    BACKEND_NAMES,
+    Backend,
+    InterpretResult,
+    choose_backend,
+    interpret_plan,
+    vmapped_execute,
+)
 
 __all__ = [
     "Substrate",
@@ -144,4 +152,10 @@ __all__ = [
     "PlanResult",
     "PlanError",
     "OpRef",
+    "BACKEND_NAMES",
+    "Backend",
+    "InterpretResult",
+    "choose_backend",
+    "interpret_plan",
+    "vmapped_execute",
 ]

@@ -376,7 +376,8 @@ def all_to_all_plan(axis: str, n: int, shape, dtype, *, chunks: int = 1,
                     order: bool = True, declare: bool = True,
                     op: str | None = None, lent: bool = False,
                     naive_flush: bool = False,
-                    topology: Topology | None = None):
+                    topology: Topology | None = None,
+                    backend: str = "rma"):
     """Build (or fetch from the build-once cache) the compiled all-to-all
     plan for one static configuration.  ``shape`` is the full ``(n*m, ...)``
     payload shape.  The recorded pattern is the module docstring's: per peer
@@ -389,12 +390,21 @@ def all_to_all_plan(axis: str, n: int, shape, dtype, *, chunks: int = 1,
     :func:`hier_applies` the exchange is recorded as the hierarchical
     two-stage relay (``2(g−1)`` inter-node phases; header words consumed by
     doorbell instead of an exit epoch); the fingerprint is part of the cache
-    key so factorizations never alias."""
+    key so factorizations never alias.
+
+    ``backend``: the lowering target (``"auto" | "rma" | "gspmd" |
+    "interpret"``) threaded to :meth:`RmaPlan.compile`.  ``"auto"`` is
+    resolved to a concrete target *before* the cache key is formed — an
+    environment-dependent decision must never be a cache key."""
     from repro.core.rma.plan import RmaPlan
 
+    if backend == "auto":
+        from repro.core.rma.backends import costmodel as _costmodel
+
+        backend = _costmodel.choose("a2a")[0]
     dt = jnp.dtype(dtype)
     key = (axis, n, tuple(shape), dt.name, chunks, order, declare, op, lent,
-           naive_flush, topology_fingerprint(topology))
+           naive_flush, topology_fingerprint(topology), backend)
     if key in _A2A_PLANS:
         return _A2A_PLANS[key]
     streams = (0, 1) if n > 2 else (0,)
@@ -418,9 +428,49 @@ def all_to_all_plan(axis: str, n: int, shape, dtype, *, chunks: int = 1,
     plan.output("out", out)
     plan.output("counts", cnts)
     plan.output("bells", bells)
-    compiled = plan.compile(naive_flush=naive_flush)
+    compiled = plan.compile(naive_flush=naive_flush, backend=backend)
     _A2A_PLANS[key] = compiled
     return compiled
+
+
+def _interpret_all_to_all(x: Array, axis: str, n: int, *, counts, chunks,
+                          order, declare, op,
+                          topology: Topology | None) -> AllToAllResult:
+    """Host-side ``plan_all_to_all``: ``x`` is the stacked
+    ``(n, n*m, ...)`` array of every rank's payload (``counts`` stacked
+    ``(n, n)``); the same compiled schedule is run by the interpret
+    backend and the stacked :class:`AllToAllResult` returned."""
+    from repro.core.rma.backends.interpret import interpret_plan
+
+    if x.ndim < 2 or x.shape[0] != n:
+        raise ValueError(
+            f"backend='interpret' expects stacked input with leading dim "
+            f"{n} (one slot per rank), got shape {tuple(x.shape)}")
+    if x.shape[1] % n:
+        raise ValueError(
+            f"per-rank leading dim {x.shape[1]} not divisible by axis "
+            f"size {n}")
+    m = x.shape[1] // n
+    if m % chunks:
+        raise ValueError(f"per-peer rows {m} not divisible by chunks={chunks}")
+    if counts is None:
+        counts = jnp.full((n, n), m, jnp.int32)
+    if counts.shape != (n, n):
+        raise ValueError(
+            f"stacked counts must have shape ({n}, {n}), got {counts.shape}")
+    counts = counts.astype(jnp.int32)
+    if n == 1:
+        return AllToAllResult(x, counts, jnp.zeros((1, 1), jnp.int32))
+    compiled = all_to_all_plan(axis, n, x.shape[1:], x.dtype, chunks=chunks,
+                               order=order, declare=declare, op=op,
+                               lent=False, topology=topology,
+                               backend="interpret")
+    res = interpret_plan(
+        compiled,
+        {"data": jnp.zeros_like(x), "hdr": jnp.zeros((n, 2 * n), jnp.int32)},
+        {"x": x, "counts": counts}, axis=axis)
+    return AllToAllResult(res.outputs["out"], res.outputs["counts"],
+                          res.outputs["bells"])
 
 
 def plan_all_to_all(
@@ -435,6 +485,7 @@ def plan_all_to_all(
     op: str | None = None,
     win: Window | None = None,
     topology: Topology | None = None,
+    backend: str = "rma",
 ) -> AllToAllResult:
     """Plan-native one-sided all-to-all: replay the cached compiled schedule
     on this step's payload.  Same semantics and lowered phase structure as
@@ -444,8 +495,25 @@ def plan_all_to_all(
     ``topology``: declared host topology (``None`` consults the
     ``RMA_TOPOLOGY`` environment override via ``default_topology``); when
     :func:`hier_applies` the replayed plan is the hierarchical relay —
-    identical results, 2(g−1) inter-node phases."""
+    identical results, 2(g−1) inter-node phases.
+
+    ``backend``: the lowering target.  ``"rma"``/``"gspmd"``/``"auto"``
+    replay in-mesh (inside ``shard_map``); ``"interpret"`` runs the same
+    schedule **host-side with no mesh** — ``x`` is then the stacked
+    ``(axis_size, axis_size*m, ...)`` payload (``counts`` stacked
+    ``(axis_size, axis_size)``) and the stacked result is returned."""
     n = axis_size
+    if topology is None:
+        topology = default_topology(n)
+    if backend == "interpret":
+        if win is not None:
+            raise ValueError(
+                "backend='interpret' runs host-side and cannot run on a "
+                "lent in-mesh window")
+        return _interpret_all_to_all(x, axis, n, counts=counts,
+                                     chunks=chunks, order=order,
+                                     declare=declare, op=op,
+                                     topology=topology)
     if x.shape[0] % n:
         raise ValueError(
             f"leading dim {x.shape[0]} not divisible by axis size {n}")
@@ -460,12 +528,11 @@ def plan_all_to_all(
     if n == 1:
         return AllToAllResult(x, counts, jnp.zeros((1,), jnp.int32))
 
-    if topology is None:
-        topology = default_topology(n)
     streams = (0, 1) if n > 2 else (0,)
     compiled = all_to_all_plan(axis, n, x.shape, x.dtype, chunks=chunks,
                                order=order, declare=declare, op=op,
-                               lent=win is not None, topology=topology)
+                               lent=win is not None, topology=topology,
+                               backend=backend)
     hdr_cfg = WindowConfig(scope=SCOPE_THREAD, order=order,
                            max_streams=len(streams),
                            same_op="sum" if declare else None,

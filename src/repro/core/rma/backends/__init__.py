@@ -1,0 +1,64 @@
+"""Pluggable lowering targets for :meth:`RmaPlan.compile` — the plan IR's
+backends.
+
+A compiled plan is a portable description of *what* communicates; this
+package holds the three realizations of *how*:
+
+* ``rma``       — the one-sided substrate (the default; semantics and
+  phase counts unchanged from before backends existed).
+* ``gspmd``     — recognized macro patterns (ring all-reduce, all-to-all)
+  collapsed to compiler collectives (:mod:`.gspmd`).
+* ``interpret`` — the whole schedule executed on stacked host arrays with
+  no mesh (:mod:`.interpret`), for single-device runs and as the
+  conformance suite's independent second opinion.
+
+``backend="auto"`` picks between ``rma`` and ``gspmd`` per macro from the
+calibrated latency table (:mod:`.costmodel`, fed by
+``benchmarks/backend_matrix.py``); the verdict and its justification are
+recorded in ``CompiledPlan.lowering`` and surfaced by ``phase_table()``.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+from repro.core.rma.backends.costmodel import (AUTO_CANDIDATES, load_table)
+from repro.core.rma.backends.costmodel import choose as choose_backend
+from repro.core.rma.backends.gspmd import (execute_macro, host_macro,
+                                           macro_lowerable)
+from repro.core.rma.backends.interpret import (InterpretResult,
+                                               interpret_plan,
+                                               vmapped_execute)
+
+#: Accepted values of the ``backend=`` knob everywhere it is threaded.
+BACKEND_NAMES = ("auto", "rma", "gspmd", "interpret")
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What a lowering target provides.  The in-tree targets are module
+    shaped rather than class shaped, but both implement this surface:
+    a gate deciding whether a recorded macro can be taken over, and an
+    executor producing the macro's results."""
+
+    def macro_lowerable(self, plan, macro) -> tuple[bool, str]:
+        """``(ok, reason)`` — may this macro leave the RMA substrate?"""
+        ...
+
+    def execute_macro(self, macro, resolve) -> dict:
+        """``{result_idx: value}`` for a selected macro at execute time."""
+        ...
+
+
+__all__ = [
+    "AUTO_CANDIDATES",
+    "BACKEND_NAMES",
+    "Backend",
+    "InterpretResult",
+    "choose_backend",
+    "execute_macro",
+    "host_macro",
+    "interpret_plan",
+    "load_table",
+    "macro_lowerable",
+    "vmapped_execute",
+]

@@ -1,0 +1,102 @@
+"""Calibrated backend selection for plan lowering (``backend="auto"``).
+
+The paper's declare-and-specialize loop closes here: ``benchmarks/
+backend_matrix.py`` measures each recognized macro pattern (ring
+all-reduce, all-to-all) on every backend that can lower it and writes
+``benchmarks/results/BENCH_backends.json``; ``compile(backend="auto")``
+consults that artifact per macro and picks the measured-fastest target.
+
+Robustness contract (regression-tested): a missing, corrupt, or
+incomplete artifact must **never** fail a compile — :func:`choose` falls
+back to the RMA substrate and emits one :class:`UserWarning` per
+artifact path per process.  ``RMA_BACKEND_BENCH_JSON`` overrides the
+default artifact location (tests point it at ``/nonexistent`` to stay
+hermetic), mirroring the accumulate engine's ``RMA_ACC_BENCH_JSON``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+
+#: Backends ``auto`` may pick between for an in-mesh execution.  The
+#: interpret backend is excluded: it is a single-host harness, not a
+#: lowering target for a live mesh.
+AUTO_CANDIDATES = ("rma", "gspmd")
+
+_cache: dict[str, dict | None] = {}
+_warned: set[str] = set()
+
+
+def _default_bench_json() -> str:
+    override = os.environ.get("RMA_BACKEND_BENCH_JSON")
+    if override:
+        return override
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = here
+    for _ in range(5):          # backends/ -> rma -> core -> repro -> src -> repo
+        root = os.path.dirname(root)
+    return os.path.join(root, "benchmarks", "results", "BENCH_backends.json")
+
+
+def _parse(path: str) -> dict | None:
+    """``{pattern: {backend: us_per_call}}`` from the artifact, or None."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        table: dict[str, dict[str, float]] = {}
+        for row in doc["rows"]:
+            parts = row["name"].split("/")
+            if len(parts) != 3 or parts[0] != "backend_matrix":
+                continue
+            _, pattern, backend = parts
+            table.setdefault(pattern, {})[backend] = float(row["us_per_call"])
+        return table
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+
+
+def load_table(path: str | None = None) -> dict | None:
+    """The parsed latency table, cached per resolved path (an explicit
+    ``path`` bypasses nothing — it is its own cache key)."""
+    resolved = path if path is not None else _default_bench_json()
+    if resolved not in _cache:
+        _cache[resolved] = _parse(resolved)
+    return _cache[resolved]
+
+
+def _warn_once(path: str, why: str) -> None:
+    if path in _warned:
+        return
+    _warned.add(path)
+    warnings.warn(
+        f"backend='auto' falling back to the RMA substrate: {why} "
+        f"({path}) — run `python -m benchmarks.backend_matrix` to "
+        "calibrate", UserWarning, stacklevel=3)
+
+
+def choose(pattern: str, path: str | None = None) -> tuple[str, str]:
+    """Pick the lowering target for one macro ``pattern`` ("ring"/"a2a").
+
+    Returns ``(target, reason)`` with ``target in AUTO_CANDIDATES``.
+    Never raises: a missing/corrupt/incomplete artifact yields
+    ``("rma", ...)`` with a single per-path warning.
+    """
+    resolved = path if path is not None else _default_bench_json()
+    table = load_table(resolved)
+    if table is None:
+        _warn_once(resolved, "no readable BENCH_backends.json")
+        return "rma", "no calibration artifact; rma is the safe default"
+    row = table.get(pattern, {})
+    missing = [b for b in AUTO_CANDIDATES if b not in row]
+    if missing:
+        _warn_once(resolved,
+                   f"pattern {pattern!r} lacks rows for {missing}")
+        return "rma", f"incomplete calibration for {pattern!r}"
+    best = min(AUTO_CANDIDATES, key=lambda b: row[b])
+    return best, (f"measured {row[best]:.1f}us on {best} vs " +
+                  ", ".join(f"{row[b]:.1f}us on {b}"
+                            for b in AUTO_CANDIDATES if b != best))
+
+
+__all__ = ["AUTO_CANDIDATES", "choose", "load_table"]

@@ -1,0 +1,116 @@
+"""GSPMD-collectives lowering target for recognized plan macros.
+
+A plan records *what* moves (``RmaPlan.ring_all_reduce`` /
+``RmaPlan.all_to_all`` bracket their recorded op ranges as macros); this
+backend replaces a whole bracketed range with the compiler collective the
+pattern is equivalent to — ``lax.psum`` for a sum ring all-reduce,
+``lax.all_to_all`` for the token exchange — and bills **zero**
+collective-permute phases for it (the XLA collective lowers to
+``all-reduce``/``all-to-all`` HLO, not to the substrate's permute chains).
+
+Equivalences (asserted bit-for-bit in ``tests/test_backends.py`` and
+``tests/mdev/rma_backends.py``):
+
+* ring(op="sum") → ``lax.psum(x, axis)``.  Float reductions may
+  reassociate relative to the sequential ring, so bit-identity claims are
+  made for integer-valued payloads (what the conformance corpus uses).
+* a2a(op=None) → tiled ``lax.all_to_all``; block ``j`` of the result is
+  what rank ``j`` sent here.
+* a2a(op="sum") → the same: the RMA lowering lands every block with an
+  accumulate into a **zero-initialized** slot, which a plain exchange
+  reproduces exactly.
+* a2a counts → ``lax.all_to_all`` of the count vector; bells → every
+  remote peer's doorbell is 1 and our own 0.
+
+:func:`macro_lowerable` is the safety gate: a macro whose interior results
+leak (an outside op consumes an intermediate, or an output exposes one)
+cannot be collapsed and stays on the RMA substrate with a recorded reason.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.rma.plan import OpRef
+
+
+def macro_lowerable(plan, macro) -> tuple[bool, str]:
+    """Whether ``macro`` may be replaced by a compiler collective.
+
+    Returns ``(ok, reason)``; ``reason`` explains a decline (recorded in
+    ``CompiledPlan.lowering`` so the conformance suite can assert *why* a
+    pattern stayed on the substrate)."""
+    if macro.kind == "ring":
+        if macro.op != "sum":
+            return False, (f"ring op {macro.op!r} has no psum equivalent")
+    elif macro.kind == "a2a":
+        if macro.op not in (None, "sum"):
+            return False, (f"a2a landing op {macro.op!r} has no "
+                           "all_to_all equivalent")
+    else:
+        return False, f"unrecognized macro kind {macro.kind!r}"
+    interior = set(range(macro.lo, macro.hi)) - {r.idx for r in macro.results}
+    for o in plan._ops:
+        if macro.lo <= o.idx < macro.hi:
+            continue
+        vrefs = {r.idx for r in o.reads}
+        vrefs.update(plan._refs_in(o.source, o.cur, o.offset, o.handle,
+                                   o.value))
+        hit = sorted(vrefs & interior)
+        if hit:
+            return False, (f"op {o.label or o.kind}#{o.idx} consumes macro "
+                           f"intermediates {hit}")
+    for name, spec in plan._outputs:
+        if isinstance(spec, OpRef) and spec.idx in interior:
+            return False, (f"output {name!r} exposes macro intermediate "
+                           f"#{spec.idx}")
+    return True, ""
+
+
+def execute_macro(macro, resolve) -> dict[int, jnp.ndarray]:
+    """Run one gspmd-selected macro in-mesh (inside the plan's
+    ``shard_map`` region) and return ``{result_idx: value}`` for the
+    macro's declared results."""
+    dt = jnp.dtype(macro.dtype)
+    if macro.kind == "ring":
+        out = lax.psum(resolve(macro.source).astype(dt), macro.axis)
+        return {macro.results[0].idx: out}
+    if macro.kind == "a2a":
+        x = resolve(macro.source).astype(dt)
+        cv = resolve(macro.counts).astype(jnp.int32)
+        n = macro.n
+        out = lax.all_to_all(x, macro.axis, 0, 0, tiled=True)
+        cnts = lax.all_to_all(cv, macro.axis, 0, 0, tiled=True)
+        bells = jnp.ones((n,), jnp.int32).at[lax.axis_index(macro.axis)].set(0)
+        return {macro.results[0].idx: out,
+                macro.results[1].idx: cnts.astype(jnp.int32),
+                macro.results[2].idx: bells}
+    raise AssertionError(macro.kind)
+
+
+def host_macro(macro, resolve) -> dict[int, jnp.ndarray]:
+    """The interpret-backend equivalent of :func:`execute_macro`: the same
+    macro evaluated on **stacked** ``(n, ...)`` host arrays, no mesh."""
+    dt = jnp.dtype(macro.dtype)
+    n = macro.n
+    if macro.kind == "ring":
+        x = resolve(macro.source).astype(dt)
+        out = jnp.broadcast_to(jnp.sum(x, axis=0, dtype=dt), x.shape)
+        return {macro.results[0].idx: out}
+    if macro.kind == "a2a":
+        x = resolve(macro.source).astype(dt)
+        cv = resolve(macro.counts).astype(jnp.int32)
+        m = macro.shape[0] // n
+        rest = x.shape[2:]
+        blocks = x.reshape((n, n, m) + rest)          # [src, dst, block]
+        out = jnp.swapaxes(blocks, 0, 1).reshape((n, n * m) + rest)
+        cnts = cv.T
+        bells = (jnp.ones((n, n), jnp.int32)
+                 - jnp.eye(n, dtype=jnp.int32))
+        return {macro.results[0].idx: out,
+                macro.results[1].idx: cnts.astype(jnp.int32),
+                macro.results[2].idx: bells}
+    raise AssertionError(macro.kind)
+
+
+__all__ = ["macro_lowerable", "execute_macro", "host_macro"]

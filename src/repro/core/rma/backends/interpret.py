@@ -1,0 +1,274 @@
+"""Single-host interpretation of compiled plans — run any plan on 1 device.
+
+The substrate executes a compiled schedule *inside* ``shard_map`` over a
+live mesh; this backend executes the **same schedule** on plain host
+arrays with an explicit leading rank dimension — no mesh, no devices, no
+``XLA_FLAGS`` device splitting.  Every window buffer and every binding is
+the *stacked* ``(n, ...)`` array of all ranks' shards; ops are applied in
+schedule order with the transport semantics the substrate documents:
+
+* ``put``      — targets receive the origin's payload cast to the buffer
+  dtype at the origin-resolved displacement.
+* ``get``      — origins receive the target's slice (buffer dtype); ranks
+  not appearing as an origin read zeros.
+* ``send``     — a raw channel transfer, no cast; non-targets read zeros.
+* ``hop``      — ``send`` + ``apply_op(cur, received, op)`` at every rank.
+* ``accumulate``/``signal`` — read-modify-write through the routed path's
+  combine (``accumulate.path_combine``), result cast to the buffer dtype.
+* ``fetch_op`` — the pre-update word is captured per origin.
+* ``compute``  — the recorded closure, evaluated per rank under
+  ``jax.vmap(..., axis_name=axis)`` so ``lax.axis_index`` works exactly as
+  it does in-mesh.
+* flush/entry epochs and token ties — no-ops: host arrays are always
+  complete (value-wise, ``_tie`` adds zero).
+* ``put_handle`` — not modeled (P5 headers need live registration state);
+  raises ``NotImplementedError``.
+
+Two entry points:
+
+* :func:`interpret_plan` — the independent op-walker above.  This is the
+  conformance suite's *second opinion*: it shares no transport code with
+  the substrate.
+* :func:`vmapped_execute` — the real ``CompiledPlan.execute`` (actual
+  substrate, actual flush ledger) run under ``vmap(axis_name=...)`` on the
+  same stacked arrays.  Differential tests assert the two agree
+  bit-for-bit, and both agree with an 8-device ``shard_map`` run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.rma import accumulate as acc_engine
+from repro.core.rma.plan import CompiledPlan, OpRef, PlanError
+from repro.core.rma.substrate import _is_static
+from repro.core.rma.window import Window
+
+
+@dataclasses.dataclass
+class InterpretResult:
+    """Stacked ``(n, ...)`` analogue of ``PlanResult``: final window
+    buffers, named outputs, and the per-rank stale-handle counter (always
+    zeros here — the handle path is not modeled)."""
+
+    buffers: dict[str, jax.Array]
+    outputs: dict[str, jax.Array]
+    err_count: jax.Array
+
+
+class _RankEnv:
+    """One rank's view of the interpreter state — duck-types ``PlanEnv``
+    for the recorded closures (op values, bindings, window buffers)."""
+
+    def __init__(self, bindings, values, buffers):
+        self._bindings = bindings
+        self._values = values
+        self._buffers = buffers
+
+    def __getitem__(self, key):
+        if isinstance(key, OpRef):
+            return self._values[key.idx]
+        return self._bindings[key]
+
+    def buffer(self, window: str):
+        return self._buffers[window]
+
+
+def _per_rank(fn, bindings, values, buffers, axis):
+    """Evaluate ``fn(env)`` for every rank at once: vmap over the stacked
+    state with the plan's axis name bound, so ``lax.axis_index(axis)``
+    resolves to the rank index."""
+    def one(b, v, bufs):
+        return fn(_RankEnv(b, v, bufs))
+
+    return jax.vmap(one, axis_name=axis)(bindings, values, buffers)
+
+
+def _off_at(off, rank):
+    """The displacement origin ``rank`` computed: static ints pass through,
+    resolved per-rank arrays yield their rank's scalar."""
+    if _is_static(off):
+        return off
+    return jnp.asarray(off[rank]).reshape(-1)[0].astype(jnp.int32)
+
+
+class _Interpreter:
+    def __init__(self, compiled: CompiledPlan, buffers, bindings, axis: str):
+        self.c = compiled
+        self.axis = axis
+        self.buffers = dict(buffers)
+        self.bindings = dict(bindings or {})
+        wnames = list(compiled.windows)
+        for wname in wnames:
+            if wname not in self.buffers:
+                raise PlanError(
+                    f"interpret() missing window buffer {wname!r}")
+        self.n = int(self.buffers[wnames[0]].shape[0])
+        for bname, (shape, dt) in compiled.bindings.items():
+            if bname not in self.bindings:
+                raise PlanError(f"interpret() missing binding {bname!r}")
+            got = self.bindings[bname]
+            if tuple(got.shape) != (self.n,) + shape or \
+                    jnp.dtype(got.dtype) != dt:
+                raise PlanError(
+                    f"binding {bname!r} expects stacked shape="
+                    f"{(self.n,) + shape} dtype={dt}, got "
+                    f"shape={tuple(got.shape)} dtype={got.dtype}")
+        self.values: dict[int, jax.Array] = {}
+
+    # -- resolution --------------------------------------------------------
+    def resolve(self, spec):
+        if isinstance(spec, OpRef):
+            return self.values[spec.idx]
+        if isinstance(spec, str):
+            return self.bindings[spec]
+        if callable(spec):
+            return _per_rank(spec, self.bindings, self.values, self.buffers,
+                             self.axis)
+        return spec
+
+    # -- transport semantics on stacked arrays -----------------------------
+    def _write(self, wname, perm, data, off):
+        """put: each target gets the origin's payload (buffer dtype) at the
+        origin-resolved displacement."""
+        buf = self.buffers[wname]
+        for s, t in perm:
+            d = data[s].astype(buf.dtype)
+            buf = buf.at[t].set(lax.dynamic_update_slice_in_dim(
+                buf[t], d, _off_at(off, s), axis=0))
+        self.buffers[wname] = buf
+
+    def _exec_comm(self, step, o):
+        decl = self.c.windows[o.window]
+        buf = self.buffers[o.window]
+        off = o.offset if _is_static(o.offset) else self.resolve(o.offset)
+        if o.kind == "put":
+            self._write(o.window, o.perm, self.resolve(o.source), off)
+        elif o.kind == "get":
+            res = jnp.zeros((self.n, o.size) + buf.shape[2:], buf.dtype)
+            for s, t in o.perm:
+                res = res.at[s].set(lax.dynamic_slice_in_dim(
+                    buf[t], _off_at(off, s), o.size, axis=0))
+            self.values[o.idx] = res
+        elif o.kind == "send":
+            data = self.resolve(o.source)
+            recvd = jnp.zeros_like(data)
+            for s, t in o.perm:
+                recvd = recvd.at[t].set(data[s])
+            self.values[o.idx] = recvd
+        elif o.kind == "hop":
+            data = self.resolve(o.source)
+            cur = self.resolve(o.cur)
+            recvd = jnp.zeros_like(data)
+            for s, t in o.perm:
+                recvd = recvd.at[t].set(data[s])
+            self.values[o.idx] = acc_engine.apply_op(cur, recvd, o.op)
+        elif o.kind in ("accumulate", "signal"):
+            if o.kind == "signal":
+                op_name = decl.same_op if decl.same_op is not None else "sum"
+                data = self.resolve(o.value)
+                if data is None:
+                    flag = acc_engine.default_flag_value(op_name, buf.dtype)
+                    data = jnp.tile(flag[None], (self.n, 1))
+            else:
+                op_name, data = o.op, self.resolve(o.source)
+            combine = acc_engine.path_combine(o.path, op_name)
+            for s, t in o.perm:
+                start = _off_at(off, s)
+                cur = lax.dynamic_slice_in_dim(buf[t], start, data.shape[1],
+                                               axis=0)
+                new = combine(cur, data[s]).astype(buf.dtype)
+                buf = buf.at[t].set(lax.dynamic_update_slice_in_dim(
+                    buf[t], new, start, axis=0))
+            self.buffers[o.window] = buf
+        elif o.kind == "fetch_op":
+            data = self.resolve(o.source)
+            old = jnp.zeros((self.n,) + tuple(data.shape[1:]), buf.dtype)
+            for s, t in o.perm:
+                start = _off_at(off, s)
+                cur = lax.dynamic_slice_in_dim(buf[t], start, data.shape[1],
+                                               axis=0)
+                old = old.at[s].set(cur)
+                new = acc_engine.apply_op(cur, data[s], o.op)
+                buf = buf.at[t].set(lax.dynamic_update_slice_in_dim(
+                    buf[t], new.astype(buf.dtype), start, axis=0))
+            self.buffers[o.window] = buf
+            self.values[o.idx] = old
+        elif o.kind == "put_handle":
+            raise NotImplementedError(
+                "the interpret backend does not model P5 memory-handle "
+                "headers (live registration state); execute put_handle "
+                "plans on the rma backend")
+        else:
+            raise AssertionError(o.kind)
+
+    # -- the walk ----------------------------------------------------------
+    def run(self) -> InterpretResult:
+        from repro.core.rma.backends import gspmd as _gspmd
+
+        for step in self.c.steps:
+            if step.kind in ("entry", "flush"):
+                continue                    # host arrays are always complete
+            if step.kind == "gspmd":
+                self.values.update(_gspmd.host_macro(step.macro,
+                                                     self.resolve))
+                continue
+            if step.kind == "fused":
+                for o in step.group:
+                    self._write(o.window, o.perm, self.resolve(o.source),
+                                o.offset)
+                continue
+            o = step.op
+            if o.kind == "compute":
+                self.values[o.idx] = _per_rank(o.fn, self.bindings,
+                                               self.values, self.buffers,
+                                               self.axis)
+                continue
+            self._exec_comm(step, o)
+
+        outputs = {name: self.resolve(spec) for name, spec in self.c.outputs}
+        return InterpretResult(buffers=dict(self.buffers), outputs=outputs,
+                               err_count=jnp.zeros((self.n,), jnp.int32))
+
+
+def interpret_plan(compiled: CompiledPlan, buffers, bindings=None, *,
+                   axis: str = "x") -> InterpretResult:
+    """Execute ``compiled`` on stacked host arrays — see module docstring.
+
+    ``buffers`` maps every plan window to its stacked ``(n, ...)`` initial
+    contents; ``bindings`` fills the declared placeholders with stacked
+    ``(n,) + declared_shape`` arrays.  ``axis`` must be the axis name the
+    plan's closures were recorded against."""
+    return _Interpreter(compiled, buffers, bindings, axis).run()
+
+
+def vmapped_execute(compiled: CompiledPlan, buffers, bindings=None, *,
+                    axis: str = "x") -> InterpretResult:
+    """The meshless *oracle*: run the real ``CompiledPlan.execute`` —
+    actual substrate, actual flush ledger — under ``vmap`` with the plan's
+    axis name bound.  Semantically the 8-device ``shard_map`` run on one
+    device; the conformance suite asserts :func:`interpret_plan` matches
+    it bit-for-bit."""
+    buffers = dict(buffers)
+    bindings = dict(bindings or {})
+    wnames = list(compiled.windows)
+    n = int(buffers[wnames[0]].shape[0])
+
+    def run(bufs, binds):
+        views = {}
+        for wname, decl in compiled.windows.items():
+            views[wname] = Window.allocate(bufs[wname], axis, n,
+                                           decl.config())
+        res = compiled.execute(views, binds)
+        return ({w: v.buffer for w, v in res.windows.items()},
+                dict(res.outputs), res.err_count)
+
+    out_bufs, outputs, errs = jax.vmap(run, axis_name=axis)(buffers, bindings)
+    return InterpretResult(buffers=out_bufs, outputs=outputs,
+                           err_count=jnp.asarray(errs).reshape((n,)))
+
+
+__all__ = ["InterpretResult", "interpret_plan", "vmapped_execute"]

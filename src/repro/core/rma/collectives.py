@@ -482,7 +482,8 @@ _RING_PLANS: dict[tuple, "object"] = {}
 def all_reduce_plan(axis: str, n: int, shape, dtype, *, order: bool = True,
                     bidirectional: bool = False, declare_op: bool = True,
                     lent: bool = False, naive_flush: bool = False,
-                    topology: Topology | None = None):
+                    topology: Topology | None = None,
+                    backend: str = "rma"):
     """Build (or fetch from the build-once cache) the compiled ring
     all-reduce plan for one static configuration.  ``shape`` is the padded
     input shape.  ``naive_flush=True`` compiles the per-op-flushing baseline
@@ -495,12 +496,22 @@ def all_reduce_plan(axis: str, n: int, shape, dtype, *, order: bool = True,
     for the same inter-node lanes) but still benefits from same-host hops
     being classified into the shared-memory tier.  The topology fingerprint
     is part of the cache key: plans compiled for different factorizations
-    never alias."""
+    never alias.
+
+    ``backend``: the lowering target (``"auto" | "rma" | "gspmd" |
+    "interpret"``) threaded to :meth:`RmaPlan.compile`.  ``"auto"`` is
+    resolved to a concrete target *before* the cache key is formed — the
+    pick depends on the calibration artifact on disk, and an environment-
+    dependent decision must never be a cache key."""
     from repro.core.rma.plan import RmaPlan
 
+    if backend == "auto":
+        from repro.core.rma.backends import costmodel as _costmodel
+
+        backend = _costmodel.choose("ring")[0]
     dt = jnp.dtype(dtype)
     key = (axis, n, tuple(shape), dt.name, order, bidirectional, declare_op,
-           lent, naive_flush, topology_fingerprint(topology))
+           lent, naive_flush, topology_fingerprint(topology), backend)
     if key in _RING_PLANS:
         return _RING_PLANS[key]
     plan = RmaPlan(f"rma_all_reduce[n={n}]", topology=topology)
@@ -530,9 +541,36 @@ def all_reduce_plan(axis: str, n: int, shape, dtype, *, order: bool = True,
         out = plan.ring_all_reduce("ring", "x", axis, n, shape=tuple(shape),
                                    dtype=dt, op="sum", stream=0)
     plan.output("out", out)
-    compiled = plan.compile(naive_flush=naive_flush)
+    compiled = plan.compile(naive_flush=naive_flush, backend=backend)
     _RING_PLANS[key] = compiled
     return compiled
+
+
+def _interpret_all_reduce(x: Array, axis: str, n: int, *, order: bool,
+                          bidirectional: bool, declare_op: bool,
+                          topology: Topology | None) -> Array:
+    """Host-side ``plan_all_reduce``: ``x`` is the stacked ``(n, *shard)``
+    array of every rank's contribution; the same compiled schedule is run
+    by the interpret backend and the stacked reduced result returned."""
+    from repro.core.rma.backends.interpret import interpret_plan
+
+    if x.shape[0] != n:
+        raise ValueError(
+            f"backend='interpret' expects stacked input with leading dim "
+            f"{n} (one slot per rank), got shape {tuple(x.shape)}")
+    orig = x.shape[1]
+    pad = (-orig) % (2 * n if bidirectional else n)
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((n, pad) + x.shape[2:], x.dtype)], axis=1)
+    compiled = all_reduce_plan(axis, n, x.shape[1:], x.dtype, order=order,
+                               bidirectional=bidirectional,
+                               declare_op=declare_op, lent=False,
+                               topology=topology, backend="interpret")
+    res = interpret_plan(compiled, {"ring": jnp.zeros_like(x)}, {"x": x},
+                         axis=axis)
+    out = res.outputs["out"]
+    return out[:, :orig] if pad else out
 
 
 def plan_all_reduce(
@@ -545,6 +583,7 @@ def plan_all_reduce(
     win: Window | None = None,
     declare_op: bool = True,
     topology: Topology | None = None,
+    backend: str = "rma",
 ) -> Array:
     """Plan-native one-sided ring all-reduce: fetch the compiled schedule
     from the build-once cache and replay it on this step's data.  Same
@@ -554,12 +593,27 @@ def plan_all_reduce(
     ``topology``: declared host topology (``None`` consults the
     ``RMA_TOPOLOGY`` environment override via ``default_topology``); with
     a non-degenerate factorization the cached plan is the hierarchical
-    rewrite — bit-identical results, 2(g−1) inter-node phases."""
+    rewrite — bit-identical results, 2(g−1) inter-node phases.
+
+    ``backend``: the lowering target.  ``"rma"``/``"gspmd"``/``"auto"``
+    replay in-mesh (inside ``shard_map``); ``"interpret"`` runs the same
+    schedule **host-side with no mesh** — ``x`` is then the stacked
+    ``(axis_size, ...)`` array of every rank's shard and the stacked
+    result is returned (the laptop mode of the same model code)."""
     n = axis_size
     if n == 1:
         return x
     if topology is None:
         topology = default_topology(n)
+    if backend == "interpret":
+        if win is not None:
+            raise ValueError(
+                "backend='interpret' runs host-side and cannot run on a "
+                "lent in-mesh window")
+        return _interpret_all_reduce(x, axis, n, order=order,
+                                     bidirectional=bidirectional,
+                                     declare_op=declare_op,
+                                     topology=topology)
     orig = x.shape[0]
     pad = (-orig) % (2 * n if bidirectional else n)
     if pad:
@@ -568,7 +622,7 @@ def plan_all_reduce(
     compiled = all_reduce_plan(axis, n, x.shape, x.dtype, order=order,
                                bidirectional=bidirectional,
                                declare_op=declare_op, lent=win is not None,
-                               topology=topology)
+                               topology=topology, backend=backend)
     streams = (0, 1) if bidirectional else (0,)
     if win is None:
         same_op = "sum" if declare_op else None

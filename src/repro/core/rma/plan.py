@@ -144,7 +144,7 @@ class _PlanWindow:
 class _Step:
     """One entry of the compiled schedule."""
 
-    kind: str                      # "op" | "flush" | "entry" | "fused"
+    kind: str            # "op" | "flush" | "entry" | "fused" | "gspmd"
     window: str | None = None
     stream: int | None = None
     op: _Op | None = None
@@ -152,6 +152,31 @@ class _Step:
     ties: tuple = ()               # ((window, stream), ...) token ties
     phases: int = 0
     tier: str = "inter"            # which ledger the phases bill to
+    macro: "_Macro | None" = None  # gspmd: the macro this step realizes
+
+
+@dataclasses.dataclass(frozen=True)
+class _Macro:
+    """A bracketed op range recorded by a collective macro
+    (:meth:`RmaPlan.ring_all_reduce` / :meth:`RmaPlan.all_to_all`) — the
+    unit of backend selection.  Ops ``[lo, hi)`` realize the pattern on the
+    RMA substrate; a backend that recognizes the pattern may take over the
+    whole range and produce ``results`` directly."""
+
+    kind: str                      # "ring" | "a2a"
+    lo: int                        # first recorded op idx (inclusive)
+    hi: int                        # one past the last recorded op idx
+    axis: str
+    n: int
+    shape: tuple
+    dtype: Any
+    op: str | None
+    source: Any
+    counts: Any = None             # a2a: counts binding/OpRef
+    chunks: int = 1
+    windows: tuple = ()
+    results: tuple = ()            # OpRefs downstream consumers may use
+    label: str = ""
 
 
 class PlanEnv:
@@ -214,6 +239,7 @@ class RmaPlan:
         self._ops: list[_Op] = []
         self._edges: list[tuple[int, int]] = []   # plan.order(first, then)
         self._outputs: list[tuple[str, Any]] = []
+        self._macros: list[_Macro] = []           # backend-selectable ranges
 
     # -- declarations ---------------------------------------------------------
     def window(self, name: str, **decl) -> str:
@@ -358,12 +384,23 @@ class RmaPlan:
         inter-node phase count from ``2(n−1)`` to ``2(g−1)``.  Without a
         topology (or at a degenerate ``g==1`` / ``l==1`` factorization) it
         records exactly the flat ring.  Returns the OpRef of the reduced
-        result."""
+        result.
+
+        The recorded range is bracketed as a :class:`_Macro`, so
+        :meth:`compile` may hand the whole pattern to a non-RMA backend
+        (``backend="gspmd"``/``"auto"``) when it recognizes it."""
         from repro.core.rma import collectives as _coll
 
-        return _coll.lower_ring_all_reduce(
+        lo = len(self._ops)
+        out = _coll.lower_ring_all_reduce(
             self, window, source, axis, n, shape=tuple(shape),
             dtype=dtype, op=op, stream=stream, label=label)
+        self._macros.append(_Macro(
+            kind="ring", lo=lo, hi=len(self._ops), axis=axis, n=n,
+            shape=tuple(shape), dtype=jnp.dtype(dtype), op=op, source=source,
+            windows=(window,), results=(out,),
+            label=label or f"ring[{window}]"))
+        return out
 
     def all_to_all(self, data_window: str, hdr_window: str, source, counts,
                    axis: str, n: int, *, shape, dtype, op: str | None = None,
@@ -379,12 +416,22 @@ class RmaPlan:
         shares the destination's local index (shared-memory tier), then one
         exchange per host shift crosses the network with the relayed counts
         piggybacked on the doorbell — exactly ``2(g−1)`` inter-node phases.
-        Otherwise the flat per-peer lowering is recorded."""
+        Otherwise the flat per-peer lowering is recorded.
+
+        Like :meth:`ring_all_reduce`, the recorded range is bracketed as a
+        :class:`_Macro` for backend selection at :meth:`compile` time."""
         from repro.core.rma import alltoall as _a2a
 
-        return _a2a.lower_all_to_all(
+        lo = len(self._ops)
+        out, cnts, bells = _a2a.lower_all_to_all(
             self, data_window, hdr_window, source, counts, axis, n,
             shape=tuple(shape), dtype=dtype, op=op, chunks=chunks)
+        self._macros.append(_Macro(
+            kind="a2a", lo=lo, hi=len(self._ops), axis=axis, n=n,
+            shape=tuple(shape), dtype=jnp.dtype(dtype), op=op, source=source,
+            counts=counts, chunks=chunks, windows=(data_window, hdr_window),
+            results=(out, cnts, bells), label=f"a2a[{data_window}]"))
+        return out, cnts, bells
 
     def order(self, first: OpRef, then: OpRef) -> None:
         """Add an explicit **completion** edge *after the fact* (``then``
@@ -422,14 +469,64 @@ class RmaPlan:
                     return None
         return None
 
-    def compile(self, *, naive_flush: bool = False) -> "CompiledPlan":
+    def compile(self, *, naive_flush: bool = False,
+                backend: str = "rma") -> "CompiledPlan":
         """Run the planner passes and freeze the schedule.
 
         ``naive_flush=True`` builds the conservative baseline instead: a
         completion epoch after *every* transport op (the per-op flushing an
         application without plans would write defensively) — used by
-        benchmarks and tests to quantify what coalescing saves."""
+        benchmarks and tests to quantify what coalescing saves.
+
+        ``backend`` selects the lowering target per recorded macro:
+
+        * ``"rma"`` (default) — everything on the one-sided substrate;
+          byte-identical to pre-backend compiles.
+        * ``"gspmd"`` — every lowerable macro collapses to its compiler
+          collective (``lax.psum``/``lax.all_to_all``), billed at zero
+          permute phases; non-lowerable macros stay on the substrate with
+          the reason recorded in :attr:`CompiledPlan.lowering`.
+        * ``"auto"`` — per-macro choice from the calibrated latency table
+          (``BENCH_backends.json``); a missing/corrupt table falls back to
+          ``rma`` with one warning, never an error.
+        * ``"interpret"`` — the RMA schedule tagged for host-side
+          execution via :meth:`CompiledPlan.interpret` (no mesh needed).
+
+        Selection is skipped under ``naive_flush`` (the baseline measures
+        the substrate's per-op flushing, which a collective would erase).
+        """
+        if backend not in ("rma", "gspmd", "interpret", "auto"):
+            raise PlanError(
+                f"unknown backend {backend!r}; expected one of 'auto', "
+                "'rma', 'gspmd', 'interpret'")
         ops = [dataclasses.replace(o) for o in self._ops]
+
+        # backend selection — decide, per recorded macro, whether its whole
+        # op range leaves the substrate for a compiler collective.  The
+        # verdict (and any decline reason) is recorded for the conformance
+        # suite; "auto" consults the calibrated cost model, which never
+        # raises (rma fallback + one warning on a bad artifact).
+        gspmd_idxs: set[int] = set()
+        gspmd_at: dict[int, _Macro] = {}
+        lowering: list[tuple] = []
+        if backend in ("gspmd", "auto") and not naive_flush:
+            from repro.core.rma.backends import costmodel as _costmodel
+            from repro.core.rma.backends import gspmd as _gspmd
+            for mac in self._macros:
+                ok, why = _gspmd.macro_lowerable(self, mac)
+                if not ok:
+                    lowering.append((mac.label, "rma", why))
+                    continue
+                if backend == "auto":
+                    target, reason = _costmodel.choose(mac.kind)
+                else:
+                    target, reason = "gspmd", "forced by backend='gspmd'"
+                lowering.append((mac.label, target, reason))
+                if target == "gspmd":
+                    gspmd_idxs.update(range(mac.lo, mac.hi))
+                    gspmd_at[mac.lo] = mac
+        resolved_backend = ("interpret" if backend == "interpret"
+                            else "gspmd" if gspmd_at else "rma")
 
         # pass 0 — dependency graph + cycle check.  Two edge classes:
         # *value* edges (dataflow: sources, reads) only constrain the
@@ -605,8 +702,12 @@ class RmaPlan:
         steps: list[_Step] = []
         flushed: set[int] = {o.idx for o in ops
                              if o.kind != "compute" and o.tier == "intra"}
+        # gspmd-selected macro ops never touch the substrate: a compiler
+        # collective is synchronous, so they too are born completed
+        flushed.update(i for i in gspmd_idxs if ops[i].kind != "compute")
         pending: dict[tuple, list[int]] = {}
         used_streams: dict[str, set] = {w: set() for w in self._windows}
+        inter_streams: dict[str, set] = {w: set() for w in self._windows}
 
         def emit_flush(wname: str, stream: int | None):
             w = self._windows[wname]
@@ -622,15 +723,29 @@ class RmaPlan:
                 flushed.update(pending.pop(k, ()))
 
         for wname, w in self._windows.items():
-            if w.entry_epoch:
+            # entry epochs drain the *caller's* in-flight ops.  Under a
+            # single-host topology every op anyone could have issued rides
+            # the shared-memory tier and is born flushed, so the epoch
+            # would drain nothing — the "born flushed" rule extends to the
+            # plan's boundary and the step is omitted entirely.
+            if w.entry_epoch and (tdecl is None or tdecl.hosts > 1):
                 strs = sorted({o.stream for o in ops
-                               if o.kind != "compute" and o.window == wname})
+                               if o.kind != "compute" and o.window == wname
+                               and o.idx not in gspmd_idxs})
                 for s in strs:
                     # caller in-flight ops: unknowable at compile; 0 predicted
                     steps.append(_Step(kind="entry", window=wname, stream=s))
 
         for idx in topo:
             o = ops[idx]
+            if idx in gspmd_idxs:
+                # a backend-selected macro: its whole range collapses into
+                # one collective step at the range head (topo order equals
+                # index order, so every value the macro consumes exists)
+                mac = gspmd_at.get(idx)
+                if mac is not None:
+                    steps.append(_Step(kind="gspmd", macro=mac, phases=0))
+                continue
             if o.kind == "compute":
                 steps.append(_Step(kind="op", op=o))
                 continue
@@ -641,6 +756,8 @@ class RmaPlan:
             ties: list[tuple] = []
             for member in group:
                 for d in sorted(ops[member].comm_sync):
+                    if d in gspmd_idxs:
+                        continue    # collective steps complete synchronously
                     u = ops[d]
                     cross = (u.window != o.window) or (u.stream != o.stream)
                     uw = self._windows[u.window]
@@ -663,20 +780,29 @@ class RmaPlan:
             pending.setdefault(key, []).extend(
                 m for m in group if ops[m].tier == "inter")
             used_streams[o.window].add(o.stream)
+            if o.tier == "inter":
+                inter_streams[o.window].add(o.stream)
             if naive_flush:
                 emit_flush(o.window, o.stream)
 
+        # exit epochs complete what the pattern itself put in flight.  Only
+        # streams that carried *inter*-tier ops owe one: a stream whose ops
+        # all rode the shared-memory tier (or a topology with one host, or
+        # a window fully taken over by a collective backend) has nothing in
+        # the ledger — emitting its flush would predict and pay phantom
+        # phases (the PR 6 "born flushed" rule, applied at plan exit).
         exit_ties: list[tuple] = []
         for wname, w in self._windows.items():
             if not w.exit_epoch:
                 continue
             if w.scope == SCOPE_THREAD:
-                for s in sorted(used_streams[wname]):
+                for s in sorted(inter_streams[wname]):
                     emit_flush(wname, s)
                     exit_ties.append((wname, s))
-            else:
+            elif inter_streams[wname]:
                 emit_flush(wname, None)
-                exit_ties.extend((wname, s) for s in sorted(used_streams[wname]))
+                exit_ties.extend((wname, s)
+                                 for s in sorted(inter_streams[wname]))
 
         return CompiledPlan(
             name=self.name, windows=dict(self._windows),
@@ -684,7 +810,8 @@ class RmaPlan:
             outputs=tuple(self._outputs), exit_ties=tuple(exit_ties),
             used_streams={w: tuple(sorted(s))
                           for w, s in used_streams.items()},
-            naive=naive_flush, topology=self.topology)
+            naive=naive_flush, topology=self.topology,
+            backend=resolved_backend, lowering=tuple(lowering))
 
     @staticmethod
     def _comm_ancestors(ops, o: _Op):
@@ -748,6 +875,12 @@ class CompiledPlan:
     used_streams: dict[str, tuple]
     naive: bool = False
     topology: Topology | None = None
+    #: resolved lowering target: "rma", "gspmd" (≥1 macro collapsed to a
+    #: compiler collective), or "interpret" (host-side tag)
+    backend: str = "rma"
+    #: per-macro selection record: (macro label, chosen target, reason) —
+    #: what the conformance suite asserts "auto" picks against
+    lowering: tuple = ()
 
     @property
     def phases(self) -> int:
@@ -767,11 +900,22 @@ class CompiledPlan:
 
     def phase_table(self) -> list[tuple[str, int]]:
         """Per-step (label, predicted phases) — the schedule, human-readable.
-        Node-local steps are tagged ``[intra]`` (absent on flat plans)."""
+        Node-local steps are tagged ``[intra]`` (absent on flat plans).
+        Non-default backends lead with a ``backend[...]`` header row and
+        render collective steps as ``gspmd:psum``/``gspmd:all_to_all`` —
+        the conformance suite asserts the chosen target off this table.
+        The header is omitted for ``rma`` so pre-backend schedule
+        comparisons (degenerate-topology == flat, benchmark reuse) stay
+        byte-identical."""
         rows = []
+        if self.backend != "rma":
+            rows.append((f"backend[{self.backend}]", 0))
         for s in self.steps:
             tag = " [intra]" if s.tier == "intra" else ""
-            if s.kind == "flush":
+            if s.kind == "gspmd":
+                coll = "psum" if s.macro.kind == "ring" else "all_to_all"
+                rows.append((f"gspmd:{coll}[{s.macro.label}]", s.phases))
+            elif s.kind == "flush":
                 rows.append((f"flush[{s.window}/{s.stream}]", s.phases))
             elif s.kind == "entry":
                 rows.append((f"entry[{s.window}/{s.stream}]", s.phases))
@@ -834,6 +978,12 @@ class CompiledPlan:
         errs = jnp.zeros((), jnp.int32)
 
         for step in self.steps:
+            if step.kind == "gspmd":
+                from repro.core.rma.backends import gspmd as _gspmd
+
+                env.values.update(_gspmd.execute_macro(
+                    step.macro, lambda spec: self._resolve(spec, env)))
+                continue
             if step.kind == "entry":
                 w = views[step.window]
                 views[step.window] = w._view(w.substrate.flush(
@@ -876,6 +1026,16 @@ class CompiledPlan:
             for wname in self.windows
         }
         return PlanResult(windows=restored, outputs=outputs, err_count=errs)
+
+    def interpret(self, buffers, bindings=None, *, axis: str = "x"):
+        """Execute this schedule on a single host with no mesh: every
+        window buffer and binding is the **stacked** ``(n, ...)`` array of
+        all ranks' shards.  Returns an ``InterpretResult`` (stacked final
+        buffers, stacked outputs).  See
+        :mod:`repro.core.rma.backends.interpret`."""
+        from repro.core.rma.backends.interpret import interpret_plan
+
+        return interpret_plan(self, buffers, bindings, axis=axis)
 
     def _apply_ties(self, value, ties, views):
         for wname, s in ties:

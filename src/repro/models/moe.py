@@ -196,6 +196,11 @@ def _moe_ep_shard(params: dict, xt: Array, cfg, *, axis: str | None, n: int,
 
     topo = default_topology(n) if n > 1 else None
     mo = cfg.moe
+    ep_backend = getattr(mo, "ep_backend", "rma")
+    if ep_backend not in ("auto", "rma", "gspmd"):
+        raise ValueError(
+            f"ep_backend={ep_backend!r} invalid for in-mesh dispatch; "
+            "expected 'auto', 'rma', or 'gspmd'")
     Tl, d = xt.shape
     E, k = mo.num_experts, mo.top_k
     E_local = E // n
@@ -252,7 +257,8 @@ def _moe_ep_shard(params: dict, xt: Array, cfg, *, axis: str | None, n: int,
     # --- dispatch: declared one-sided all-to-all ---------------------------
     if n > 1:
         res = plan_all_to_all(payload, axis, n, counts=send_counts,
-                              order=True, declare=True, topology=topo)
+                              order=True, declare=True, topology=topo,
+                              backend=ep_backend)
         recv, recv_counts = res.data, res.counts
     else:
         recv, recv_counts = payload, send_counts
@@ -292,7 +298,7 @@ def _moe_ep_shard(params: dict, xt: Array, cfg, *, axis: str | None, n: int,
     if n > 1:
         back = plan_all_to_all(y_back, axis, n, counts=recv_counts,
                                op="sum", order=True, declare=True,
-                               topology=topo)
+                               topology=topo, backend=ep_backend)
         y_ret = back.data
     else:
         y_ret = y_back

@@ -43,7 +43,8 @@ _TRANSFER_PLANS: dict[tuple, object] = {}
 
 def transfer_plan(pool_pages: int, pages: tuple, page_elems: int, dtype,
                   perm: tuple, stream: int = 0, *,
-                  naive_flush: bool = False, topology=None):
+                  naive_flush: bool = False, topology=None,
+                  backend: str = "rma"):
     """Build (or fetch from the build-once cache) the compiled page-push
     schedule: one :meth:`RmaPlan.put_handle` per page on the batch's ordered
     stream, one exit flush epoch — 2 phases per page (payload + handle
@@ -54,13 +55,20 @@ def transfer_plan(pool_pages: int, pages: tuple, page_elems: int, dtype,
     (e.g. prefill and decode pools co-located) is classified into the
     shared-memory tier — same 2-phase pages, but the exit epoch drains
     nothing.  Part of the cache key: a pool re-created under a different
-    factorization never replays the old schedule."""
+    factorization never replays the old schedule.
+
+    ``backend``: lowering target for :meth:`RmaPlan.compile`.  Page pushes
+    record no collective macro, so ``"auto"``/``"gspmd"`` resolve to the
+    substrate schedule; ``"interpret"`` compiles but cannot execute (the
+    handle path needs live registration state)."""
     from repro.core.rma.plan import RmaPlan
     from repro.core.rma.topology import topology_fingerprint
 
+    if backend == "auto":
+        backend = "rma"        # no macro to ever pick gspmd for
     dt = jnp.dtype(dtype)
     key = (pool_pages, tuple(pages), page_elems, dt.name, perm, stream,
-           naive_flush, topology_fingerprint(topology))
+           naive_flush, topology_fingerprint(topology), backend)
     if key in _TRANSFER_PLANS:
         return _TRANSFER_PLANS[key]
     plan = RmaPlan(f"transfer_pages[{len(pages)}]", topology=topology)
@@ -73,7 +81,7 @@ def transfer_plan(pool_pages: int, pages: tuple, page_elems: int, dtype,
                         lambda env, p=page: env["handles"][p], perm,
                         slot=page, stream=stream, shape=(page_elems,),
                         dtype=dt, label=f"page{page}")
-    compiled = plan.compile(naive_flush=naive_flush)
+    compiled = plan.compile(naive_flush=naive_flush, backend=backend)
     _TRANSFER_PLANS[key] = compiled
     return compiled
 
@@ -222,8 +230,8 @@ class PagedKVWindow:
         return self._replace(window=parent,
                              err_count=self.err_count + mhwin.err_count)
 
-    def push_pages(self, pages, kvs, perm, stream: int = 0,
-                   ) -> "PagedKVWindow":
+    def push_pages(self, pages, kvs, perm, stream: int = 0, *,
+                   backend: str = "rma") -> "PagedKVWindow":
         """Batched disaggregated push as a **declarative-plan replay**: the
         batch's schedule — every page issued back-to-back through its memory
         handle on one ordered stream, one thread-scoped flush epoch for the
@@ -235,7 +243,7 @@ class PagedKVWindow:
         compiled = transfer_plan(
             self.spec.n_pages, tuple(pages), self.spec.page_elems,
             self.window.buffer.dtype, tuple(tuple(p) for p in perm), stream,
-            topology=self.window.config.topology)
+            topology=self.window.config.topology, backend=backend)
         bindings = {"handles": self.handles}
         for i, kv in enumerate(kvs):
             bindings[f"kv{i}"] = kv.reshape(-1).astype(self.window.buffer.dtype)

@@ -53,6 +53,7 @@ def make_train_step(
     compressor=None,
     moe_ep: str | None = None,
     topology=None,
+    backend: str = "rma",
 ):
     """Build ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
 
@@ -69,7 +70,17 @@ def make_train_step(
     the hierarchical plan — intra-node reduce-scatter, inter-node ring over
     host leaders, intra-node all-gather — cutting inter-node phases from
     2(n−1) to 2(g−1) with bit-identical numerics.
+
+    ``backend``: the lowering target for the ``"rma_ring"`` gradient-sync
+    plan (``"auto" | "rma" | "gspmd"``); ``"auto"`` consults the
+    calibrated backend latency table.  ``"interpret"`` is host-side only
+    and invalid inside a training mesh.
     """
+    if backend not in ("auto", "rma", "gspmd"):
+        raise ValueError(
+            f"backend={backend!r} invalid for a train step; expected "
+            "'auto', 'rma', or 'gspmd' (the interpret target runs host-side "
+            "with no mesh)")
     if moe_ep is not None:
         if model.cfg.moe is None:
             raise ValueError(
@@ -137,7 +148,8 @@ def make_train_step(
                          topology=topo))
         sumwin = win.dup_with_info(same_op="sum")
         vec = plan_all_reduce(vec, data_axis, data_axis_size, order=True,
-                              win=sumwin, topology=topo) / data_axis_size
+                              win=sumwin, topology=topo,
+                              backend=backend) / data_axis_size
         out, off = [], 0
         for g, n in zip(flat, sizes):
             out.append(vec[off:off + n].reshape(g.shape))  # f32, as before

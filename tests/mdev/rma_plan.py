@@ -12,9 +12,20 @@ Asserts, on real lowered HLO:
 * the put-fusion pass collapses same-peer static-displacement puts into one
   gather-write phase, and the naive per-op-flush baseline pays strictly
   more than every planned schedule.
+
+``RMA_MDEV_BACKEND=interpret`` runs the **same plan programs** on the
+single-host interpret backend instead: no ``XLA_FLAGS`` device splitting,
+no mesh — the schedule executes on stacked host arrays, the numerics
+assertions are identical, and the real ``execute`` under ``vmap``
+(``vmapped_execute``) stands in for the eager bit-identity oracle.  HLO
+phase *measurement* is mesh-only, but the *predicted* phase counts are
+compile-time facts and stay asserted in both modes.
 """
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+INTERP = os.environ.get("RMA_MDEV_BACKEND", "rma") == "interpret"
+if not INTERP:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 os.environ["RMA_ACC_BENCH_JSON"] = "/nonexistent"
 os.environ.pop("RMA_ACC_CROSSOVER", None)
 import sys
@@ -28,21 +39,21 @@ from repro import compat
 from repro.core.rma import RmaPlan, Window, WindowConfig
 
 N = 8
-mesh = compat.make_mesh((N,), ("x",))
 PERM = tuple((i, (i + 1) % N) for i in range(N))
 
+if not INTERP:
+    mesh = compat.make_mesh((N,), ("x",))
 
-def count_cp(f, shape=(N * 16,)):
-    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"),
-                                 out_specs=P("x"), check_vma=False))
-    txt = g.lower(jnp.zeros(shape, jnp.float32)).compile().as_text()
-    return txt.count("collective-permute(")
+    def count_cp(f, shape=(N * 16,)):
+        g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"),
+                                     out_specs=P("x"), check_vma=False))
+        txt = g.lower(jnp.zeros(shape, jnp.float32)).compile().as_text()
+        return txt.count("collective-permute(")
 
-
-def run(f, x):
-    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"),
-                                 out_specs=P("x"), check_vma=False))
-    return np.asarray(g(x))
+    def run(f, x):
+        g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"),
+                                     out_specs=P("x"), check_vma=False))
+        return np.asarray(g(x))
 
 
 # --- the mixed-pattern plan -------------------------------------------------
@@ -70,27 +81,49 @@ assert tuple(compiled.used_streams["w"]) == (0, 1), compiled.used_streams
 # (declared intrinsic) + exit epochs (w: 2 streams, ctrl: 1) * 2 = 12
 assert compiled.phases == 12, compiled.phases
 
-
-def scenario(x):
-    rank = jax.lax.axis_index("x").astype(jnp.float32)
-    w = Window.allocate(x, "x", N, WindowConfig(
-        scope="thread", order=True, max_streams=2, same_op="sum",
-        accumulate_ops=("sum",)))
-    ctrl = Window.allocate(jnp.zeros((2,), jnp.int32), "x", N, WindowConfig(
-        scope="thread", order=True, same_op="sum", accumulate_ops=("sum",)))
-    res = compiled.execute(
-        {"w": w, "ctrl": ctrl},
-        {"a": jnp.full((4,), 1.0 + rank), "b": jnp.full((4,), 10.0 + rank),
-         "c": jnp.full((1,), 0.5 + rank), "one": jnp.ones((1,), jnp.int32)})
-    return jnp.concatenate([
-        res.windows["w"].buffer,
-        res.windows["ctrl"].buffer.astype(jnp.float32),
-        res.outputs["ticket"].astype(jnp.float32),
-        jnp.zeros((13,), jnp.float32),
-    ]).reshape(1, -1)
+RANKF = jnp.arange(N, dtype=jnp.float32)
+MIX_BUFS = lambda: {"w": jnp.zeros((N, 32), jnp.float32),
+                    "ctrl": jnp.zeros((N, 2), jnp.int32)}
+MIX_BINDS1 = {"a": jnp.broadcast_to((1.0 + RANKF)[:, None], (N, 4)),
+              "b": jnp.broadcast_to((10.0 + RANKF)[:, None], (N, 4)),
+              "c": (0.5 + RANKF)[:, None],
+              "one": jnp.ones((N, 1), jnp.int32)}
 
 
-out = run(scenario, jnp.zeros((N * 32,), jnp.float32))
+def mix_rows(bufs, ticket):
+    """(N, 35) row per rank: w buffer | ctrl buffer | ticket — the same
+    columns the shard_map scenario concatenates."""
+    return np.concatenate(
+        [np.asarray(bufs["w"]), np.asarray(bufs["ctrl"], dtype=np.float32),
+         np.asarray(ticket, dtype=np.float32)], axis=1)
+
+
+if INTERP:
+    res = compiled.interpret(MIX_BUFS(), MIX_BINDS1)
+    out = mix_rows(res.buffers, res.outputs["ticket"])
+else:
+    def scenario(x):
+        rank = jax.lax.axis_index("x").astype(jnp.float32)
+        w = Window.allocate(x, "x", N, WindowConfig(
+            scope="thread", order=True, max_streams=2, same_op="sum",
+            accumulate_ops=("sum",)))
+        ctrl = Window.allocate(jnp.zeros((2,), jnp.int32), "x", N,
+                               WindowConfig(scope="thread", order=True,
+                                            same_op="sum",
+                                            accumulate_ops=("sum",)))
+        res = compiled.execute(
+            {"w": w, "ctrl": ctrl},
+            {"a": jnp.full((4,), 1.0 + rank), "b": jnp.full((4,), 10.0 + rank),
+             "c": jnp.full((1,), 0.5 + rank), "one": jnp.ones((1,), jnp.int32)})
+        return jnp.concatenate([
+            res.windows["w"].buffer,
+            res.windows["ctrl"].buffer.astype(jnp.float32),
+            res.outputs["ticket"].astype(jnp.float32),
+            jnp.zeros((13,), jnp.float32),
+        ]).reshape(1, -1)
+
+    out = run(scenario, jnp.zeros((N * 32,), jnp.float32))
+
 pred = (np.arange(N) - 1) % N
 assert np.allclose(out[:, 0:4], (1.0 + pred)[:, None]), "put-a landed wrong"
 assert np.allclose(out[:, 4:8], (10.0 + pred)[:, None]), "put-b landed wrong"
@@ -98,59 +131,83 @@ assert np.allclose(out[:, 8], 0.5 + pred), "accumulate landed wrong"
 assert np.allclose(out[:, 32], 1), "fetch_op tick"
 assert np.allclose(out[:, 33], 1), "signal flag"
 assert np.allclose(out[:, 34], 0), "fetched old value"
-measured = count_cp(lambda x: scenario(x[:32]), (N * 32,))
-print("mixed plan: predicted", compiled.phases, "measured", measured)
-assert measured == compiled.phases, (measured, compiled.phases)
+if not INTERP:
+    measured = count_cp(lambda x: scenario(x[:32]), (N * 32,))
+    print("mixed plan: predicted", compiled.phases, "measured", measured)
+    assert measured == compiled.phases, (measured, compiled.phases)
+else:
+    print("mixed plan: predicted", compiled.phases,
+          "(interpret mode: numerics only)")
 
 # --- execute-many: same compiled schedule, fresh bindings, fresh windows ----
-def scenario2(x):
-    w = Window.allocate(x, "x", N, WindowConfig(
-        scope="thread", order=True, max_streams=2, same_op="sum",
-        accumulate_ops=("sum",)))
-    ctrl = Window.allocate(jnp.zeros((2,), jnp.int32), "x", N, WindowConfig(
-        scope="thread", order=True, same_op="sum", accumulate_ops=("sum",)))
-    res = compiled.execute(
-        {"w": w, "ctrl": ctrl},
-        {"a": jnp.full((4,), 100.0), "b": jnp.full((4,), 200.0),
-         "c": jnp.full((1,), 7.0), "one": jnp.full((1,), 3, jnp.int32)})
-    return jnp.concatenate(
-        [res.windows["w"].buffer,
-         res.windows["ctrl"].buffer.astype(jnp.float32),
-         jnp.zeros((14,), jnp.float32)]).reshape(1, -1)
+MIX_BINDS2 = {"a": jnp.full((N, 4), 100.0), "b": jnp.full((N, 4), 200.0),
+              "c": jnp.full((N, 1), 7.0), "one": jnp.full((N, 1), 3,
+                                                          jnp.int32)}
+if INTERP:
+    res2 = compiled.interpret(MIX_BUFS(), MIX_BINDS2)
+    out2 = mix_rows(res2.buffers, res2.outputs["ticket"])
+else:
+    def scenario2(x):
+        w = Window.allocate(x, "x", N, WindowConfig(
+            scope="thread", order=True, max_streams=2, same_op="sum",
+            accumulate_ops=("sum",)))
+        ctrl = Window.allocate(jnp.zeros((2,), jnp.int32), "x", N,
+                               WindowConfig(scope="thread", order=True,
+                                            same_op="sum",
+                                            accumulate_ops=("sum",)))
+        res = compiled.execute(
+            {"w": w, "ctrl": ctrl},
+            {"a": jnp.full((4,), 100.0), "b": jnp.full((4,), 200.0),
+             "c": jnp.full((1,), 7.0), "one": jnp.full((1,), 3, jnp.int32)})
+        return jnp.concatenate(
+            [res.windows["w"].buffer,
+             res.windows["ctrl"].buffer.astype(jnp.float32),
+             jnp.zeros((14,), jnp.float32)]).reshape(1, -1)
 
-
-out2 = run(scenario2, jnp.zeros((N * 32,), jnp.float32))
+    out2 = run(scenario2, jnp.zeros((N * 32,), jnp.float32))
 assert np.allclose(out2[:, 0:4], 100.0) and np.allclose(out2[:, 4:8], 200.0)
 assert np.allclose(out2[:, 8], 7.0) and np.allclose(out2[:, 32], 3)
 print("execute-many OK (fresh data, zero re-planning)")
 
-# --- bit-identical to the eager op-by-op sequence ---------------------------
-def eager(x):
-    rank = jax.lax.axis_index("x").astype(jnp.float32)
-    w = Window.allocate(x, "x", N, WindowConfig(
-        scope="thread", order=True, max_streams=2, same_op="sum",
-        accumulate_ops=("sum",)))
-    ctrl = Window.allocate(jnp.zeros((2,), jnp.int32), "x", N, WindowConfig(
-        scope="thread", order=True, same_op="sum", accumulate_ops=("sum",)))
-    w = w.put(jnp.full((4,), 1.0 + rank), PERM, offset=0, stream=0)
-    w = w.put(jnp.full((4,), 10.0 + rank), PERM, offset=4, stream=1)
-    w = w.accumulate(jnp.full((1,), 0.5 + rank), PERM, op="sum", offset=8,
-                     stream=0)
-    ctrl, _ = ctrl.fetch_op(jnp.ones((1,), jnp.int32), PERM, op="sum",
-                            offset=0)
-    ctrl = ctrl.accumulate(jnp.ones((1,), jnp.int32), PERM, op="sum",
-                           offset=1)
-    w = w.flush(stream=0)
-    w = w.flush(stream=1)
-    ctrl = ctrl.flush(stream=0)
-    return jnp.concatenate(
-        [w.buffer, ctrl.buffer.astype(jnp.float32),
-         jnp.zeros((14,), jnp.float32)]).reshape(1, -1)
+# --- bit-identical to the independent oracle --------------------------------
+if INTERP:
+    # the real CompiledPlan.execute (actual substrate, actual flush ledger)
+    # under vmap is the meshless stand-in for the eager sequence
+    from repro.core.rma import vmapped_execute
 
+    vres = vmapped_execute(compiled, MIX_BUFS(), MIX_BINDS1)
+    vout = mix_rows(vres.buffers, vres.outputs["ticket"])
+    assert (vout[:, :34] == out[:, :34]).all(), \
+        "interpret walk != vmapped substrate execute"
+    print("bit-identical to vmapped execute OK")
+else:
+    def eager(x):
+        rank = jax.lax.axis_index("x").astype(jnp.float32)
+        w = Window.allocate(x, "x", N, WindowConfig(
+            scope="thread", order=True, max_streams=2, same_op="sum",
+            accumulate_ops=("sum",)))
+        ctrl = Window.allocate(jnp.zeros((2,), jnp.int32), "x", N,
+                               WindowConfig(scope="thread", order=True,
+                                            same_op="sum",
+                                            accumulate_ops=("sum",)))
+        w = w.put(jnp.full((4,), 1.0 + rank), PERM, offset=0, stream=0)
+        w = w.put(jnp.full((4,), 10.0 + rank), PERM, offset=4, stream=1)
+        w = w.accumulate(jnp.full((1,), 0.5 + rank), PERM, op="sum", offset=8,
+                         stream=0)
+        ctrl, _ = ctrl.fetch_op(jnp.ones((1,), jnp.int32), PERM, op="sum",
+                                offset=0)
+        ctrl = ctrl.accumulate(jnp.ones((1,), jnp.int32), PERM, op="sum",
+                               offset=1)
+        w = w.flush(stream=0)
+        w = w.flush(stream=1)
+        ctrl = ctrl.flush(stream=0)
+        return jnp.concatenate(
+            [w.buffer, ctrl.buffer.astype(jnp.float32),
+             jnp.zeros((14,), jnp.float32)]).reshape(1, -1)
 
-ref = run(eager, jnp.zeros((N * 32,), jnp.float32))
-assert (ref[:, :34] == out[:, :34]).all(), "plan replay != eager sequence"
-print("bit-identical to eager OK")
+    ref = run(eager, jnp.zeros((N * 32,), jnp.float32))
+    assert (ref[:, :34] == out[:, :34]).all(), "plan replay != eager sequence"
+    print("bit-identical to eager OK")
 
 # --- put fusion: k same-peer static-displacement puts -> one phase ----------
 def mk_burst(fuse, naive=False):
@@ -171,23 +228,26 @@ assert unfused.phases == 5        # 3 puts + exit epoch
 assert naive.phases == 9          # 3 puts + 3 per-op epochs
 assert fused.phases < unfused.phases < naive.phases
 
-
-def burst_scenario(c):
-    def f(x):
-        w = Window.allocate(x, "x", N, WindowConfig(scope="thread",
-                                                    order=True))
-        res = c.execute({"w": w}, {
-            f"d{i}": jnp.full((4,), 1.0 + i) for i in range(3)})
-        return res.windows["w"].buffer.reshape(1, -1)
-    return f
-
-
+BURST_BINDS = {f"d{i}": jnp.full((N, 4), 1.0 + i) for i in range(3)}
 for c in (fused, unfused, naive):
-    got = count_cp(lambda x, c=c: burst_scenario(c)(x[:16]), (N * 16,))
-    assert got == c.phases, (got, c.phases)
-    vals = run(burst_scenario(c), jnp.zeros((N * 16,), jnp.float32))
+    if INTERP:
+        vals = np.asarray(c.interpret(
+            {"w": jnp.zeros((N, 16), jnp.float32)}, BURST_BINDS).buffers["w"])
+    else:
+        def burst_scenario(x, c=c):
+            w = Window.allocate(x, "x", N, WindowConfig(scope="thread",
+                                                        order=True))
+            res = c.execute({"w": w}, {
+                f"d{i}": jnp.full((4,), 1.0 + i) for i in range(3)})
+            return res.windows["w"].buffer.reshape(1, -1)
+
+        got = count_cp(lambda x, c=c: burst_scenario(x[:16], c), (N * 16,))
+        assert got == c.phases, (got, c.phases)
+        vals = run(burst_scenario, jnp.zeros((N * 16,), jnp.float32))
     assert np.allclose(vals[:, 0:4], 1.0) and np.allclose(vals[:, 8:12], 3.0)
-print("fusion predicted==measured, numerics identical across schedules")
+print("fusion " + ("numerics identical across schedules (interpret mode)"
+                   if INTERP else
+                   "predicted==measured, numerics identical across schedules"))
 
 # --- origin-addressed traced get displacement through the plan layer --------
 # origin i asks its ring successor for offset (i % 2) * 4; the target must
@@ -203,22 +263,30 @@ gplan.output("word", gref)
 gcompiled = gplan.compile()
 assert gcompiled.phases == 3 + 2, gcompiled.phases  # 2 RTT + addr word + exit
 
+GBASE = (jnp.arange(16, dtype=jnp.float32)[None, :]
+         + 100.0 * RANKF[:, None])
+if INTERP:
+    gout = np.asarray(
+        gcompiled.interpret({"w": GBASE}, {}).outputs["word"]).reshape(-1)
+else:
+    def get_scenario(x):
+        base = jnp.arange(16, dtype=jnp.float32) \
+            + 100.0 * jax.lax.axis_index("x").astype(jnp.float32)
+        w = Window.allocate(base, "x", N, WindowConfig(scope="thread",
+                                                       order=True))
+        res = gcompiled.execute({"w": w}, {})
+        return res.outputs["word"].reshape(1, 1)
 
-def get_scenario(x):
-    base = jnp.arange(16, dtype=jnp.float32) \
-        + 100.0 * jax.lax.axis_index("x").astype(jnp.float32)
-    w = Window.allocate(base, "x", N, WindowConfig(scope="thread",
-                                                   order=True))
-    res = gcompiled.execute({"w": w}, {})
-    return res.outputs["word"].reshape(1, 1)
-
-
-gout = run(get_scenario, jnp.zeros((N * 1,), jnp.float32)).reshape(-1)
+    gout = run(get_scenario, jnp.zeros((N * 1,), jnp.float32)).reshape(-1)
 want = np.array([(i % 2) * 4 + 100.0 * ((i + 1) % N) for i in range(N)])
 assert np.allclose(gout, want), (gout, want)
-gmeas = count_cp(lambda x: get_scenario(x[:1]), (N * 1,))
-assert gmeas == gcompiled.phases, (gmeas, gcompiled.phases)
-print("traced get displacement origin-addressed OK "
-      f"(predicted={gcompiled.phases} measured={gmeas})")
+if not INTERP:
+    gmeas = count_cp(lambda x: get_scenario(x[:1]), (N * 1,))
+    assert gmeas == gcompiled.phases, (gmeas, gcompiled.phases)
+    print("traced get displacement origin-addressed OK "
+          f"(predicted={gcompiled.phases} measured={gmeas})")
+else:
+    print("traced get displacement origin-addressed OK "
+          f"(predicted={gcompiled.phases}, interpret mode)")
 
 print("ALL PLAN CHECKS PASSED")

@@ -14,12 +14,19 @@ topology change (explicit and via ``RMA_TOPOLOGY``) between calls of the
 same shape must recompile — correct numerics after the switch, distinct
 compiled schedules, cache hits on repeat.
 
-Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 — or with
+``RMA_MDEV_BACKEND=interpret``, which replays the **same plan programs**
+on the single-host interpret backend: no device splitting, no mesh, same
+per-factorization bit-identity assertions on stacked host arrays (the
+mesh-only train-step section is the one part that does not apply).
 """
 import os
 import sys
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+INTERP = os.environ.get("RMA_MDEV_BACKEND", "rma") == "interpret"
+if not INTERP:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 import jax
@@ -34,19 +41,32 @@ from repro.core.rma.alltoall import plan_all_to_all
 from repro.core.rma.collectives import all_reduce_plan, plan_all_reduce
 
 N = 8
-mesh = compat.make_mesh((N,), ("x",))
 TOPOS = [None, Topology(1, 8), Topology(2, 4), Topology(4, 2),
          Topology(8, 1)]
 
+if not INTERP:
+    mesh = compat.make_mesh((N,), ("x",))
 
-def run(f, x):
-    g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"),
-                                 out_specs=P("x"), check_vma=False))
-    return np.asarray(g(x))
+    def run(f, x):
+        g = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("x"),
+                                     out_specs=P("x"), check_vma=False))
+        return np.asarray(g(x))
 
 
 def label(topo):
     return "flat" if topo is None else f"{topo.hosts}x{topo.local}"
+
+
+def ring_all(x, topo):
+    """(N, R) stacked result of the planned ring under ``topo`` — via the
+    mesh in the default mode, via the interpret backend otherwise."""
+    if INTERP:
+        return np.asarray(plan_all_reduce(x.reshape(N, -1), "x", N,
+                                          order=True, topology=topo,
+                                          backend="interpret"))
+    return run(lambda v, topo=topo: plan_all_reduce(v, "x", N, order=True,
+                                                    topology=topo),
+               x).reshape(N, -1)
 
 
 # --- ring all-reduce: every factorization bit-identical to flat and GSPMD --
@@ -55,15 +75,15 @@ key = jax.random.PRNGKey(0)
 for dtype in (jnp.float32, jnp.int32, jnp.bfloat16):
     ints = jax.random.randint(key, (N * R,), 0, 8)
     x = ints.astype(dtype)
-    ref = run(lambda v: lax.psum(v, "x"), x)  # the GSPMD collective
-    np.testing.assert_array_equal(
-        ref.reshape(N, R), np.tile(np.asarray(ints).reshape(N, R)
-                                   .sum(0, dtype=np.int64).astype(ref.dtype),
-                                   (N, 1)))
+    want = np.tile(np.asarray(ints).reshape(N, R).sum(0, dtype=np.int64),
+                   (N, 1))
+    if INTERP:
+        ref = np.asarray(want, np.asarray(x).dtype)
+    else:
+        ref = run(lambda v: lax.psum(v, "x"), x).reshape(N, R)
+        np.testing.assert_array_equal(ref, want.astype(ref.dtype))
     for topo in TOPOS:
-        def fring(v, topo=topo):
-            return plan_all_reduce(v, "x", N, order=True, topology=topo)
-        got = run(fring, x)
+        got = ring_all(x, topo)
         assert (got == ref).all(), (label(topo), dtype)
     print(f"ring all-reduce {jnp.dtype(dtype).name}: "
           "all factorizations bit-identical to GSPMD")
@@ -75,92 +95,111 @@ cnts = jnp.arange(N, dtype=jnp.int32) % (M + 1)
 for op in (None, "sum"):
     outs = {}
     for topo in TOPOS:
-        def fa2a(v, topo=topo, op=op):
-            r = plan_all_to_all(v, "x", N, op=op, counts=cnts, topology=topo)
-            return jnp.concatenate(
-                [r.data.reshape(-1), r.counts.astype(jnp.float32),
-                 r.bells.astype(jnp.float32)])
-        outs[label(topo)] = run(fa2a, xa)
+        if INTERP:
+            r = plan_all_to_all(xa.reshape(N, N * M, D), "x", N, op=op,
+                                counts=jnp.tile(cnts[None], (N, 1)),
+                                topology=topo, backend="interpret")
+            outs[label(topo)] = np.concatenate(
+                [np.asarray(r.data).reshape(N, -1),
+                 np.asarray(r.counts, np.float32),
+                 np.asarray(r.bells, np.float32)], axis=1)
+        else:
+            def fa2a(v, topo=topo, op=op):
+                r = plan_all_to_all(v, "x", N, op=op, counts=cnts,
+                                    topology=topo)
+                return jnp.concatenate(
+                    [r.data.reshape(-1), r.counts.astype(jnp.float32),
+                     r.bells.astype(jnp.float32)])
+            outs[label(topo)] = run(fa2a, xa)
     for name, out in outs.items():
         assert (out == outs["flat"]).all(), (op, name)
     if op is None:
         # GSPMD reference for the plain exchange: lax.all_to_all moves the
         # same blocks (valid-row masking is the caller's job, as in MoE)
-        def fref(v):
-            return jnp.concatenate(
-                [lax.all_to_all(v.reshape(N, M, D), "x", 0, 0,
-                                tiled=False).reshape(-1),
-                 jnp.zeros((2 * N,), jnp.float32)])
-        ref = run(fref, xa)
         nd = N * M * D
         got = outs["flat"].reshape(N, -1)
-        want = ref.reshape(N, -1)
-        assert (got[:, :nd] == want[:, :nd]).all(), "flat a2a != GSPMD"
+        if INTERP:
+            blocks = np.asarray(xa).reshape(N, N, M * D)
+            want = np.swapaxes(blocks, 0, 1).reshape(N, nd)
+        else:
+            def fref(v):
+                return jnp.concatenate(
+                    [lax.all_to_all(v.reshape(N, M, D), "x", 0, 0,
+                                    tiled=False).reshape(-1),
+                     jnp.zeros((2 * N,), jnp.float32)])
+            want = run(fref, xa).reshape(N, -1)[:, :nd]
+        assert (got[:, :nd] == want).all(), "flat a2a != GSPMD"
     print(f"all-to-all op={op}: all factorizations bit-identical to flat")
 
 # --- train step: hierarchical grad sync vs flat vs the reference update ----
-from repro.configs.tiny import tiny_config
-from repro.models import build_model
-from repro.train.optimizer import OptimizerConfig, adamw_update, \
-    init_opt_state
-from repro.train.trainstep import make_train_step
+if not INTERP:
+    from repro.configs.tiny import tiny_config
+    from repro.models import build_model
+    from repro.train.optimizer import OptimizerConfig, adamw_update, \
+        init_opt_state
+    from repro.train.trainstep import make_train_step
 
-mesh_d = compat.make_mesh((N,), ("data",))
-cfg = tiny_config("qwen3-4b")
-model = build_model(cfg)
-params = model.init(key)
-opt = init_opt_state(params)
-opt_cfg = OptimizerConfig(peak_lr=1e-2, warmup_steps=0, total_steps=10)
-B, S = 16, 16
-batch = {
-    "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
-    "labels": jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0,
-                                 cfg.vocab),
-}
-grads_ref = jax.grad(lambda p: model.loss(p, batch)[0])(params)
-params_ref, _, _ = adamw_update(grads_ref, opt, params, opt_cfg)
+    mesh_d = compat.make_mesh((N,), ("data",))
+    cfg = tiny_config("qwen3-4b")
+    model = build_model(cfg)
+    params = model.init(key)
+    opt = init_opt_state(params)
+    opt_cfg = OptimizerConfig(peak_lr=1e-2, warmup_steps=0, total_steps=10)
+    B, S = 16, 16
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0,
+                                     cfg.vocab),
+    }
+    grads_ref = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    params_ref, _, _ = adamw_update(grads_ref, opt, params, opt_cfg)
 
-results = {}
-for name, topo in (("flat", None), ("2x4", Topology(2, 4))):
-    step = make_train_step(model, opt_cfg, grad_sync="rma_ring",
-                           data_axis="data", data_axis_size=N, topology=topo)
-    jstep = jax.jit(compat.shard_map(
-        step, mesh=mesh_d, in_specs=(P(), P(), P("data")),
-        out_specs=(P(), P(), P()), check_vma=False))
-    new_params, _, metrics = jstep(params, opt, batch)
-    results[name] = new_params
-    for a, b in zip(jax.tree.leaves(new_params),
-                    jax.tree.leaves(params_ref)):
-        # reassociated ring adds vs the fused reference reduce, amplified
-        # by Adam's 1/sqrt(v) — same tolerance as the flat acceptance
+    results = {}
+    for name, topo in (("flat", None), ("2x4", Topology(2, 4))):
+        step = make_train_step(model, opt_cfg, grad_sync="rma_ring",
+                               data_axis="data", data_axis_size=N,
+                               topology=topo)
+        jstep = jax.jit(compat.shard_map(
+            step, mesh=mesh_d, in_specs=(P(), P(), P("data")),
+            out_specs=(P(), P(), P()), check_vma=False))
+        new_params, _, metrics = jstep(params, opt, batch)
+        results[name] = new_params
+        for a, b in zip(jax.tree.leaves(new_params),
+                        jax.tree.leaves(params_ref)):
+            # reassociated ring adds vs the fused reference reduce, amplified
+            # by Adam's 1/sqrt(v) — same tolerance as the flat acceptance
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=3e-3, rtol=1e-2)
+        # the hierarchical sync's inter-node traffic is 2(g-1) leader phases
+        txt = jstep.lower(params, opt, batch).compile().as_text()
+        from repro.core.rma import classify_cp
+        if topo is not None:
+            inter, intra = classify_cp(txt, topo)
+            assert intra > 0, "hier grad sync must use the shared-memory tier"
+    for a, b in zip(jax.tree.leaves(results["flat"]),
+                    jax.tree.leaves(results["2x4"])):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
-                                   atol=3e-3, rtol=1e-2)
-    # the hierarchical sync's inter-node traffic is 2(g-1) leader phases
-    txt = jstep.lower(params, opt, batch).compile().as_text()
-    from repro.core.rma import classify_cp
-    if topo is not None:
-        inter, intra = classify_cp(txt, topo)
-        assert intra > 0, "hier grad sync must use the shared-memory tier"
-for a, b in zip(jax.tree.leaves(results["flat"]),
-                jax.tree.leaves(results["2x4"])):
-    np.testing.assert_allclose(np.asarray(a, np.float32),
-                               np.asarray(b, np.float32),
-                               atol=1e-4, rtol=1e-4)
-print("train step: hierarchical grad sync matches flat and the reference")
+                                   atol=1e-4, rtol=1e-4)
+    print("train step: hierarchical grad sync matches flat and the reference")
+else:
+    print("train step section skipped (mesh-only; interpret mode)")
 
 # --- cache regression: a topology change must recompile, never replay ------
 x = jnp.arange(N * R, dtype=jnp.float32)
-ref = run(lambda v: lax.psum(v, "x"), x)
+ref = np.tile(np.asarray(x).reshape(N, R).sum(0), (N, 1)) if INTERP \
+    else run(lambda v: lax.psum(v, "x"), x).reshape(N, R)
 seq = [Topology(2, 4), Topology(4, 2), Topology(2, 4), None,
        default_topology(N, env="2x4")]
+plan_backend = "interpret" if INTERP else "rma"
 compiled_ids = []
 for topo in seq:
-    got = run(lambda v, topo=topo: plan_all_reduce(v, "x", N, order=True,
-                                                   topology=topo), x)
+    got = ring_all(x, topo)
     assert (got == ref).all(), f"wrong numerics after switch to {topo}"
     compiled_ids.append(id(all_reduce_plan("x", N, (R,), jnp.float32,
-                                           order=True, topology=topo)))
+                                           order=True, topology=topo,
+                                           backend=plan_backend)))
 assert compiled_ids[0] == compiled_ids[2] == compiled_ids[4], \
     "same factorization must hit the plan cache"
 assert len({compiled_ids[0], compiled_ids[1], compiled_ids[3]}) == 3, \

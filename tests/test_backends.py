@@ -1,0 +1,448 @@
+"""Cross-backend differential conformance suite for plan lowering.
+
+The tentpole invariant: a compiled :class:`RmaPlan` is a *portable* comm
+IR — every backend that can execute it must land **bit-identical** state.
+Three pillars:
+
+* **generated corpus** — small plans over op mixes (put / get / send /
+  accumulate / fetch_op / signal / compute) × dtypes × window scopes,
+  executed by the independent interpret walker *and* by the real
+  ``CompiledPlan.execute`` under ``vmap`` (``vmapped_execute``); buffers
+  and outputs must agree bit-for-bit.  A hypothesis sweep widens the
+  corpus when available; a fixed case set keeps the invariant pinned
+  without it.  The RMA backend's predicted==measured phase identity runs
+  on real 8-device HLO in ``tests/mdev/rma_backends.py`` (invoked here).
+* **macro lowering** — the ring / all-to-all macro plans compiled for
+  every backend (``rma`` substrate, ``gspmd`` collectives, ``interpret``)
+  agree with each other and with the plain references; ``backend="auto"``
+  picks are justified by the calibrated ``BENCH_backends.json``.
+* **regressions** — the shared-memory-only topology ("born flushed",
+  satellite of PR 6) emits zero flush/entry epochs and zero inter phases;
+  a missing or corrupt calibration artifact makes ``backend="auto"`` fall
+  back to the substrate with exactly one warning and never a raise.
+"""
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.rma import (
+    BACKEND_NAMES,
+    Backend,
+    RmaPlan,
+    Topology,
+    interpret_plan,
+    vmapped_execute,
+)
+from repro.core.rma.alltoall import all_to_all_plan, plan_all_to_all
+from repro.core.rma.backends import costmodel, gspmd
+from repro.core.rma.collectives import all_reduce_plan, plan_all_reduce
+
+HERE = os.path.dirname(__file__)
+BENCH = os.path.abspath(os.path.join(HERE, "..", "benchmarks", "results",
+                                     "BENCH_backends.json"))
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(autouse=True)
+def _hermetic(monkeypatch):
+    """Neither the accumulate router nor the backend picker may read this
+    machine's calibration artifacts unless a test opts in."""
+    monkeypatch.setenv("RMA_ACC_BENCH_JSON", "/nonexistent")
+    monkeypatch.setenv("RMA_BACKEND_BENCH_JSON", "/nonexistent")
+    monkeypatch.delenv("RMA_ACC_CROSSOVER", raising=False)
+
+
+def _run_mdev(script: str, *, interpret: bool = False):
+    env = dict(os.environ)
+    if interpret:
+        # the whole point: no device splitting, no mesh required
+        env.pop("XLA_FLAGS", None)
+        env["RMA_MDEV_BACKEND"] = "interpret"
+    else:
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "mdev", script)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, \
+        f"{script} failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# generated corpus: interpret walker ≡ vmapped substrate execute, bit for bit
+# ---------------------------------------------------------------------------
+
+B = 16          # window buffer length
+D = 4           # op payload length
+
+OP_KINDS = ("put", "acc", "get", "send", "fetch", "sig", "compute")
+
+
+def _perm(n: int, rev: bool):
+    return tuple((i, (i - 1) % n) if rev else (i, (i + 1) % n)
+                 for i in range(n))
+
+
+def _build(n: int, dtype, scope: str, ops):
+    """One corpus plan: window ``w`` + binding ``x``, the given op mix."""
+    plan = RmaPlan(f"corpus[{n}]")
+    plan.window("w", scope=scope, order=True, max_streams=2, same_op="sum",
+                accumulate_ops=("sum",), dtype=dtype, exit_epoch=True)
+    plan.bind("x", (D,), dtype)
+    outs = []
+    for i, (kind, rev, slot) in enumerate(ops):
+        perm = _perm(n, rev)
+        off = slot * D
+        if kind == "put":
+            plan.put("w", "x", perm, offset=off, label=f"put{i}")
+        elif kind == "acc":
+            plan.accumulate("w", "x", perm, op="sum", offset=off,
+                            label=f"acc{i}")
+        elif kind == "get":
+            outs.append((f"get{i}", plan.get("w", perm, offset=off, size=2,
+                                             label=f"get{i}")))
+        elif kind == "send":
+            outs.append((f"send{i}", plan.send("w", "x", perm, shape=(D,),
+                                               dtype=dtype,
+                                               label=f"send{i}")))
+        elif kind == "fetch":
+            outs.append((f"fetch{i}", plan.fetch_op("w", "x", perm, op="sum",
+                                                    offset=off,
+                                                    label=f"fetch{i}")))
+        elif kind == "sig":
+            plan.signal("w", perm, flag_offset=3 * D + slot, label=f"sig{i}")
+        elif kind == "compute":
+            outs.append((f"cmp{i}", plan.compute(
+                lambda env: env["x"] * 2
+                + jax.lax.axis_index("x").astype(env["x"].dtype),
+                shape=(D,), dtype=dtype, label=f"cmp{i}")))
+        else:                                          # pragma: no cover
+            raise AssertionError(kind)
+    for name, ref in outs:
+        plan.output(name, ref)
+    return plan.compile()
+
+
+def _differential(n: int, dtype, scope: str, ops):
+    compiled = _build(n, dtype, scope, ops)
+    binds = {"x": (jnp.arange(n * D, dtype=jnp.int32).reshape(n, D) % 7
+                   + 1).astype(dtype)}
+    bufs = lambda: {"w": jnp.zeros((n, B), dtype)}
+    a = interpret_plan(compiled, bufs(), binds)
+    b = vmapped_execute(compiled, bufs(), binds)
+    np.testing.assert_array_equal(np.asarray(a.buffers["w"]),
+                                  np.asarray(b.buffers["w"]),
+                                  err_msg=f"buffers diverge: {ops}")
+    assert set(a.outputs) == set(b.outputs)
+    for name in a.outputs:
+        np.testing.assert_array_equal(np.asarray(a.outputs[name]),
+                                      np.asarray(b.outputs[name]),
+                                      err_msg=f"output {name}: {ops}")
+    assert not np.asarray(a.err_count).any()
+    assert not np.asarray(b.err_count).any()
+
+
+FIXED_CASES = [
+    # every op kind at least once, both scopes, both dtypes, n ∈ {2, 4}
+    (4, jnp.float32, "thread",
+     [("put", False, 0), ("acc", False, 1), ("get", True, 0),
+      ("fetch", False, 2), ("sig", True, 0), ("compute", False, 0)]),
+    (4, jnp.int32, "process",
+     [("acc", True, 0), ("put", False, 2), ("send", False, 0),
+      ("fetch", True, 1), ("sig", False, 1)]),
+    (2, jnp.float32, "process",
+     [("send", True, 0), ("get", False, 1), ("put", True, 1),
+      ("compute", True, 0), ("acc", False, 0)]),
+    (2, jnp.int32, "thread",
+     [("fetch", False, 0), ("sig", False, 2), ("get", False, 2),
+      ("put", False, 0), ("send", False, 1)]),
+    # repeated writers to the same slot: schedule order must fully determine
+    # the landed value on both executors
+    (4, jnp.float32, "thread",
+     [("put", False, 1), ("put", True, 1), ("acc", False, 1),
+      ("acc", True, 1), ("get", False, 1)]),
+]
+
+
+@pytest.mark.parametrize("case", FIXED_CASES,
+                         ids=[f"case{i}" for i in range(len(FIXED_CASES))])
+def test_corpus_fixed(case):
+    _differential(*case)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.sampled_from([2, 4]),
+        dtype=st.sampled_from([jnp.float32, jnp.int32]),
+        scope=st.sampled_from(["thread", "process"]),
+        ops=st.lists(
+            st.tuples(st.sampled_from(OP_KINDS), st.booleans(),
+                      st.integers(min_value=0, max_value=2)),
+            min_size=1, max_size=6),
+    )
+    def test_corpus_hypothesis(n, dtype, scope, ops):
+        _differential(n, dtype, scope, ops)
+else:                                                  # pragma: no cover
+    def test_corpus_hypothesis():
+        pytest.skip("hypothesis not installed (fixed corpus still ran)")
+
+
+# ---------------------------------------------------------------------------
+# macro plans: one schedule, every backend, bit-identical
+# ---------------------------------------------------------------------------
+
+def test_ring_macro_all_backends_bit_identical():
+    n, r = 4, 8
+    x = (jnp.arange(n * r, dtype=jnp.int32).reshape(n, r) % 5).astype(
+        jnp.float32)
+    want = np.tile(np.asarray(x).sum(0), (n, 1))
+    results = {}
+    for backend in ("rma", "gspmd"):
+        compiled = all_reduce_plan("x", n, (r,), jnp.float32, order=True,
+                                   backend=backend)
+        assert compiled.backend == backend
+        for rname, runner in (("interpret", interpret_plan),
+                              ("vmapped", vmapped_execute)):
+            res = runner(compiled, {"ring": jnp.zeros_like(x)}, {"x": x})
+            results[f"{backend}/{rname}"] = np.asarray(res.outputs["out"])
+    results["plan_all_reduce/interpret"] = np.asarray(
+        plan_all_reduce(x, "x", n, backend="interpret"))
+    for key, got in results.items():
+        np.testing.assert_array_equal(got, want, err_msg=key)
+
+
+def test_a2a_macro_all_backends_bit_identical():
+    n, m, d = 4, 2, 3
+    x = (jnp.arange(n * n * m * d, dtype=jnp.int32)
+         .reshape(n, n * m, d) % 9).astype(jnp.float32)
+    blocks = np.asarray(x).reshape(n, n, m, d)
+    want = np.swapaxes(blocks, 0, 1).reshape(n, n * m, d)
+    cnts = jnp.tile((jnp.arange(n, dtype=jnp.int32) % (m + 1))[None], (n, 1))
+    want_cnts = np.asarray(cnts).T
+    for backend in ("rma", "gspmd"):
+        compiled = all_to_all_plan("x", n, (n * m, d), jnp.float32,
+                                   backend=backend)
+        assert compiled.backend == backend
+        for runner in (interpret_plan, vmapped_execute):
+            res = runner(compiled,
+                         {"data": jnp.zeros_like(x),
+                          "hdr": jnp.zeros((n, 2 * n), jnp.int32)},
+                         {"x": x, "counts": cnts})
+            np.testing.assert_array_equal(np.asarray(res.outputs["out"]),
+                                          want,
+                                          err_msg=f"{backend}/{runner}")
+            np.testing.assert_array_equal(np.asarray(res.outputs["counts"]),
+                                          want_cnts,
+                                          err_msg=f"{backend}/{runner}")
+    res = plan_all_to_all(x, "x", n, counts=cnts, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(res.data), want)
+    np.testing.assert_array_equal(np.asarray(res.counts), want_cnts)
+    np.testing.assert_array_equal(
+        np.asarray(res.bells),
+        np.ones((n, n), np.int32) - np.eye(n, dtype=np.int32))
+
+
+def test_gspmd_selection_recorded_in_phase_table():
+    compiled = all_reduce_plan("x", 4, (8,), jnp.float32, order=True,
+                               backend="gspmd")
+    rows = compiled.phase_table()
+    assert rows[0] == ("backend[gspmd]", 0), rows
+    assert any(label.startswith("gspmd:psum") for label, _ in rows), rows
+    assert compiled.phases == 0
+    assert compiled.lowering and compiled.lowering[0][1] == "gspmd"
+    # the substrate compile of the same plan keeps the classic table
+    flat = all_reduce_plan("x", 4, (8,), jnp.float32, order=True,
+                           backend="rma")
+    assert all(not label.startswith("backend[")
+               for label, _ in flat.phase_table())
+    assert flat.phases > 0
+
+
+def test_gspmd_declines_unsupported_landing_op():
+    compiled = all_to_all_plan("x", 4, (8, 2), jnp.float32, op="max",
+                               backend="gspmd")
+    assert compiled.backend == "rma", \
+        "an op='max' exchange has no all_to_all equivalent"
+    assert compiled.lowering, "the decline must be recorded"
+    label, target, why = compiled.lowering[0]
+    assert target == "rma" and "max" in why
+
+
+def test_backend_protocol_surface():
+    assert BACKEND_NAMES == ("auto", "rma", "gspmd", "interpret")
+    assert isinstance(gspmd, Backend)       # module-shaped, Protocol-checked
+
+
+def test_interpret_rejects_put_handle_plans():
+    plan = RmaPlan("handles")
+    plan.window("w", scope="thread", order=True, dtype=jnp.float32,
+                exit_epoch=True)
+    plan.bind("kv", (4,), jnp.float32)
+    plan.bind("handles", (1, 4), jnp.int32)
+    plan.put_handle("w", "kv", lambda env: env["handles"][0],
+                    [(0, 1), (1, 0)], slot=0, shape=(4,), dtype=jnp.float32)
+    compiled = plan.compile()
+    with pytest.raises(NotImplementedError):
+        compiled.interpret({"w": jnp.zeros((2, 8), jnp.float32)},
+                           {"kv": jnp.ones((2, 4), jnp.float32),
+                            "handles": jnp.zeros((2, 1, 4), jnp.int32)})
+
+
+def test_mdev_backends():
+    """The 8-device half: gspmd lowers permute-free to all-reduce /
+    all-to-all HLO, rma keeps predicted==measured, auto matches the cost
+    model, declines fall back with identical numerics."""
+    out = _run_mdev("rma_backends.py")
+    assert "ALL BACKEND CHECKS PASSED" in out
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: the tier-1 plan/topology smokes also run meshless
+# ---------------------------------------------------------------------------
+
+def test_mdev_plan_interpret_mode():
+    out = _run_mdev("rma_plan.py", interpret=True)
+    assert "ALL PLAN CHECKS PASSED" in out
+
+
+def test_mdev_topology_interpret_mode():
+    out = _run_mdev("rma_topology.py", interpret=True)
+    assert "ALL TOPOLOGY CHECKS PASSED" in out
+
+
+# ---------------------------------------------------------------------------
+# satellite 3 regression: shared-memory-only topology is born flushed
+# ---------------------------------------------------------------------------
+
+def _shm_plan(topology):
+    plan = RmaPlan("shm", topology=topology)
+    plan.window("w", scope="thread", order=True, max_streams=2,
+                same_op="sum", accumulate_ops=("sum",), dtype=jnp.float32,
+                entry_epoch=True, exit_epoch=True)
+    plan.bind("a", (D,), jnp.float32)
+    n = 4
+    plan.put("w", "a", _perm(n, False), offset=0)
+    plan.accumulate("w", "a", _perm(n, True), op="sum", offset=D, stream=1)
+    return plan.compile()
+
+
+def test_shm_only_topology_emits_no_flush_epochs():
+    """A 1×l factorization puts every pair on the shared-memory tier: the
+    PR 6 "born flushed" rule means *zero* inter phases and zero ledger
+    traffic — no entry epochs, no exit flush steps, at compile time."""
+    compiled = _shm_plan(Topology(1, 4))
+    kinds = [s.kind for s in compiled.steps]
+    assert "entry" not in kinds, kinds
+    assert "flush" not in kinds, kinds
+    assert compiled.phases_inter == 0, compiled.phase_table()
+    assert all(s.tier == "intra" for s in compiled.steps
+               if s.kind == "op"), "every pair must classify intra"
+    # the flat compile of the same program *does* pay the epochs
+    flat = _shm_plan(None)
+    flat_kinds = [s.kind for s in flat.steps]
+    assert "entry" in flat_kinds and "flush" in flat_kinds
+    assert flat.phases_inter > 0
+    # and the schedules still land identical values
+    n = 4
+    binds = {"a": jnp.arange(n * D, dtype=jnp.float32).reshape(n, D)}
+    bufs = lambda: {"w": jnp.zeros((n, B), jnp.float32)}
+    for runner in (interpret_plan, vmapped_execute):
+        a = runner(compiled, bufs(), binds)
+        b = runner(flat, bufs(), binds)
+        np.testing.assert_array_equal(np.asarray(a.buffers["w"]),
+                                      np.asarray(b.buffers["w"]))
+
+
+def test_degenerate_8x1_table_still_matches_flat():
+    """The other degenerate corner must stay byte-stable: an 8×1 topology
+    (every rank its own host) compiles to exactly the flat schedule."""
+    a = _shm_plan(Topology(4, 1))
+    b = _shm_plan(None)
+    assert a.phase_table() == b.phase_table()
+
+
+# ---------------------------------------------------------------------------
+# satellite 4 regression: auto never raises on a bad calibration artifact
+# ---------------------------------------------------------------------------
+
+def _reset_costmodel():
+    costmodel._cache.clear()
+    costmodel._warned.clear()
+
+
+def test_auto_missing_bench_falls_back_with_one_warning(tmp_path,
+                                                        monkeypatch):
+    missing = str(tmp_path / "never_written.json")
+    monkeypatch.setenv("RMA_BACKEND_BENCH_JSON", missing)
+    _reset_costmodel()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        c1 = all_reduce_plan("x", 4, (12,), jnp.float32, order=True,
+                             backend="auto")
+        c2 = all_to_all_plan("x", 4, (8, 3), jnp.float32, backend="auto")
+    assert c1.backend == "rma" and c2.backend == "rma"
+    assert c1.phases > 0
+    hits = [w for w in caught if issubclass(w.category, UserWarning)
+            and "BENCH_backends" in str(w.message)]
+    assert len(hits) == 1, [str(w.message) for w in caught]
+
+
+@pytest.mark.parametrize("payload", [
+    "{ not json at all",
+    '{"rows": "not-a-list"}',
+    '{"rows": [{"name": "backend_matrix/ring/rma"}]}',   # missing latency
+    '{"rows": [{"name": "backend_matrix/ring/rma", "us_per_call": 1.0}]}',
+], ids=["garbage", "wrong-type", "no-latency", "incomplete"])
+def test_auto_corrupt_bench_falls_back(tmp_path, monkeypatch, payload):
+    bad = tmp_path / "bad.json"
+    bad.write_text(payload)
+    monkeypatch.setenv("RMA_BACKEND_BENCH_JSON", str(bad))
+    _reset_costmodel()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        target, reason = costmodel.choose("ring")
+        compiled = all_reduce_plan("x", 4, (20,), jnp.float32, order=True,
+                                   backend="auto")
+    assert target == "rma"
+    assert compiled.backend == "rma"
+    assert any(issubclass(w.category, UserWarning) for w in caught)
+
+
+def test_auto_pick_justified_by_calibrated_artifact(monkeypatch):
+    """The calibration artifact and the compile-time pick must
+    agree: ``choose`` reproduces the artifact's own ``auto_pick`` verdict,
+    and the pick is the measured minimum over the auto candidates."""
+    if not os.path.exists(BENCH):
+        pytest.skip("no calibrated BENCH_backends.json — "
+                    "run benchmarks.backend_matrix first")
+    monkeypatch.setenv("RMA_BACKEND_BENCH_JSON", BENCH)
+    _reset_costmodel()
+    with open(BENCH) as f:
+        doc = json.load(f)
+    table = {}
+    for row in doc["rows"]:
+        _, pat, backend = row["name"].split("/")
+        table.setdefault(pat, {})[backend] = row["us_per_call"]
+    for pat in ("ring", "a2a"):
+        target, reason = costmodel.choose(pat)
+        assert target == doc["auto_pick"][pat]["target"], (pat, target)
+        lat = {b: table[pat][b] for b in costmodel.AUTO_CANDIDATES}
+        assert lat[target] == min(lat.values()), (pat, lat)
+        assert "us" in reason
+    compiled = all_reduce_plan("x", 4, (24,), jnp.float32, order=True,
+                               backend="auto")
+    assert compiled.backend == costmodel.choose("ring")[0]
