@@ -18,6 +18,9 @@ Sections:
                      all-to-all vs the undeclared baseline vs GSPMD
   serve_disagg     — the disaggregated serving data plane: batched page-push
                      pages/s + per-token handle-vs-query read latency
+  serve_load       — the serving control plane under a bursty open-loop
+                     trace: continuous vs static admission (tok/s, p99
+                     ticks) + COW prefix sharing on a page-capped pool
   plan_overhead    — the declarative-plan layer: build-once cost vs
                      execute-many replay, planned/hand-tuned/naive phases
   hier_collectives — topology-aware hierarchical plans vs flat: per-tier
@@ -46,6 +49,7 @@ MODULES = [
     "benchmarks.rma_collectives",
     "benchmarks.moe_alltoall",
     "benchmarks.serve_disagg",
+    "benchmarks.serve_load",
     "benchmarks.plan_overhead",
     "benchmarks.hier_collectives",
     "benchmarks.backend_matrix",

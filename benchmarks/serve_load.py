@@ -1,0 +1,241 @@
+"""Serving load benchmark — continuous batching + COW prefix sharing.
+
+Drives the three-layer serving engine (``repro.serve.engine``) with a
+**bursty open-loop trace**: requests arrive in bursts on a fixed tick
+schedule regardless of completions (open loop — the arrival process does
+not wait for the server), the shape under which static whole-batch
+admission collapses and continuous per-tick admission shines.
+
+Sections:
+
+* ``continuous`` vs ``static`` — the same trace on the same paged engine
+  under the two admission policies.  Derived columns report sustained
+  tokens/s (wall, post-warmup), p99 request latency in engine ticks
+  (arrival→completion), and total ticks to drain.
+* ``cow_shared`` vs ``cow_unshared`` — the same common-prefix trace on a
+  page-capped pool (``kv_pages``) with and without ``prefix_share``:
+  copy-on-write sharing admits strictly more concurrent sequences at equal
+  physical page count (``max_live``), with bit-identical greedy output.
+
+Writes ``benchmarks/results/BENCH_serve_load.json`` with the rows plus
+machine-checkable verdicts (``continuous_beats_static``,
+``cow_admits_more``, ``cow_bit_identical``).  ``--smoke`` runs a
+seconds-scale trace for CI and still asserts every verdict.
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.tiny import tiny_config
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def emit(name, us, derived=""):
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def bursty_trace(rng, *, n_bursts, burst, gap, prompt_len, vocab,
+                 max_new_lo, max_new_hi, shared_prefix=0):
+    """(arrival_tick, Request) pairs: ``burst`` arrivals every ``gap``
+    ticks.  Prompt length is fixed (one prefill trace); heterogeneity comes
+    from per-request token budgets and suffix content."""
+    prefix = rng.randint(0, vocab, size=shared_prefix)
+    trace, rid = [], 0
+    for b in range(n_bursts):
+        for _ in range(burst):
+            tail = rng.randint(0, vocab, size=prompt_len - shared_prefix)
+            trace.append((b * gap, Request(
+                rid=rid, prompt=np.concatenate([prefix, tail]),
+                max_new_tokens=int(rng.randint(max_new_lo, max_new_hi + 1)))))
+            rid += 1
+    return trace
+
+
+def warm(eng, vocab, prompt_len, cow=False):
+    """Compile the engine's prefill/decode outside the measured window;
+    with ``cow`` also the share/fork device ops (two identical prompts)."""
+    r = np.random.RandomState(10_007)
+    p = r.randint(0, vocab, size=prompt_len)
+    eng.submit(Request(rid=-1, prompt=p, max_new_tokens=2))
+    if cow:
+        eng.submit(Request(rid=-2, prompt=p.copy(), max_new_tokens=2))
+    eng.run()
+
+
+def drive(eng, trace):
+    """Open-loop replay: arrivals land on schedule, completions whenever
+    the engine gets to them.  Returns (wall_s, ticks, completions)."""
+    i, tick = 0, 0
+    t0 = time.perf_counter()
+    while True:
+        while i < len(trace) and trace[i][0] <= tick:
+            eng.submit(trace[i][1])
+            i += 1
+        if (i >= len(trace) and not eng.scheduler.pending_count
+                and not eng.slot_req):
+            break
+        eng.step()
+        tick += 1
+        if tick > 100_000:
+            raise RuntimeError("trace did not drain in 100k ticks")
+    wall = time.perf_counter() - t0
+    done = {c.rid: c for c in eng.done if c.rid >= 0}
+    return wall, tick, done
+
+
+def run_policy(model, params, trace, policy, *, n_slots, max_seq,
+               page_tokens, vocab, prompt_len):
+    eng = ServeEngine(model, params, n_slots=n_slots, max_seq=max_seq,
+                      paged_kv=True, page_tokens=page_tokens, policy=policy)
+    warm(eng, vocab, prompt_len)
+    wall, ticks, done = drive(eng, trace)
+    toks = sum(len(c.tokens) for c in done.values())
+    lats = [c.done_tick - c.arrival_tick for c in done.values()]
+    return {
+        "policy": policy,
+        "wall_s": wall,
+        "ticks": ticks,
+        "n_tokens": toks,
+        "tok_per_s": toks / wall,
+        "p50_ticks": float(np.percentile(lats, 50)),
+        "p99_ticks": float(np.percentile(lats, 99)),
+        "tokens": {r: c.tokens for r, c in done.items()},
+    }
+
+
+def run_cow(model, params, trace, share, *, n_slots, max_seq, page_tokens,
+            kv_pages, vocab, prompt_len):
+    eng = ServeEngine(model, params, n_slots=n_slots, max_seq=max_seq,
+                      paged_kv=True, page_tokens=page_tokens,
+                      prefix_share=share, kv_pages=kv_pages)
+    warm(eng, vocab, prompt_len, cow=share)
+    wall, ticks, done = drive(eng, trace)
+    st = eng.stats()
+    toks = sum(len(c.tokens) for c in done.values())
+    return {
+        "share": share,
+        "wall_s": wall,
+        "ticks": ticks,
+        "n_tokens": toks,
+        "tok_per_s": toks / wall,
+        "max_live": st["max_live"],
+        "pages_shared": st["pages_shared"],
+        "cow_copies": st["cow_copies"],
+        "tokens": {r: c.tokens for r, c in done.items()},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale trace (CI); verdicts still asserted")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = tiny_config("qwen3-4b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(args.seed)
+
+    if args.smoke:
+        policy_kw = dict(n_slots=2, max_seq=32, page_tokens=8)
+        policy_trace = bursty_trace(rng, n_bursts=2, burst=4, gap=6,
+                                    prompt_len=8, vocab=cfg.vocab,
+                                    max_new_lo=2, max_new_hi=8)
+        cow_kw = dict(n_slots=4, max_seq=32, page_tokens=8, kv_pages=8)
+        cow_trace = bursty_trace(rng, n_bursts=1, burst=4, gap=1,
+                                 prompt_len=20, vocab=cfg.vocab,
+                                 max_new_lo=3, max_new_hi=5,
+                                 shared_prefix=16)
+    else:
+        policy_kw = dict(n_slots=4, max_seq=64, page_tokens=8)
+        policy_trace = bursty_trace(rng, n_bursts=4, burst=8, gap=6,
+                                    prompt_len=12, vocab=cfg.vocab,
+                                    max_new_lo=4, max_new_hi=10)
+        cow_kw = dict(n_slots=6, max_seq=32, page_tokens=8, kv_pages=16)
+        cow_trace = bursty_trace(rng, n_bursts=1, burst=6, gap=1,
+                                 prompt_len=20, vocab=cfg.vocab,
+                                 max_new_lo=6, max_new_hi=8,
+                                 shared_prefix=16)
+    # one identical-prompt pair in the COW trace: its partial prefix page is
+    # shared copy-on-write and must fork on the first divergent decode write
+    t0, r0 = cow_trace[0]
+    t1, r1 = cow_trace[1]
+    cow_trace[1] = (t1, Request(rid=r1.rid, prompt=r0.prompt.copy(),
+                                max_new_tokens=r1.max_new_tokens))
+
+    rows = []
+
+    def record(name, us, derived=""):
+        emit(name, us, derived)
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+
+    # --- continuous vs static admission under the bursty open-loop trace
+    vocab, plen = cfg.vocab, len(policy_trace[0][1].prompt)
+    res = {}
+    for policy in ("continuous", "static"):
+        r = run_policy(model, params, policy_trace, policy,
+                       vocab=vocab, prompt_len=plen, **policy_kw)
+        res[policy] = r
+        us_per_tok = r["wall_s"] * 1e6 / r["n_tokens"]
+        record(f"serve_load/{policy}", us_per_tok,
+               f"tok_s={r['tok_per_s']:.1f} p99_ticks={r['p99_ticks']:.0f} "
+               f"p50_ticks={r['p50_ticks']:.0f} ticks={r['ticks']}")
+
+    verdict_policy = {
+        "tok_per_s": res["continuous"]["tok_per_s"] > res["static"]["tok_per_s"],
+        "p99": res["continuous"]["p99_ticks"] < res["static"]["p99_ticks"],
+        "greedy_identical": res["continuous"]["tokens"] == res["static"]["tokens"],
+    }
+
+    # --- COW prefix sharing vs unshared on a page-capped pool
+    vocab, plen = cfg.vocab, len(cow_trace[0][1].prompt)
+    cow = {}
+    for share in (False, True):
+        r = run_cow(model, params, cow_trace, share,
+                    vocab=vocab, prompt_len=plen, **cow_kw)
+        cow[share] = r
+        us_per_tok = r["wall_s"] * 1e6 / r["n_tokens"]
+        record(f"serve_load/cow_{'shared' if share else 'unshared'}",
+               us_per_tok,
+               f"tok_s={r['tok_per_s']:.1f} max_live={r['max_live']} "
+               f"pages_shared={r['pages_shared']} "
+               f"cow_copies={r['cow_copies']} ticks={r['ticks']}")
+
+    verdicts = {
+        "continuous_beats_static": verdict_policy,
+        "cow_admits_more": cow[True]["max_live"] > cow[False]["max_live"],
+        "cow_bit_identical": cow[True]["tokens"] == cow[False]["tokens"],
+        "cow_pages_shared": cow[True]["pages_shared"],
+    }
+    doc = {
+        "section": "serve_load",
+        "rows": rows,
+        "verdicts": verdicts,
+        "trace": {"policy": {k: v for k, v in policy_kw.items()},
+                  "cow": {k: v for k, v in cow_kw.items()},
+                  "n_requests": len(policy_trace),
+                  "smoke": args.smoke},
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_serve_load.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {path} ({len(rows)} rows)")
+    print(f"# verdicts: {verdicts}")
+    failed = ([] if all(verdict_policy.values()) else ["continuous_beats_static"])
+    failed += [k for k in ("cow_admits_more", "cow_bit_identical")
+               if not verdicts[k]]
+    if failed:
+        raise SystemExit(f"serve_load verdicts failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -72,12 +72,29 @@ def main(argv=None):
                          "prefill→decode handle-path round-trip demo")
     ap.add_argument("--page-tokens", type=int, default=16,
                     help="tokens per KV page in --disagg mode")
+    ap.add_argument("--policy", default="continuous",
+                    choices=["continuous", "static", "priority", "fair"],
+                    help="admission policy: continuous batching (default), "
+                         "static whole-batch, priority, or fair-share")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="COW KV prefix sharing on the paged pool "
+                         "(requires --disagg); requests with a common "
+                         "prompt prefix map the same physical pages")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="cap the allocatable physical KV pages below "
+                         "slots*max_seq/page_tokens (admission backs off "
+                         "under pool pressure)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="with --prefix-share: give every request the same "
+                         "random prefix of this many tokens")
     ap.add_argument("--dry-run", action="store_true",
                     help="with --disagg: run only the round-trip demo")
     args = ap.parse_args(argv)
 
     if args.dry_run and not args.disagg:
         ap.error("--dry-run requires --disagg")
+    if args.prefix_share and not args.disagg:
+        ap.error("--prefix-share requires --disagg (the paged pool)")
     if args.disagg:
         run_disagg_demo()
         if args.dry_run:
@@ -89,19 +106,23 @@ def main(argv=None):
     enc_len = args.prompt_len if cfg.enc_layers else 0
     eng = ServeEngine(model, params, n_slots=args.slots, max_seq=args.max_seq,
                       enc_len=enc_len, paged_kv=args.disagg,
-                      page_tokens=args.page_tokens)
+                      page_tokens=args.page_tokens, policy=args.policy,
+                      prefix_share=args.prefix_share, kv_pages=args.kv_pages)
     rng = np.random.RandomState(args.seed)
+    shared = rng.randint(0, cfg.vocab, size=args.shared_prefix_len)
     t0 = time.perf_counter()
     for rid in range(args.requests):
-        eng.submit(Request(rid=rid,
-                           prompt=rng.randint(0, cfg.vocab, size=args.prompt_len),
+        tail = max(args.prompt_len - args.shared_prefix_len, 1)
+        prompt = np.concatenate([shared, rng.randint(0, cfg.vocab, size=tail)])
+        eng.submit(Request(rid=rid, prompt=prompt,
                            max_new_tokens=args.max_new))
     done = eng.run()
     dt = time.perf_counter() - t0
     toks = sum(len(c.tokens) for c in done)
     mode = "disagg/paged" if args.disagg else "dense"
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s, {args.slots} slots, {mode} KV)")
+          f"({toks/dt:.1f} tok/s, {args.slots} slots, {mode} KV, "
+          f"{args.policy} admission)")
     if args.disagg:
         print(f"[serve] pool stats: {eng.stats()}")
     for c in sorted(done, key=lambda c: c.rid)[:3]:

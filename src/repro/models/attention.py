@@ -224,6 +224,16 @@ def gqa_attention(
             valid = page_idx < pages_per_row
             phys = table[rows, jnp.minimum(page_idx, pages_per_row - 1)]
             phys = jnp.where(valid, phys, kp.shape[0])  # (B, S) page ids
+            if "page_ro" in cache:
+                # COW prefix sharing: a page mapped by >1 sequence is
+                # write-protected — the pool manager forks before any
+                # legitimate write reaches one, so a scatter aimed at it
+                # means host and device state disagree; drop it like an
+                # overflow write rather than corrupt the co-holder.  Only
+                # the scatter is rerouted — the attention gather below
+                # still reads shared pages through the table.
+                ro = cache["page_ro"][jnp.minimum(phys, kp.shape[0] - 1)]
+                phys = jnp.where(ro, kp.shape[0], phys)
             in_page = cols % pt
             ckp = kp.at[phys, in_page].set(k.astype(kp.dtype))
             cvp = vp.at[phys, in_page].set(v.astype(vp.dtype))

@@ -59,6 +59,7 @@ from repro.core.rma import (
     put_signal,
 )
 from repro.serve.paged import PagedKVWindow, PageSpec
+from repro.serve.scheduler import Scheduler
 
 Array = jax.Array
 
@@ -137,6 +138,29 @@ def claim_slot(ctrl: Window, perm, *, n_slots: int, lane: int = 0,
     return ctrl, ticket, jnp.mod(ticket, n_slots)
 
 
+def claim_slots(ctrl: Window, perm, scheduler, *, live: int = 0,
+                lane: int = 0, max_claims: int | None = None,
+                ) -> tuple[Window, list, list]:
+    """Policy-driven decode admission: claim up to the scheduler's ticket
+    budget for this tick (:meth:`repro.serve.scheduler.Scheduler.
+    ticket_window` — 0 under ``static`` policy while sequences are live,
+    the free-slot count otherwise) via remote fetch_op, mapping each ticket
+    through :meth:`~repro.serve.scheduler.Scheduler.slot_for_ticket`.
+
+    Returns ``(ctrl, tickets, slots)`` — possibly empty lists when the
+    policy grants no admissions."""
+    budget = scheduler.ticket_window(live)
+    if max_claims is not None:
+        budget = min(budget, max_claims)
+    tickets, slots = [], []
+    for _ in range(budget):
+        ctrl, old = ctrl.fetch_op(jnp.ones((1,), jnp.int32), perm, op="sum",
+                                  offset=CTRL_TICKET, stream=lane)
+        tickets.append(old[0])
+        slots.append(scheduler.slot_for_ticket(old[0]))
+    return ctrl, tickets, slots
+
+
 def read_doorbell(ctrl: Window, seq: int) -> tuple[Array, Array]:
     """Consumer-side poll: ``(flag, page_count)`` for sequence ``seq`` —
     local reads of the control window, no communication."""
@@ -207,7 +231,13 @@ def paginate_cache(cache, page_tokens: int):
     ever own is what keeps them from corrupting a live slot's pages.
     Leaves that are not self-attention KV (cross-attention, MLA, SSM state,
     the step counter) pass through unchanged, so hybrid stacks page only
-    what pages."""
+    what pages.
+
+    The ``page_ro`` leaf is the pool's per-page write protection: the
+    engine sets it for pages mapped by more than one sequence (COW prefix
+    sharing), and the decode scatter in ``models/attention.py`` drops
+    writes routed at a protected page exactly like overflow writes.  The
+    parking page is never protected."""
     if _is_gqa_cache(cache):
         k = cache["k"]
         *lead, b, s, kv, hd = k.shape
@@ -225,6 +255,7 @@ def paginate_cache(cache, page_tokens: int):
             "v_pages": repage(cache["v"]),
             "page_table": jnp.full((*lead, b, pages_per_row), n_alloc,
                                    jnp.int32),
+            "page_ro": jnp.zeros((*lead, n_alloc + 1), bool),
             "pos": cache["pos"],
         }
     if isinstance(cache, dict):
@@ -264,7 +295,8 @@ N_DEMO_DEV = 8
 
 
 def demo_round_trip(n_seqs: int = 2, pages_per_seq: int = 2,
-                    n_lanes: int = 2, verbose: bool = True) -> dict:
+                    n_lanes: int = 2, verbose: bool = True,
+                    policy: str = "continuous") -> dict:
     """Drive one full disaggregated round trip across a ring of devices.
 
     Every device plays both roles (SPMD): as a *prefill* worker it fills
@@ -304,12 +336,15 @@ def demo_round_trip(n_seqs: int = 2, pages_per_seq: int = 2,
                                        lane=s % n_lanes)
         for lane in range(min(n_lanes, n_seqs)):
             ctrl = ctrl.flush(stream=lane)        # thread-scoped: per lane
-        # decode admission: one ticket per lane via remote atomics
+        # decode admission: the scheduler policy grants each lane's ticket
+        # budget (claim_slots), claimed with remote atomics
+        sched = Scheduler(n_seqs, policy)
         tickets = []
         for lane in range(n_lanes):
-            ctrl, t, slot = claim_slot(ctrl, perm, n_slots=n_seqs, lane=lane)
+            ctrl, ts, _slots = claim_slots(ctrl, perm, sched, live=0,
+                                           lane=lane, max_claims=1)
             ctrl = ctrl.flush(stream=lane)
-            tickets.append(t)
+            tickets.extend(ts)
         # decode: doorbells + page contents pushed by the ring predecessor
         bells = [read_doorbell(ctrl, s) for s in range(n_seqs)]
         vals = [pool.read_page(s * pages_per_seq)[0, 0, 0, 0]
@@ -354,7 +389,7 @@ def demo_round_trip(n_seqs: int = 2, pages_per_seq: int = 2,
     }
     if verbose:
         print(f"[disagg] {k} seqs x {pages_per_seq} pages pushed over "
-              f"{n}-device ring on {n_lanes} lanes")
+              f"{n}-device ring on {n_lanes} lanes ({policy} admission)")
         for name, ok in checks.items():
             print(f"[disagg]   {name}: {'OK' if ok else 'FAIL'}")
     if not all(checks.values()):
@@ -375,6 +410,7 @@ __all__ = [
     "make_control_window",
     "push_sequence",
     "claim_slot",
+    "claim_slots",
     "read_doorbell",
     "pool_stats",
     "PageAllocator",

@@ -1,31 +1,62 @@
-"""Continuous-batching serving engine (decode slots + prefill insertion).
+"""The serving engine: scheduler / KV pool / executor, continuous batching.
 
-A compact but real engine: fixed decode slots share one batched KV cache;
-requests are prefilled one at a time (prefill batch = 1 here; the dry-run
-exercises the big prefill shapes) and inserted into free slots; every decode
-step advances all live slots together.  Finished sequences free their slot.
+The engine is three explicit layers (``docs/serving_disagg.md``):
 
-The engine is deliberately model-agnostic: it drives the ``Model`` API
-(prefill / decode_step) that every one of the ten architectures implements.
+* :class:`repro.serve.scheduler.Scheduler` — the **policy** layer: request
+  queue (arrival ticks, priorities, tenants) and per-tick admission.
+  Continuous batching means admission happens *every decode tick* into any
+  free slot, not only between whole batches; the same policy object drives
+  the disagg control window's fetch_op ticket budget
+  (:func:`repro.serve.disagg.claim_slots`).
+* :class:`repro.serve.paged.KVPoolManager` — the **pool** layer: refcounts
+  on physical KV pages, copy-on-write prefix sharing (sequences with a
+  common prompt prefix map the *same* physical pages and fork only on the
+  first divergent write), FIFO free list, double-free guards.
+* :class:`Executor` (here) — the **execution** layer: owns the batched
+  device cache and the jitted prefill/decode, and runs exactly what the
+  scheduler admitted this tick.  It knows nothing about queues or
+  refcounts; the facade hands it slots, physical pages, and a write mask.
+
+:class:`ServeEngine` is the facade wiring the three together, keeping the
+original public surface (``submit`` / ``step`` / ``run`` / ``stats``,
+``slot_free`` / ``slot_req`` / ``done``).  Greedy decode is bit-identical
+to the previous monolithic engine — the layers change who decides, not
+what runs.
 
 ``paged_kv=True`` replaces the dense per-slot KV with the **paged pool
 layout** of the disaggregated serving runtime (``repro.serve.disagg``): the
-self-attention cache becomes a physical page pool plus a per-row page table,
-pages are allocated from a :class:`~repro.serve.disagg.PageAllocator` at
-slot admission and freed at release, and the decode path runs through the
-page-table indirection in ``models/attention.py``.  This is exactly the
-cache a decode worker owns in a prefill→decode split — the pool a remote
-prefill engine pushes pages into through memory handles — so the engine
-doubles as the decode half of the disagg deployment.
+self-attention cache becomes a physical page pool plus a per-row page
+table — exactly the cache a decode worker owns in a prefill→decode split.
+``prefix_share=True`` additionally admits new requests onto the pages of a
+live request with a common prompt prefix:
+
+* full pages entirely inside the common prefix are mapped **immutably**
+  (refcount+1, write-protected device-side via the cache's ``page_ro``
+  leaf — decode scatters at them are dropped like overflow writes);
+* the one partial page at the prefix boundary is mapped **copy-on-write**
+  when the new prompt ends exactly at the prefix (both holders will write
+  it): the engine forks it — device page copy + table remap — the tick a
+  holder's write position reaches it while the refcount is still > 1.
+
+Sharing is safe on two grounds: KV at position *i* depends only on tokens
+``0..i`` (identical prefixes ⇒ bit-identical pages, prefilled by the same
+jitted function), and decode is write-then-attend (a forked copy's stale
+positions are overwritten before their causal mask ever opens).  The
+pool's :meth:`~repro.serve.paged.KVPoolManager.can_admit` reserves one
+free page per outstanding writable share, so a fork can never find the
+free list empty.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.paged import KVPoolManager
+from repro.serve.scheduler import Scheduler
 
 Array = jax.Array
 
@@ -36,12 +67,17 @@ class Request:
     prompt: np.ndarray          # (S,) int32
     max_new_tokens: int
     eos_id: int = -1            # -1: never stops early
+    priority: int = 0           # policy="priority": higher admits first
+    tenant: int = 0             # policy="fair": fair-share key
 
 
 @dataclasses.dataclass
 class Completion:
     rid: int
     tokens: list
+    finished: bool = True       # False: run() ran out of ticks (partial)
+    arrival_tick: int = 0
+    done_tick: int = 0
 
 
 def _paged_dicts(tree):
@@ -53,6 +89,17 @@ def _paged_dicts(tree):
     elif isinstance(tree, list):
         for v in tree:
             yield from _paged_dicts(v)
+
+
+def _map_paged(cache, fn):
+    """Rebuild a cache tree applying ``fn`` to every paged-attention dict."""
+    if isinstance(cache, dict):
+        if "k_pages" in cache:
+            return fn(cache)
+        return {k: _map_paged(v, fn) for k, v in cache.items()}
+    if isinstance(cache, list):
+        return [_map_paged(v, fn) for v in cache]
+    return cache
 
 
 def _insert_row(full: Array, one: Array, slot, n_slots: int) -> Array:
@@ -75,8 +122,12 @@ def _insert_row(full: Array, one: Array, slot, n_slots: int) -> Array:
     return full
 
 
-class ServeEngine:
-    """Greedy-decoding continuous-batching engine over ``n_slots`` slots."""
+class Executor:
+    """The execution layer: batched cache + jitted prefill/decode.
+
+    Decisions live elsewhere — the scheduler picks *what* runs, the pool
+    manager picks *which pages* back it; the executor is handed a slot, a
+    physical-page row, and a per-page write mask, and runs the model."""
 
     def __init__(self, model, params, *, n_slots: int, max_seq: int,
                  enc_len: int = 0, paged_kv: bool = False,
@@ -85,7 +136,7 @@ class ServeEngine:
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
-        cfg = model.cfg
+        self.page_tokens = page_tokens
         self.cache = model.init_cache(n_slots, max_seq, enc_len=enc_len)
         self.paged_kv = paged_kv
         if paged_kv:
@@ -94,62 +145,116 @@ class ServeEngine:
             paged_cache = disagg.paginate_cache(self.cache, page_tokens)
             if not any("k_pages" in d for d in _paged_dicts(paged_cache)):
                 raise ValueError(
-                    f"paged_kv=True but the {cfg.family!r} stack has no "
-                    "self-attention KV caches to page (MLA/SSM caches stay "
-                    "dense) — the paged data plane would be a no-op")
+                    f"paged_kv=True but the {model.cfg.family!r} stack has "
+                    "no self-attention KV caches to page (MLA/SSM caches "
+                    "stay dense) — the paged data plane would be a no-op")
             self.cache = paged_cache
-            self.page_tokens = page_tokens
-            self.pages_per_slot = max_seq // page_tokens
-            self.allocator = disagg.PageAllocator(
-                n_slots * self.pages_per_slot)
-            self.slot_pages: dict[int, list[int]] = {}
-        self.slot_free = [True] * n_slots
-        self.slot_req: dict[int, Request] = {}
-        self.slot_generated: dict[int, list] = {}
-        self.slot_pos: dict[int, int] = {}
-        self.pending: list[Request] = []
-        self.done: list[Completion] = []
-        self._decode = jax.jit(model.decode_step)
-        self._last_tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self._decode_fn = jax.jit(model.decode_step)
 
-        # single-sequence prefill that scatters into one cache slot; in paged
-        # mode the dense prefill KV is re-paged into the slot's physical
-        # pages and the slot's page-table row is wired up
-        def prefill_into_slot(params, cache, tokens, slot, phys_pages):
+        # single-sequence prefill that scatters into one cache slot; in
+        # paged mode the dense prefill KV is re-paged into the slot's
+        # physical pages (write-masked pages land on the parking page —
+        # they are shared, their contents already prefilled by the donor)
+        # and the slot's page-table row is wired up
+        def prefill_into_slot(params, cache, tokens, slot, phys_pages,
+                              write_ok):
             sub = model.init_cache(1, max_seq, enc_len=enc_len)
             logits, sub = model.prefill(params, {"tokens": tokens}, sub)
-            cache2 = self._insert(cache, sub, slot, phys_pages)
+            cache2 = self._insert(cache, sub, slot, phys_pages, write_ok)
             return logits, cache2
 
-        self._prefill = jax.jit(prefill_into_slot, static_argnames=())
+        self._prefill_fn = jax.jit(prefill_into_slot)
+
+    # -- the two model calls ----------------------------------------------------
+    def prefill(self, tokens: Array, slot: int, phys_pages: Array,
+                write_ok: Array) -> int:
+        """Prefill one admitted request into ``slot``; returns its first
+        greedy token."""
+        logits, self.cache = self._prefill_fn(self.params, self.cache,
+                                              tokens, slot, phys_pages,
+                                              write_ok)
+        return int(np.asarray(jnp.argmax(logits[0, -1])))
+
+    def decode(self, last_tokens: np.ndarray) -> np.ndarray:
+        """One decode step over every slot; returns per-slot argmax."""
+        logits, self.cache = self._decode_fn(
+            self.params, self.cache, jnp.asarray(last_tokens))
+        return np.asarray(jnp.argmax(logits[:, -1, :], axis=-1)
+                          .astype(jnp.int32))
+
+    # -- paged-pool device ops ---------------------------------------------------
+    def fork_page(self, slot: int, j: int, src: int, dst: int) -> None:
+        """Copy-on-write fork: copy physical page ``src`` → ``dst`` in every
+        paged pool and point this slot's table entry ``j`` at the copy."""
+        def fork(d):
+            kp, vp = d["k_pages"], d["v_pages"]
+            table = d["page_table"]
+            if kp.ndim == 4:
+                kp = kp.at[dst].set(kp[src])
+                vp = vp.at[dst].set(vp[src])
+                table = table.at[slot, j].set(dst)
+            else:                               # leading scan (layers) dim
+                kp = kp.at[:, dst].set(kp[:, src])
+                vp = vp.at[:, dst].set(vp[:, src])
+                table = table.at[:, slot, j].set(dst)
+            ro = d["page_ro"].at[..., dst].set(False)
+            return dict(d, k_pages=kp, v_pages=vp, page_table=table,
+                        page_ro=ro)
+
+        self.cache = _map_paged(self.cache, fork)
+
+    def set_pages_ro(self, pages, value: bool) -> None:
+        """(Un)write-protect physical pages device-side: decode scatters at
+        an RO page are dropped like overflow writes (defense in depth — the
+        pool manager forks before any legitimate write reaches one)."""
+        idx = jnp.asarray(list(pages), jnp.int32)
+
+        def mark(d):
+            return dict(d, page_ro=d["page_ro"].at[..., idx].set(value))
+
+        self.cache = _map_paged(self.cache, mark)
+
+    def park(self, slot: int) -> None:
+        """Point a released slot's table rows at the parking page (its idle
+        decode writes must never land on pages a later admission owns)."""
+        from repro.serve import disagg
+
+        self.cache = disagg.park_slot(self.cache, slot)
 
     # -- cache insertion ---------------------------------------------------------
-    def _insert(self, full, one, slot, phys_pages):
+    def _insert(self, full, one, slot, phys_pages, write_ok):
         """Insert the freshly prefilled 1-row cache ``one`` into slot ``slot``
         of the engine cache ``full`` (recursive walk; paged attention dicts
         scatter through the page table, everything else along the batch
         axis)."""
         if isinstance(full, dict):
             if "k_pages" in full:
-                return self._insert_paged_attn(full, one, slot, phys_pages)
-            return {key: self._insert(full[key], one[key], slot, phys_pages)
+                return self._insert_paged_attn(full, one, slot, phys_pages,
+                                               write_ok)
+            return {key: self._insert(full[key], one[key], slot, phys_pages,
+                                      write_ok)
                     for key in full}
         if isinstance(full, list):
-            return [self._insert(f, o, slot, phys_pages)
+            return [self._insert(f, o, slot, phys_pages, write_ok)
                     for f, o in zip(full, one)]
         return _insert_row(full, one, slot, self.n_slots)
 
-    def _insert_paged_attn(self, full, one, slot, phys_pages):
+    def _insert_paged_attn(self, full, one, slot, phys_pages, write_ok):
         """Scatter a dense (1, S, KV, hd) prefill KV into the slot's physical
-        pages and point the slot's page-table row at them."""
+        pages and point the slot's page-table row at them.  Pages with
+        ``write_ok=False`` are *shared* — the donor already holds their
+        prefix KV — so their scatter is routed to the parking page while the
+        table still maps them."""
         pt = self.page_tokens
+        park = full["k_pages"].shape[-4] - 1
+        dest = jnp.where(write_ok, phys_pages, park)
 
         def repage_scatter(pool, dense):
             *lead, _, s, kv, hd = dense.shape
             d = dense.reshape(*lead, s // pt, pt, kv, hd).astype(pool.dtype)
             if pool.ndim == 4:
-                return pool.at[phys_pages].set(d)
-            return pool.at[:, phys_pages].set(d)   # leading scan dim
+                return pool.at[dest].set(d)
+            return pool.at[:, dest].set(d)   # leading scan dim
 
         table, pos = full["page_table"], full["pos"]
         if table.ndim == 2:
@@ -166,46 +271,143 @@ class ServeEngine:
             pos=pos,
         )
 
+
+class ServeEngine:
+    """Greedy-decoding continuous-batching engine over ``n_slots`` slots —
+    the facade wiring scheduler, KV pool manager, and executor together."""
+
+    def __init__(self, model, params, *, n_slots: int, max_seq: int,
+                 enc_len: int = 0, paged_kv: bool = False,
+                 page_tokens: int = 16, policy: str = "continuous",
+                 prefix_share: bool = False, kv_pages: int | None = None):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.paged_kv = paged_kv
+        if prefix_share and not paged_kv:
+            raise ValueError("prefix_share=True requires paged_kv=True "
+                             "(sharing happens on the physical page pool)")
+        self.prefix_share = prefix_share
+        self.executor = Executor(model, params, n_slots=n_slots,
+                                 max_seq=max_seq, enc_len=enc_len,
+                                 paged_kv=paged_kv, page_tokens=page_tokens)
+        if paged_kv:
+            self.page_tokens = page_tokens
+            self.pages_per_slot = max_seq // page_tokens
+            n_pages = n_slots * self.pages_per_slot
+            if kv_pages is not None:
+                if not self.pages_per_slot <= kv_pages <= n_pages:
+                    raise ValueError(
+                        f"kv_pages={kv_pages} must be between pages_per_slot"
+                        f"={self.pages_per_slot} and the device pool size "
+                        f"{n_pages}")
+                n_pages = kv_pages
+            self.pool = KVPoolManager(n_pages)
+            self.slot_pages: dict[int, list[int]] = {}
+            self._ro_pages: set[int] = set()
+        self.scheduler = Scheduler(n_slots, policy)
+        self.slot_free = [True] * n_slots
+        self.slot_req: dict[int, Request] = {}
+        self.slot_generated: dict[int, list] = {}
+        self.slot_pos: dict[int, int] = {}
+        self.slot_entry: dict[int, object] = {}
+        self.done: list[Completion] = []
+        self._last_tokens = np.zeros((n_slots, 1), np.int32)
+        self._tick = 0
+        self._incomplete = 0
+        self.max_live = 0
+
+    # -- compat views ------------------------------------------------------------
+    @property
+    def cache(self):
+        return self.executor.cache
+
+    @property
+    def pending(self) -> list[Request]:
+        return [e.req for e in self.scheduler.pending_entries()]
+
+    @property
+    def allocator(self):
+        """The pool layer (old name for the paged engine's allocator)."""
+        return self.pool
+
     # -- public API --------------------------------------------------------------
     def submit(self, req: Request) -> None:
         if len(req.prompt) >= self.max_seq:
             raise ValueError("prompt longer than max_seq")
-        self.pending.append(req)
+        self.scheduler.submit(req, tick=self._tick,
+                              t_submit=time.perf_counter())
 
     def step(self) -> None:
-        """One engine tick: admit pending requests, then one decode step."""
+        """One engine tick: admit per the policy, then one decode step."""
         self._admit()
-        if not self.slot_req:
-            return
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self._last_tokens)
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        nxt_np = np.asarray(nxt)
-        new_last = np.asarray(self._last_tokens).copy()
-        for slot in list(self.slot_req):
-            tok = int(nxt_np[slot])
-            self.slot_generated[slot].append(tok)
-            self.slot_pos[slot] += 1
-            new_last[slot, 0] = tok
-            self._finish_if_ended(slot)
-        self._last_tokens = jnp.asarray(new_last)
+        if self.slot_req:
+            if self.paged_kv and self.prefix_share:
+                self._cow_tick()
+            nxt = self.executor.decode(self._last_tokens)
+            for slot in list(self.slot_req):
+                tok = int(nxt[slot])
+                self.slot_generated[slot].append(tok)
+                self.slot_pos[slot] += 1
+                self._last_tokens[slot, 0] = tok
+                self._finish_if_ended(slot)
+        self._tick += 1
 
-    def run(self, max_ticks: int = 10_000) -> list[Completion]:
+    def run(self, max_ticks: int = 10_000, *,
+            strict: bool = False) -> list[Completion]:
+        """Drive ticks until every submitted request completes or
+        ``max_ticks`` is exhausted.
+
+        On exhaustion the still-in-flight work is **not** silently dropped:
+        each live slot yields a ``Completion(finished=False)`` with its
+        partial tokens, each still-queued request one with no tokens, and
+        ``stats()['incomplete']`` counts them — or, under ``strict=True``,
+        a ``RuntimeError`` names the unfinished rids.  Engine state is left
+        intact either way, so ``run()`` can be called again to continue."""
         ticks = 0
-        while (self.pending or self.slot_req) and ticks < max_ticks:
+        while ((self.scheduler.pending_count or self.slot_req)
+               and ticks < max_ticks):
             self.step()
             ticks += 1
-        return self.done
+        live = [(slot, self.slot_req[slot]) for slot in sorted(self.slot_req)]
+        queued = self.scheduler.pending_entries()
+        self._incomplete = len(live) + len(queued)
+        if self._incomplete and strict:
+            rids = [r.rid for _, r in live] + [e.req.rid for e in queued]
+            raise RuntimeError(
+                f"run(max_ticks={max_ticks}) exhausted with "
+                f"{self._incomplete} request(s) unfinished (rids {rids}) — "
+                "raise max_ticks, or strict=False for explicit incomplete "
+                "completions")
+        out = list(self.done)
+        for slot, req in live:
+            e = self.slot_entry.get(slot)
+            out.append(Completion(req.rid, list(self.slot_generated[slot]),
+                                  False, e.arrival if e else 0, self._tick))
+        for e in queued:
+            out.append(Completion(e.req.rid, [], False, e.arrival,
+                                  self._tick))
+        return out
 
     def stats(self) -> dict:
-        """Engine health: completions + the paged pool's allocator state."""
-        out = {"completed": len(self.done), "pending": len(self.pending),
-               "live_slots": len(self.slot_req), "paged_kv": self.paged_kv}
+        """Engine health across all three layers."""
+        out = {"completed": len(self.done),
+               "pending": self.scheduler.pending_count,
+               "live_slots": len(self.slot_req), "paged_kv": self.paged_kv,
+               "policy": self.scheduler.policy,
+               "submitted": self.scheduler.submitted,
+               "admitted": self.scheduler.admitted,
+               "ticks": self._tick, "incomplete": self._incomplete,
+               "max_live": self.max_live}
         if self.paged_kv:
-            out.update(pages_allocated=self.allocator.allocs,
-                       pages_freed=self.allocator.frees,
-                       pages_free=self.allocator.n_free,
-                       page_tokens=self.page_tokens)
+            out.update(pages_allocated=self.pool.allocs,
+                       pages_freed=self.pool.frees,
+                       pages_free=self.pool.n_free,
+                       page_tokens=self.page_tokens,
+                       pages_shared=self.pool.shared_maps,
+                       cow_copies=self.pool.cow_copies,
+                       cow_debt=self.pool.cow_debt)
         return out
 
     # -- internals --------------------------------------------------------------
@@ -219,51 +421,159 @@ class ServeEngine:
                  len(gen) >= req.max_new_tokens or
                  self.slot_pos[slot] >= self.max_seq - 1)
         if ended:
-            self.done.append(Completion(req.rid, gen))
+            e = self.slot_entry.get(slot)
+            self.done.append(Completion(req.rid, gen, True,
+                                        e.arrival if e else 0, self._tick))
             self._release(slot)
         return ended
 
     def _admit(self) -> None:
-        while self.pending and any(self.slot_free):
-            req = self.pending.pop(0)
-            slot = self.slot_free.index(True)
-            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-            if self.paged_kv:
-                phys = self.allocator.alloc(self.pages_per_slot)
-                self.slot_pages[slot] = phys
-                phys_arg = jnp.asarray(phys, jnp.int32)
-            else:
-                phys_arg = jnp.zeros((0,), jnp.int32)
-            logits, self.cache = self._prefill(self.params, self.cache,
-                                               tokens, slot, phys_arg)
-            first = int(np.asarray(jnp.argmax(logits[0, -1])))
-            self.slot_free[slot] = False
-            self.slot_req[slot] = req
-            self.slot_generated[slot] = [first]
-            self.slot_pos[slot] = len(req.prompt) + 1
-            # the prefill token can already terminate the request (EOS, or
-            # max_new_tokens=1, or the cache is full): complete-and-release
-            # here, or the slot decodes a spurious extra step — and in paged
-            # mode holds its KV pages — for a full extra tick
-            if self._finish_if_ended(slot):
+        """Admit what the scheduler selects, until it selects nothing (an
+        admission-time completion frees its slot within the tick, so the
+        loop re-asks — preserving the old engine's immediate reuse)."""
+        while True:
+            n_free = sum(self.slot_free)
+            entries = self.scheduler.select(n_free, live=len(self.slot_req),
+                                            tick=self._tick)
+            if not entries:
+                return
+            for idx, entry in enumerate(entries):
+                slot = self.slot_free.index(True)
+                if not self._admit_one(entry, slot):
+                    # pool pressure: hand this and the rest back, front of
+                    # queue, original order — retry next tick
+                    for e in reversed(entries[idx:]):
+                        self.scheduler.requeue(e)
+                    return
+
+    def _admit_one(self, entry, slot: int) -> bool:
+        """Prefill one selected request into ``slot``.  Returns False (no
+        state changed, entry must be requeued) when the pool cannot back it
+        fork-safely."""
+        req = entry.req
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        if self.paged_kv:
+            shared, shared_rw = ([], [])
+            if self.prefix_share:
+                shared, shared_rw = self._share_plan(req)
+            n_fresh = self.pages_per_slot - len(shared) - len(shared_rw)
+            if not self.pool.can_admit(n_fresh, len(shared_rw)):
+                return False
+            fresh = self.pool.alloc(n_fresh)
+            if shared:
+                self.pool.share_pages(shared)
+            if shared_rw:
+                self.pool.share_pages(shared_rw, writable=True)
+            phys = shared + shared_rw + fresh
+            self.slot_pages[slot] = phys
+            write_ok = np.ones(self.pages_per_slot, bool)
+            write_ok[:len(shared) + len(shared_rw)] = False
+            newly_ro = [p for p in shared + shared_rw
+                        if self.pool.refcount_of(p) >= 2]
+            if newly_ro:
+                self.executor.set_pages_ro(newly_ro, True)
+                self._ro_pages.update(newly_ro)
+            phys_arg = jnp.asarray(phys, jnp.int32)
+            ok_arg = jnp.asarray(write_ok)
+        else:
+            phys_arg = jnp.zeros((0,), jnp.int32)
+            ok_arg = jnp.zeros((0,), bool)
+        first = self.executor.prefill(tokens, slot, phys_arg, ok_arg)
+        self.slot_free[slot] = False
+        self.slot_req[slot] = req
+        self.slot_generated[slot] = [first]
+        self.slot_pos[slot] = len(req.prompt) + 1
+        self.slot_entry[slot] = entry
+        self.max_live = max(self.max_live, len(self.slot_req))
+        # the prefill token can already terminate the request (EOS, or
+        # max_new_tokens=1, or the cache is full): complete-and-release
+        # here, or the slot decodes a spurious extra step — and in paged
+        # mode holds its KV pages — for a full extra tick
+        if self._finish_if_ended(slot):
+            return True
+        self._last_tokens[slot, 0] = first
+        return True
+
+    def _share_plan(self, req: Request) -> tuple[list[int], list[int]]:
+        """Find the live donor with the longest common prompt prefix and
+        split its pages into (immutably shared, writable/COW shared).
+
+        Full pages entirely inside the common prefix hold bit-identical KV
+        for both sequences and are shared read-only.  The partial page at
+        the prefix boundary is shared copy-on-write only when the new
+        prompt ends exactly at the prefix — otherwise the new prefill must
+        write that page's tail, which would need a fork *at admission*;
+        allocating fresh is simpler and equally correct."""
+        prompt = [int(t) for t in req.prompt]
+        best_c, donor = 0, None
+        for slot, dreq in self.slot_req.items():
+            if slot not in self.slot_pages:
                 continue
-            lt = np.asarray(self._last_tokens).copy()
-            lt[slot, 0] = first
-            self._last_tokens = jnp.asarray(lt)
+            dp = dreq.prompt
+            c = 0
+            for a, b in zip(prompt, dp):
+                if a != int(b):
+                    break
+                c += 1
+            if c > best_c:
+                best_c, donor = c, slot
+        if donor is None:
+            return [], []
+        pt = self.page_tokens
+        n_full = min(best_c // pt, self.pages_per_slot)
+        shared = [self.slot_pages[donor][j] for j in range(n_full)]
+        shared_rw = []
+        if (best_c % pt and len(prompt) == best_c
+                and n_full < self.pages_per_slot):
+            shared_rw = [self.slot_pages[donor][n_full]]
+        return shared, shared_rw
+
+    def _cow_tick(self) -> None:
+        """Fork any shared page a live slot is about to write.
+
+        The write position this tick is ``slot_pos - 1`` (prefill leaves
+        ``slot_pos`` one ahead of the cache position).  If its page is
+        still mapped by another sequence, the pool moves this holder onto a
+        fresh page and the executor copies contents + remaps the table —
+        before the decode scatter, so no write ever lands on a shared
+        page."""
+        for slot in list(self.slot_req):
+            pages = self.slot_pages.get(slot)
+            if not pages:
+                continue
+            wpos = self.slot_pos[slot] - 1
+            j = wpos // self.page_tokens
+            if j >= self.pages_per_slot:
+                continue               # cache full: the write is dropped
+            p = pages[j]
+            if self.pool.refcount_of(p) <= 1:
+                if p in self._ro_pages:     # last co-holder is gone
+                    self.executor.set_pages_ro([p], False)
+                    self._ro_pages.discard(p)
+                continue
+            new, _ = self.pool.cow_write(p)
+            self.executor.fork_page(slot, j, p, new)
+            pages[j] = new
+            if self.pool.refcount_of(p) <= 1 and p in self._ro_pages:
+                self.executor.set_pages_ro([p], False)
+                self._ro_pages.discard(p)
 
     def _release(self, slot: int) -> None:
         self.slot_free[slot] = True
         del self.slot_req[slot]
         del self.slot_generated[slot]
         del self.slot_pos[slot]
+        self.slot_entry.pop(slot, None)
         if self.paged_kv and slot in self.slot_pages:
-            from repro.serve import disagg
-
             # park the row before its pages go back to the free list: idle
             # rows keep scattering per-step KV, and those writes must never
             # land on pages a later admission may own
-            self.cache = disagg.park_slot(self.cache, slot)
-            self.allocator.free(self.slot_pages.pop(slot))
+            self.executor.park(slot)
+            dropped = self.pool.release(self.slot_pages.pop(slot))
+            ro_clear = [p for p in dropped if p in self._ro_pages]
+            if ro_clear:
+                self.executor.set_pages_ro(ro_clear, False)
+                self._ro_pages.difference_update(ro_clear)
 
 
-__all__ = ["ServeEngine", "Request", "Completion"]
+__all__ = ["ServeEngine", "Executor", "Request", "Completion"]

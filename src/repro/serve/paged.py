@@ -169,7 +169,21 @@ class PagedKVWindow:
         ``memhandle_release`` invalidates the slot, bumps the traced epoch
         (stale remote writes are dropped and counted) and records the release
         in the dup family's flush queues, so statically-created handle
-        windows for this page raise on use-after-free."""
+        windows for this page raise on use-after-free.
+
+        Freeing a page that is not live (double free, or never allocated)
+        raises with the page id: a second release would bump the epoch past
+        the one outstanding handles were checked against and silently re-arm
+        a dead slot.  The guard runs whenever liveness is concrete (eager
+        host-side pool management); under a trace the liveness bit is a
+        tracer and the epoch machinery remains the backstop."""
+        import jax.core
+
+        live = self.live[page] if 0 <= page < self.spec.n_pages else False
+        if not isinstance(live, jax.core.Tracer) and not bool(live):
+            raise ValueError(
+                f"free_page({page}): page is not allocated "
+                f"(double free, or never alloc_page'd)")
         win = memhandle_release(self.window, page)
         return self._replace(window=win, handles=self.handles.at[page].set(0),
                              live=self.live.at[page].set(False))
@@ -289,4 +303,149 @@ class PagedKVWindow:
         return pool, flat.reshape(2, s.page_tokens, s.kv_heads, s.head_dim)
 
 
-__all__ = ["PageSpec", "PagedKVWindow", "transfer_plan"]
+# ---------------------------------------------------------------------------
+# Host-side pool manager: refcounts + copy-on-write sharing over physical pages
+# ---------------------------------------------------------------------------
+
+
+class KVPoolManager:
+    """Refcounted physical-page pool with copy-on-write prefix sharing.
+
+    The serving engine's pool layer (``docs/serving_disagg.md``): where
+    :class:`repro.serve.disagg.PageAllocator` hands every sequence exclusive
+    pages, this manager lets sequences with a common prompt prefix *map the
+    same physical page* — a refcount per page, :meth:`share_pages` to map an
+    allocated page into another sequence, and :meth:`cow_write` to fork a
+    shared page the moment a holder needs to write it (vLLM-style COW on the
+    paper's memhandle lifetime model: a physical page is a memhandle whose
+    exposure outlives any one sequence, and the epoch machinery — not this
+    bookkeeping — is what catches a stale access if the two ever disagree).
+
+    Bookkeeping is O(sequences touching a page), never O(pool): refcounts
+    are per-page integers, the free list is FIFO (freed pages are reused as
+    late as possible — maximum grace for in-flight transfers), and the COW
+    fork debt is derived from the handful of writable-shared pages.
+
+    Guards: releasing a page with refcount 0 (double free / never
+    allocated) raises with the page id; so does sharing or cow-writing one.
+    :meth:`can_admit` reserves one free page per outstanding writable share
+    (each such holder may still fork), so admission never promises pages a
+    later COW fault will need.
+    """
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._ref = [0] * n_pages
+        self._free = list(range(n_pages))
+        self._cow: set[int] = set()      # writable-shared pages (may fork)
+        self.allocs = 0
+        self.frees = 0
+        self.cow_copies = 0
+        self.shared_maps = 0
+
+    # -- capacity ---------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def cow_debt(self) -> int:
+        """Free pages that must stay reserved for pending COW forks: every
+        extra holder of a writable-shared page will fork exactly once."""
+        return sum(self._ref[p] - 1 for p in self._cow if self._ref[p] > 1)
+
+    def can_admit(self, n_fresh: int, n_writable_shares: int = 0) -> bool:
+        """Would allocating ``n_fresh`` pages plus taking
+        ``n_writable_shares`` new writable shares stay fork-safe?"""
+        return len(self._free) - self.cow_debt >= n_fresh + n_writable_shares
+
+    # -- lifecycle ---------------------------------------------------------------
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV page pool exhausted: need {n} pages, "
+                f"{len(self._free)}/{self.n_pages} free")
+        pages, self._free = self._free[:n], self._free[n:]
+        for p in pages:
+            self._ref[p] = 1
+        self.allocs += n
+        return pages
+
+    def refcount_of(self, page: int) -> int:
+        return self._ref[page]
+
+    def share_pages(self, pages, *, writable: bool = False) -> None:
+        """Map already-allocated pages into one more sequence (refcount+1).
+
+        ``writable=True`` marks the share copy-on-write: the page sits at a
+        holder's future write position (a partial prefix page) and one free
+        page is reserved per extra holder for the eventual fork."""
+        for p in pages:
+            if self._ref[p] <= 0:
+                raise ValueError(f"share_pages({p}): page is not allocated")
+            self._ref[p] += 1
+            if writable:
+                self._cow.add(p)
+        self.shared_maps += len(pages)
+
+    def cow_write(self, page: int) -> tuple[int, bool]:
+        """Resolve a write to ``page``: ``(page, False)`` if this holder is
+        the sole owner (write in place), else fork — allocate a fresh page,
+        move one reference onto it, and return ``(new_page, True)``; the
+        caller copies the contents and remaps its page table."""
+        if self._ref[page] <= 0:
+            raise ValueError(f"cow_write({page}): page is not allocated")
+        if self._ref[page] == 1:
+            self._cow.discard(page)
+            return page, False
+        if not self._free:
+            raise RuntimeError(
+                f"cow_write({page}): pool exhausted at fork "
+                f"(admission outran the COW reserve)")
+        new = self._free.pop(0)
+        self._ref[new] = 1
+        self._ref[page] -= 1
+        if self._ref[page] <= 1:
+            self._cow.discard(page)
+        self.allocs += 1
+        self.cow_copies += 1
+        return new, True
+
+    def release(self, pages) -> list[int]:
+        """Drop one reference per page; pages reaching refcount 0 return to
+        the FIFO free list.  Returns the pages whose refcount dropped to
+        ``<= 1`` (no longer shared — the engine clears their write
+        protection).  Raises on double free with the offending page id."""
+        dropped = []
+        for p in pages:
+            if self._ref[p] <= 0:
+                raise ValueError(
+                    f"release({p}): double free (page is not allocated)")
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+                self.frees += 1
+                self._cow.discard(p)
+                dropped.append(p)
+            elif self._ref[p] == 1:
+                self._cow.discard(p)
+                dropped.append(p)
+        return dropped
+
+    # -- health ----------------------------------------------------------------
+    def stats(self) -> dict:
+        live = sum(1 for r in self._ref if r > 0)
+        return {
+            "n_pages": self.n_pages,
+            "n_free": len(self._free),
+            "live_pages": live,
+            "occupancy": live / max(self.n_pages, 1),
+            "allocs": self.allocs,
+            "frees": self.frees,
+            "cow_copies": self.cow_copies,
+            "shared_maps": self.shared_maps,
+            "cow_debt": self.cow_debt,
+        }
+
+
+__all__ = ["PageSpec", "PagedKVWindow", "KVPoolManager", "transfer_plan"]

@@ -3,11 +3,13 @@
 Runs the full round trip on the handle path — decode-side page allocation
 (the once-only P5 handle exchange), batched prefill pushes with one ordered
 flush epoch per sequence batch, a chained put_signal doorbell per sequence,
-fetch_op ticket admission, per-lane thread-scoped completion — and then a
-stale read after eviction to close the loop on the P5 read guarantee.
+scheduler-policy-driven fetch_op ticket admission (``claim_slots``),
+per-lane thread-scoped completion — and then a stale read after eviction to
+close the loop on the P5 read guarantee.
 
 Exercised in two shapes: the default 2-lane configuration and a single-lane
-3-sequence configuration (doorbells for more sequences than lanes).
+3-sequence configuration (doorbells for more sequences than lanes), plus
+host-side checks of the policy ticket budgets the SPMD admission consumes.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -15,11 +17,24 @@ import os, sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 from repro.serve.disagg import demo_round_trip
+from repro.serve.scheduler import Scheduler
+
+# the policy layer's admission budgets drive claim_slots: continuous grants
+# the free-slot count every tick, static grants nothing while work is live
+cont = Scheduler(4, "continuous")
+assert cont.ticket_window(live=0) == 4
+assert cont.ticket_window(live=3) == 1
+assert cont.ticket_window(live=4) == 0
+stat = Scheduler(4, "static")
+assert stat.ticket_window(live=0) == 4
+assert stat.ticket_window(live=1) == 0   # whole-batch drain before refill
+assert cont.slot_for_ticket(6) == 2
 
 checks = demo_round_trip(n_seqs=2, pages_per_seq=2, n_lanes=2)
 assert all(checks.values()), checks
 
-checks = demo_round_trip(n_seqs=3, pages_per_seq=1, n_lanes=1)
+checks = demo_round_trip(n_seqs=3, pages_per_seq=1, n_lanes=1,
+                         policy="static")
 assert all(checks.values()), checks
 
 print("SERVE DISAGG OK")
