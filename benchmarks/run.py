@@ -21,6 +21,9 @@ Sections:
   serve_load       — the serving control plane under a bursty open-loop
                      trace: continuous vs static admission (tok/s, p99
                      ticks) + COW prefix sharing on a page-capped pool
+  kv_tier          — the tiered KV-cache hierarchy: host-memory spill vs
+                     all-HBM at fixed HBM pages (concurrent sequences,
+                     per-decode-call overlap check, migration counters)
   plan_overhead    — the declarative-plan layer: build-once cost vs
                      execute-many replay, planned/hand-tuned/naive phases
   hier_collectives — topology-aware hierarchical plans vs flat: per-tier
@@ -50,6 +53,7 @@ MODULES = [
     "benchmarks.moe_alltoall",
     "benchmarks.serve_disagg",
     "benchmarks.serve_load",
+    "benchmarks.kv_tier",
     "benchmarks.plan_overhead",
     "benchmarks.hier_collectives",
     "benchmarks.backend_matrix",

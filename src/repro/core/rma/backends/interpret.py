@@ -21,8 +21,14 @@ schedule order with the transport semantics the substrate documents:
   it does in-mesh.
 * flush/entry epochs and token ties — no-ops: host arrays are always
   complete (value-wise, ``_tie`` adds zero).
-* ``put_handle`` — not modeled (P5 headers need live registration state);
-  raises ``NotImplementedError``.
+* ``put_handle``/``get_handle`` — modeled only when the caller supplies
+  ``regs`` (stacked ``(n, slots, 3)`` dynamic-registration tables, one per
+  handle window): the shipped handle epoch is validated against the
+  target's live slot registration, stale puts are dropped and stale gets
+  zero-masked, both counted into the per-rank ``err_count`` at the target
+  — the same P5 lifetime semantics the substrate implements.  Without
+  ``regs`` they raise ``NotImplementedError`` (no registration state to
+  validate against).
 
 Two entry points:
 
@@ -51,8 +57,8 @@ from repro.core.rma.window import Window
 @dataclasses.dataclass
 class InterpretResult:
     """Stacked ``(n, ...)`` analogue of ``PlanResult``: final window
-    buffers, named outputs, and the per-rank stale-handle counter (always
-    zeros here — the handle path is not modeled)."""
+    buffers, named outputs, and the per-rank stale-handle counter (counted
+    at the target, nonzero only for handle ops run with ``regs``)."""
 
     buffers: dict[str, jax.Array]
     outputs: dict[str, jax.Array]
@@ -96,11 +102,13 @@ def _off_at(off, rank):
 
 
 class _Interpreter:
-    def __init__(self, compiled: CompiledPlan, buffers, bindings, axis: str):
+    def __init__(self, compiled: CompiledPlan, buffers, bindings, axis: str,
+                 regs=None):
         self.c = compiled
         self.axis = axis
         self.buffers = dict(buffers)
         self.bindings = dict(bindings or {})
+        self.regs = dict(regs or {})
         wnames = list(compiled.windows)
         for wname in wnames:
             if wname not in self.buffers:
@@ -118,6 +126,7 @@ class _Interpreter:
                     f"{(self.n,) + shape} dtype={dt}, got "
                     f"shape={tuple(got.shape)} dtype={got.dtype}")
         self.values: dict[int, jax.Array] = {}
+        self.errs = jnp.zeros((self.n,), jnp.int32)
 
     # -- resolution --------------------------------------------------------
     def resolve(self, spec):
@@ -197,11 +206,45 @@ class _Interpreter:
                     buf[t], new.astype(buf.dtype), start, axis=0))
             self.buffers[o.window] = buf
             self.values[o.idx] = old
-        elif o.kind == "put_handle":
-            raise NotImplementedError(
-                "the interpret backend does not model P5 memory-handle "
-                "headers (live registration state); execute put_handle "
-                "plans on the rma backend")
+        elif o.kind in ("put_handle", "get_handle"):
+            regs = self.regs.get(o.window)
+            if regs is None:
+                raise NotImplementedError(
+                    "the interpret backend does not model P5 memory-handle "
+                    "headers (live registration state); execute "
+                    f"{o.kind} plans on the rma backend, or pass "
+                    "regs={window: stacked (n, slots, 3) registration "
+                    "tables} to interpret() to model them")
+            # the handle travels as runtime data: origin s ships its copy's
+            # [epoch, offset] header; the target validates the epoch against
+            # its *live* slot registration — stale puts drop, stale gets
+            # zero-mask, both counted at the target (P5 lifetime rule)
+            handle = self.resolve(o.handle)          # stacked (n, 4)
+            data = (self.resolve(o.source).astype(buf.dtype)
+                    if o.kind == "put_handle" else None)
+            if o.kind == "get_handle":
+                res = jnp.zeros((self.n, o.size) + buf.shape[2:], buf.dtype)
+            for s, t in o.perm:
+                h = handle[s]
+                slot = h[3]
+                start = h[1] + _off_at(off, s)
+                live = regs[t][slot, 0]
+                fresh = (h[0] == live) & (live > 0)
+                if o.kind == "put_handle":
+                    new = lax.dynamic_update_slice_in_dim(
+                        buf[t], data[s], start, axis=0)
+                    buf = buf.at[t].set(jnp.where(fresh, new, buf[t]))
+                else:
+                    chunk = lax.dynamic_slice_in_dim(buf[t], start, o.size,
+                                                     axis=0)
+                    chunk = jnp.where(fresh, chunk, jnp.zeros_like(chunk))
+                    res = res.at[s].set(chunk)
+                self.errs = self.errs.at[t].add(
+                    jnp.where(fresh, 0, 1).astype(jnp.int32))
+            if o.kind == "put_handle":
+                self.buffers[o.window] = buf
+            else:
+                self.values[o.idx] = res
         else:
             raise AssertionError(o.kind)
 
@@ -231,18 +274,20 @@ class _Interpreter:
 
         outputs = {name: self.resolve(spec) for name, spec in self.c.outputs}
         return InterpretResult(buffers=dict(self.buffers), outputs=outputs,
-                               err_count=jnp.zeros((self.n,), jnp.int32))
+                               err_count=self.errs)
 
 
 def interpret_plan(compiled: CompiledPlan, buffers, bindings=None, *,
-                   axis: str = "x") -> InterpretResult:
+                   axis: str = "x", regs=None) -> InterpretResult:
     """Execute ``compiled`` on stacked host arrays — see module docstring.
 
     ``buffers`` maps every plan window to its stacked ``(n, ...)`` initial
     contents; ``bindings`` fills the declared placeholders with stacked
     ``(n,) + declared_shape`` arrays.  ``axis`` must be the axis name the
-    plan's closures were recorded against."""
-    return _Interpreter(compiled, buffers, bindings, axis).run()
+    plan's closures were recorded against.  ``regs`` (optional) maps handle
+    windows to stacked ``(n, slots, 3)`` registration tables, enabling the
+    ``put_handle``/``get_handle`` lifetime model."""
+    return _Interpreter(compiled, buffers, bindings, axis, regs).run()
 
 
 def vmapped_execute(compiled: CompiledPlan, buffers, bindings=None, *,

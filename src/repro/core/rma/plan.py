@@ -80,7 +80,7 @@ class OpRef:
 #: Comm-op kinds and their baseline phase cost (before routing/offset terms).
 _COMM_KINDS = frozenset({
     "put", "get", "send", "hop", "accumulate", "fetch_op", "signal",
-    "put_handle",
+    "put_handle", "get_handle",
 })
 
 
@@ -105,6 +105,7 @@ class _Op:
     handle: Any = None             # put_handle: handle source
     value: Any = None              # signal: flag payload override
     fn: Callable | None = None     # compute
+    prefetch: bool = False         # planned early issue (plan.prefetch edge)
     label: str = ""
     # -- filled by the compiler --
     deps: frozenset = frozenset()       # value ∪ completion (scheduling)
@@ -153,6 +154,8 @@ class _Step:
     phases: int = 0
     tier: str = "inter"            # which ledger the phases bill to
     macro: "_Macro | None" = None  # gspmd: the macro this step realizes
+    pwait: bool = False            # flush placed by a prefetch edge (the
+                                   # late wait right before the consumer)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,6 +241,7 @@ class RmaPlan:
         self._bindings: dict[str, tuple[tuple, Any]] = {}
         self._ops: list[_Op] = []
         self._edges: list[tuple[int, int]] = []   # plan.order(first, then)
+        self._prefetch: list[tuple[int, int]] = []  # plan.prefetch(op, before)
         self._outputs: list[tuple[str, Any]] = []
         self._macros: list[_Macro] = []           # backend-selectable ranges
 
@@ -357,6 +361,20 @@ class RmaPlan:
                             offset=offset, stream=stream, after=tuple(after),
                             shape=shape, dtype=dtype, label=label)
 
+    def get_handle(self, window: str, handle, perm, *, slot=None, offset=0,
+                   size: int, stream=None, after=(), label: str = "") -> OpRef:
+        """Record a P5 memory-handle read: request + response (2 HLO
+        phases), no registration query round-trip.  A stale handle — the
+        target released/re-attached the slot since the handle was shipped —
+        is **zero-masked** and counted into :attr:`PlanResult.err_count`,
+        never returned as stale bytes; this is what lets the KV tier prove
+        a demoted-then-freed page can never be promoted.  ``slot`` (static)
+        arms the trace-time use-after-release check.  The fetched payload is
+        available as this op's value."""
+        return self._record(kind="get_handle", window=window, handle=handle,
+                            perm=perm, slot=slot, offset=offset, size=size,
+                            stream=stream, after=tuple(after), label=label)
+
     def compute(self, fn: Callable[[PlanEnv], Array], *, reads=(), after=(),
                 shape=None, dtype=None, label: str = "") -> OpRef:
         """Record a local (zero-phase) transform over earlier results.
@@ -440,6 +458,21 @@ class RmaPlan:
         cycle, which :meth:`compile` rejects."""
         self._edges.append((first.idx, then.idx))
 
+    def prefetch(self, op: OpRef, before: OpRef) -> None:
+        """Declare ``op`` (a transport op, typically a :meth:`get_handle`)
+        as a planned **prefetch** for ``before``: issue it as early as the
+        schedule allows on a stream the planner dedicates to prefetch
+        traffic, and place its completion epoch *late* — immediately before
+        ``before``'s step — instead of at the next ordinary flush point.
+        Everything scheduled in between (the previous tick's attention, the
+        demote traffic) overlaps the in-flight read; the phase table renders
+        the op as ``prefetch:<label>`` and the late epoch as
+        ``prefetch-wait[window/stream]``, which is what the KV-tier tests
+        assert the overlap off.  Plans that record no prefetch edges compile
+        byte-identically to before this class of edge existed."""
+        self._edges.append((op.idx, before.idx))
+        self._prefetch.append((op.idx, before.idx))
+
     def output(self, name: str, value) -> None:
         """Mark ``value`` (an OpRef or ``callable(env)``) as a named output
         of every replay."""
@@ -500,6 +533,19 @@ class RmaPlan:
                 f"unknown backend {backend!r}; expected one of 'auto', "
                 "'rma', 'gspmd', 'interpret'")
         ops = [dataclasses.replace(o) for o in self._ops]
+
+        # prefetch edges: tag the early-issued ops and index the late-wait
+        # placement by consumer (pass 3 dedicates a stream, pass 6 places
+        # the epoch right before each consumer's step)
+        pf_by_consumer: dict[int, list[int]] = {}
+        for p, c in self._prefetch:
+            if ops[p].kind == "compute":
+                raise PlanError(
+                    f"plan.prefetch: op {p} is a compute — only transport "
+                    "ops can be prefetched (their completion is what the "
+                    "late wait covers)")
+            ops[p].prefetch = True
+            pf_by_consumer.setdefault(c, []).append(p)
 
         # backend selection — decide, per recorded macro, whether its whole
         # op range leaves the substrate for a compiler collective.  The
@@ -632,22 +678,35 @@ class RmaPlan:
                       and tdecl.perm_is_intra(o.perm) else "inter")
 
         # pass 3 — stream assignment: chains inherit, independent chains
-        # spread round-robin over the declared streams (max P1 concurrency)
+        # spread round-robin over the declared streams (max P1 concurrency).
+        # A window that carries prefetch ops dedicates its *last* declared
+        # stream to them: the late prefetch-wait epoch then drains only
+        # prefetch traffic, never an unrelated op that happened to share
+        # the stream (which would serialize exactly what the edge is meant
+        # to overlap).
         pos = {idx: k for k, idx in enumerate(topo)}
         next_stream: dict[str, int] = {}
+        pf_windows = {ops[p].window for ops_list in pf_by_consumer.values()
+                      for p in ops_list}
         for idx in topo:
             o = ops[idx]
             if o.kind == "compute" or o.stream is not None:
                 continue
             w = self._windows[o.window]
+            if o.prefetch:
+                o.stream = w.max_streams - 1
+                continue
             same_win = [d for d in self._comm_ancestors(ops, o)
                         if ops[d].window == o.window
                         and ops[d].stream is not None]
             if same_win:
                 o.stream = ops[max(same_win, key=lambda d: pos[d])].stream
             else:
+                lanes = w.max_streams
+                if o.window in pf_windows and w.max_streams > 1:
+                    lanes = w.max_streams - 1   # keep the dedicated lane clear
                 nxt = next_stream.get(o.window, 0)
-                o.stream = nxt % w.max_streams
+                o.stream = nxt % lanes
                 next_stream[o.window] = nxt + 1
 
         # pass 4 — comm frontiers.  `comm_deps`: nearest comm ancestors of
@@ -709,7 +768,7 @@ class RmaPlan:
         used_streams: dict[str, set] = {w: set() for w in self._windows}
         inter_streams: dict[str, set] = {w: set() for w in self._windows}
 
-        def emit_flush(wname: str, stream: int | None):
+        def emit_flush(wname: str, stream: int | None, pwait: bool = False):
             w = self._windows[wname]
             if w.scope == SCOPE_THREAD:
                 keys = [(wname, stream)]
@@ -718,7 +777,7 @@ class RmaPlan:
                 stream = None
             ph = sum(2 for k in keys if pending.get(k))
             steps.append(_Step(kind="flush", window=wname, stream=stream,
-                               phases=ph))
+                               phases=ph, pwait=pwait))
             for k in keys:
                 flushed.update(pending.pop(k, ()))
 
@@ -738,6 +797,13 @@ class RmaPlan:
 
         for idx in topo:
             o = ops[idx]
+            # late prefetch waits: the epoch for a prefetched op lands here,
+            # immediately before its consumer's step — everything emitted in
+            # between overlapped the in-flight read
+            for p in pf_by_consumer.get(idx, ()):
+                if p in flushed or p in gspmd_idxs:
+                    continue
+                emit_flush(ops[p].window, ops[p].stream, pwait=True)
             if idx in gspmd_idxs:
                 # a backend-selected macro: its whole range collapses into
                 # one collective step at the range head (topo order equals
@@ -839,6 +905,8 @@ class RmaPlan:
             return 1
         if o.kind == "put_handle":
             return 2                      # payload + [addr, epoch] header
+        if o.kind == "get_handle":
+            return 2                      # request (handle header) + response
         if o.kind == "get":
             return 2 + addr
         if o.kind == "fetch_op":
@@ -916,7 +984,8 @@ class CompiledPlan:
                 coll = "psum" if s.macro.kind == "ring" else "all_to_all"
                 rows.append((f"gspmd:{coll}[{s.macro.label}]", s.phases))
             elif s.kind == "flush":
-                rows.append((f"flush[{s.window}/{s.stream}]", s.phases))
+                word = "prefetch-wait" if s.pwait else "flush"
+                rows.append((f"{word}[{s.window}/{s.stream}]", s.phases))
             elif s.kind == "entry":
                 rows.append((f"entry[{s.window}/{s.stream}]", s.phases))
             elif s.kind == "fused":
@@ -925,8 +994,10 @@ class CompiledPlan:
             elif s.op.kind == "compute":
                 continue
             else:
-                rows.append((f"{s.op.label or f'{s.op.kind}#{s.op.idx}'}"
-                             f"{tag}", s.phases))
+                name = s.op.label or f"{s.op.kind}#{s.op.idx}"
+                if s.op.prefetch:
+                    name = f"prefetch:{name}"
+                rows.append((f"{name}{tag}", s.phases))
         return rows
 
     # -- execute: replay the schedule ----------------------------------------
@@ -1027,15 +1098,20 @@ class CompiledPlan:
         }
         return PlanResult(windows=restored, outputs=outputs, err_count=errs)
 
-    def interpret(self, buffers, bindings=None, *, axis: str = "x"):
+    def interpret(self, buffers, bindings=None, *, axis: str = "x",
+                  regs=None):
         """Execute this schedule on a single host with no mesh: every
         window buffer and binding is the **stacked** ``(n, ...)`` array of
-        all ranks' shards.  Returns an ``InterpretResult`` (stacked final
-        buffers, stacked outputs).  See
+        all ranks' shards.  ``regs`` maps window names to stacked
+        ``(n, slots, 3)`` dynamic-registration tables — required to model
+        ``put_handle``/``get_handle`` lifetime semantics (stale drops /
+        zero-masks counted per rank); without it handle ops raise.  Returns
+        an ``InterpretResult`` (stacked final buffers, stacked outputs,
+        per-rank err counts).  See
         :mod:`repro.core.rma.backends.interpret`."""
         from repro.core.rma.backends.interpret import interpret_plan
 
-        return interpret_plan(self, buffers, bindings, axis=axis)
+        return interpret_plan(self, buffers, bindings, axis=axis, regs=regs)
 
     def _apply_ties(self, value, ties, views):
         for wname, s in ties:
@@ -1108,6 +1184,18 @@ class CompiledPlan:
             mhwin = win_from_memhandle(view, handle, slot=o.slot)
             mhwin = mhwin.put(data, o.perm, offset=offset, stream=o.stream)
             errs = errs + mhwin.err_count
+            views[o.window] = mhwin.parent
+            return views, env, errs
+        elif o.kind == "get_handle":
+            from repro.core.rma.memhandle import win_from_memhandle
+
+            handle = self._apply_ties(self._resolve(o.handle, env),
+                                      step.ties, views)
+            mhwin = win_from_memhandle(view, handle, slot=o.slot)
+            mhwin, data = mhwin.get(o.perm, offset=offset, size=o.size,
+                                    stream=o.stream)
+            errs = errs + mhwin.err_count
+            env.values[o.idx] = data
             views[o.window] = mhwin.parent
             return views, env, errs
         else:

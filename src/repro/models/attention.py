@@ -234,12 +234,25 @@ def gqa_attention(
                 # still reads shared pages through the table.
                 ro = cache["page_ro"][jnp.minimum(phys, kp.shape[0] - 1)]
                 phys = jnp.where(ro, kp.shape[0], phys)
+            gather_table = table
+            if "page_hot" in cache:
+                # tiered residency: a non-hot page's bytes live in the host
+                # tier (demoted) or are mid-migration — the engine never
+                # decodes such a slot, so a table entry still aimed at one
+                # means residency bookkeeping and device state disagree.
+                # Drop scatters at it like overflow writes and reroute the
+                # gather to the (all-zero, always-hot) parking page rather
+                # than read a physical page the pool may have re-issued.
+                hot = cache["page_hot"]
+                phys = jnp.where(hot[jnp.minimum(phys, kp.shape[0] - 1)],
+                                 phys, kp.shape[0])
+                gather_table = jnp.where(hot[table], table, kp.shape[0] - 1)
             in_page = cols % pt
             ckp = kp.at[phys, in_page].set(k.astype(kp.dtype))
             cvp = vp.at[phys, in_page].set(v.astype(vp.dtype))
             new_cache = dict(cache, k_pages=ckp, v_pages=cvp, pos=pos + S)
-            ck = ckp[table].reshape(B, -1, KV, hd)   # (B, pages·pt, KV, hd)
-            cv = cvp[table].reshape(B, -1, KV, hd)
+            ck = ckp[gather_table].reshape(B, -1, KV, hd)  # (B, pages·pt, KV, hd)
+            cv = cvp[gather_table].reshape(B, -1, KV, hd)
             ck = logical_constraint(ck, "batch", "kv_seq", "kv_heads", None)
             cv = logical_constraint(cv, "batch", "kv_seq", "kv_heads", None)
         else:

@@ -237,7 +237,15 @@ def paginate_cache(cache, page_tokens: int):
     engine sets it for pages mapped by more than one sequence (COW prefix
     sharing), and the decode scatter in ``models/attention.py`` drops
     writes routed at a protected page exactly like overflow writes.  The
-    parking page is never protected."""
+    parking page is never protected.
+
+    The ``page_hot`` leaf is the pool's per-page **residency** bit (the
+    tiered engine clears it for pages demoted to the host tier): the paged
+    gather reroutes table entries at a non-hot page to the parking page and
+    the scatter drops writes at one — defense in depth mirroring
+    ``page_ro``, so a residency-bookkeeping bug reads zeros instead of a
+    reclaimed page's bytes.  Everything starts hot (an untier'd engine
+    never clears it), and the parking page is always hot."""
     if _is_gqa_cache(cache):
         k = cache["k"]
         *lead, b, s, kv, hd = k.shape
@@ -256,6 +264,7 @@ def paginate_cache(cache, page_tokens: int):
             "page_table": jnp.full((*lead, b, pages_per_row), n_alloc,
                                    jnp.int32),
             "page_ro": jnp.zeros((*lead, n_alloc + 1), bool),
+            "page_hot": jnp.ones((*lead, n_alloc + 1), bool),
             "pos": cache["pos"],
         }
     if isinstance(cache, dict):

@@ -45,6 +45,19 @@ positions are overwritten before their causal mask ever opens).  The
 pool's :meth:`~repro.serve.paged.KVPoolManager.can_admit` reserves one
 free page per outstanding writable share, so a fork can never find the
 free list empty.
+
+``kv_pages=(hbm_pages, host_pages)`` turns the pool into a **tiered
+memory hierarchy** (``docs/serving_disagg.md``): admission is priced
+against HBM + host capacity (so more sequences are live than HBM alone
+could back) while the per-tick decode set is priced against HBM only.
+Live slots rotate through the tiers — inactive slots' pages are demoted
+to a host-memory :class:`~repro.serve.paged.HostKVTier` window via
+planned puts, and promotions are scheduled a tick ahead so the planned
+gets ride **prefetch edges** overlapped with the demote traffic
+(:func:`~repro.serve.paged.tier_step_plan`).  Only active slots commit
+tokens each tick; because greedy decode is row-independent and a
+promotion restores the slot's pages, table row, and position exactly,
+the committed token streams are bit-identical to the all-HBM engine.
 """
 from __future__ import annotations
 
@@ -55,7 +68,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.paged import KVPoolManager
+from repro.serve.paged import HostKVTier, KVPoolManager
 from repro.serve.scheduler import Scheduler
 
 Array = jax.Array
@@ -198,8 +211,11 @@ class Executor:
                 vp = vp.at[:, dst].set(vp[:, src])
                 table = table.at[:, slot, j].set(dst)
             ro = d["page_ro"].at[..., dst].set(False)
-            return dict(d, k_pages=kp, v_pages=vp, page_table=table,
-                        page_ro=ro)
+            out = dict(d, k_pages=kp, v_pages=vp, page_table=table,
+                       page_ro=ro)
+            if "page_hot" in d:
+                out["page_hot"] = d["page_hot"].at[..., dst].set(True)
+            return out
 
         self.cache = _map_paged(self.cache, fork)
 
@@ -213,6 +229,141 @@ class Executor:
             return dict(d, page_ro=d["page_ro"].at[..., idx].set(value))
 
         self.cache = _map_paged(self.cache, mark)
+
+    def set_pages_hot(self, pages, value: bool) -> None:
+        """Flip physical pages' device-side residency bit.  The tiered
+        engine clears it when a page's bytes leave for the host tier and
+        sets it when fresh pages are wired (admission, promotion, COW
+        fork); ``models/attention.py`` reroutes any gather or scatter still
+        aimed at a non-hot page to the parking page — defense in depth
+        mirroring ``page_ro``."""
+        idx = jnp.asarray(list(pages), jnp.int32)
+
+        def mark(d):
+            if "page_hot" not in d:
+                return d
+            return dict(d, page_hot=d["page_hot"].at[..., idx].set(value))
+
+        self.cache = _map_paged(self.cache, mark)
+
+    # -- tiered payload migration -------------------------------------------
+    @property
+    def page_payload_dtype(self):
+        """Dtype of the concatenated per-page payload (the pools' dtype)."""
+        for d in _paged_dicts(self.cache):
+            if "k_pages" in d:
+                return d["k_pages"].dtype
+        raise ValueError("no paged pools in this cache")
+
+    @property
+    def page_payload_elems(self) -> int:
+        """Elements in one page's full payload: every paged pool's K and V
+        bytes for that page concatenated (a scan-stacked pool contributes
+        all its layers), so one host-tier slot round-trips one logical KV
+        page no matter how the stack is laid out."""
+        n = 0
+        for d in _paged_dicts(self.cache):
+            if "k_pages" not in d:
+                continue
+            for key in ("k_pages", "v_pages"):
+                leaf = d[key]
+                if leaf.ndim == 4:                  # (pages, pt, KV, hd)
+                    n += leaf.shape[1] * leaf.shape[2] * leaf.shape[3]
+                else:                               # (L, pages, pt, KV, hd)
+                    n += (leaf.shape[0] * leaf.shape[2] * leaf.shape[3]
+                          * leaf.shape[4])
+        if not n:
+            raise ValueError("no paged pools in this cache")
+        return n
+
+    def gather_page_payloads(self, pages) -> Array:
+        """Read physical pages' full payloads — ``(len(pages),
+        page_payload_elems)`` — in the fixed pool walk order
+        :meth:`scatter_page_payloads` writes them back in.  This is the
+        demotion snapshot: because shared (refcount ≥ 2) pages are never
+        written (the pool forks first), a slot's page list read here is
+        exactly its logical KV state."""
+        pages = list(pages)
+        idx = jnp.asarray(pages, jnp.int32)
+        dt = self.page_payload_dtype
+        parts = []
+        for d in _paged_dicts(self.cache):
+            if "k_pages" not in d:
+                continue
+            for key in ("k_pages", "v_pages"):
+                leaf = d[key]
+                if leaf.ndim == 4:
+                    part = leaf[idx]
+                else:
+                    part = jnp.moveaxis(leaf[:, idx], 0, 1)
+                parts.append(part.reshape(len(pages), -1).astype(dt))
+        return jnp.concatenate(parts, axis=1)
+
+    def scatter_page_payloads(self, pages, payloads) -> None:
+        """Write promoted payloads back into physical pages — the exact
+        inverse of :meth:`gather_page_payloads` (same walk order, per-leaf
+        dtype restored), so a demote→promote round trip is bit-identical."""
+        pages = list(pages)
+        idx = jnp.asarray(pages, jnp.int32)
+        payloads = jnp.asarray(payloads).reshape(len(pages), -1)
+        cur = [0]
+
+        def put(d):
+            out = dict(d)
+            for key in ("k_pages", "v_pages"):
+                leaf = d[key]
+                if leaf.ndim == 4:
+                    shape = (len(pages),) + leaf.shape[1:]
+                    take = shape[1] * shape[2] * shape[3]
+                    chunk = payloads[:, cur[0]:cur[0] + take]
+                    out[key] = leaf.at[idx].set(
+                        chunk.reshape(shape).astype(leaf.dtype))
+                else:
+                    lead = leaf.shape[0]
+                    shape = (len(pages), lead) + leaf.shape[2:]
+                    take = lead * shape[2] * shape[3] * shape[4]
+                    chunk = payloads[:, cur[0]:cur[0] + take]
+                    out[key] = leaf.at[:, idx].set(jnp.moveaxis(
+                        chunk.reshape(shape).astype(leaf.dtype), 1, 0))
+                cur[0] += take
+            return out
+
+        self.cache = _map_paged(self.cache, put)
+
+    def map_slot(self, slot: int, phys_pages, pos: int) -> None:
+        """Point ``slot``'s page-table row at ``phys_pages`` and restore its
+        cache position — how a promoted sequence gets its device identity
+        back after its pages round-tripped through the host tier.
+
+        Restores **both** position counters: the paged dicts' per-row
+        ``pos`` (scatter target + causal mask) and the stack's top-level
+        ``step`` counter (rope positions) — the latter kept advancing while
+        the slot sat cold, since parked rows still ride the batched
+        decode."""
+        phys = jnp.asarray(list(phys_pages), jnp.int32)
+
+        def remap(d):
+            table, p = d["page_table"], d["pos"]
+            if table.ndim == 2:
+                table = table.at[slot].set(phys)
+                p = p.at[slot].set(pos)
+            else:
+                table = table.at[:, slot].set(phys)
+                p = p.at[:, slot].set(pos)
+            return dict(d, page_table=table, pos=p)
+
+        def restep(tree):
+            if isinstance(tree, dict):
+                out = {k: (v if k == "step" else restep(v))
+                       for k, v in tree.items()}
+                if "step" in out and "k_pages" not in out:
+                    out["step"] = out["step"].at[slot].set(pos)
+                return out
+            if isinstance(tree, list):
+                return [restep(v) for v in tree]
+            return tree
+
+        self.cache = restep(_map_paged(self.cache, remap))
 
     def park(self, slot: int) -> None:
         """Point a released slot's table rows at the parking page (its idle
@@ -279,12 +430,15 @@ class ServeEngine:
     def __init__(self, model, params, *, n_slots: int, max_seq: int,
                  enc_len: int = 0, paged_kv: bool = False,
                  page_tokens: int = 16, policy: str = "continuous",
-                 prefix_share: bool = False, kv_pages: int | None = None):
+                 prefix_share: bool = False,
+                 kv_pages: int | tuple[int, int] | None = None,
+                 tier_quantum: int = 2):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.paged_kv = paged_kv
+        self.tiered = False
         if prefix_share and not paged_kv:
             raise ValueError("prefix_share=True requires paged_kv=True "
                              "(sharing happens on the physical page pool)")
@@ -296,6 +450,13 @@ class ServeEngine:
             self.page_tokens = page_tokens
             self.pages_per_slot = max_seq // page_tokens
             n_pages = n_slots * self.pages_per_slot
+            host_pages = 0
+            if isinstance(kv_pages, tuple):
+                kv_pages, host_pages = kv_pages
+                if host_pages < 0:
+                    raise ValueError(
+                        f"kv_pages=(hbm, host): host pages must be >= 0, "
+                        f"got {host_pages}")
             if kv_pages is not None:
                 if not self.pages_per_slot <= kv_pages <= n_pages:
                     raise ValueError(
@@ -303,9 +464,24 @@ class ServeEngine:
                         f"={self.pages_per_slot} and the device pool size "
                         f"{n_pages}")
                 n_pages = kv_pages
-            self.pool = KVPoolManager(n_pages)
+            self.pool = KVPoolManager(n_pages, host_pages)
             self.slot_pages: dict[int, list[int]] = {}
             self._ro_pages: set[int] = set()
+            self.tiered = host_pages > 0
+            self.tier_quantum = max(int(tier_quantum), 1)
+            if self.tiered:
+                if host_pages < self.pages_per_slot:
+                    raise ValueError(
+                        f"kv_pages=({n_pages}, {host_pages}): the host tier "
+                        f"must hold at least one sequence "
+                        f"(pages_per_slot={self.pages_per_slot})")
+                self.tier = HostKVTier(host_pages,
+                                       self.executor.page_payload_elems,
+                                       self.executor.page_payload_dtype)
+                self._cold: dict[int, dict] = {}   # slot -> {"host": [...]}
+                self._active: set[int] = set()
+                self._promote_next: list[int] = []
+                self._hot_since: dict[int, int] = {}
         self.scheduler = Scheduler(n_slots, policy)
         self.slot_free = [True] * n_slots
         self.slot_req: dict[int, Request] = {}
@@ -340,13 +516,27 @@ class ServeEngine:
                               t_submit=time.perf_counter())
 
     def step(self) -> None:
-        """One engine tick: admit per the policy, then one decode step."""
+        """One engine tick: migrate tiers, admit per the policy, then one
+        decode step.  In tiered mode only **active** (HBM-resident) slots
+        commit tokens — a cold slot's row is parked, its batched-decode
+        output discarded, and its generation resumes bit-identically after
+        promotion (greedy decode is row-independent)."""
+        if self.paged_kv and self.tiered:
+            self._tier_tick()
         self._admit()
         if self.slot_req:
             if self.paged_kv and self.prefix_share:
                 self._cow_tick()
+            if self.paged_kv and self.tiered:
+                # residency consult before decode: every active slot's pages
+                # must be hot — a cold/in-flight page in a decode set means
+                # host bookkeeping and device state disagree
+                for slot in sorted(self._active):
+                    self.pool.assert_resident(self.slot_pages[slot])
             nxt = self.executor.decode(self._last_tokens)
             for slot in list(self.slot_req):
+                if self.tiered and slot not in self._active:
+                    continue
                 tok = int(nxt[slot])
                 self.slot_generated[slot].append(tok)
                 self.slot_pos[slot] += 1
@@ -408,6 +598,14 @@ class ServeEngine:
                        pages_shared=self.pool.shared_maps,
                        cow_copies=self.pool.cow_copies,
                        cow_debt=self.pool.cow_debt)
+            if self.tiered:
+                out.update(host_pages=self.pool.host.capacity,
+                           host_pages_free=self.pool.host.n_free,
+                           cold_slots=len(self._cold),
+                           active_slots=len(self._active),
+                           demotions=self.pool.demotions,
+                           promotions=self.pool.promotions,
+                           tier_stale_drops=int(self.tier.err_count))
         return out
 
     # -- internals --------------------------------------------------------------
@@ -433,6 +631,18 @@ class ServeEngine:
         loop re-asks — preserving the old engine's immediate reuse)."""
         while True:
             n_free = sum(self.slot_free)
+            if self.paged_kv and self.tiered:
+                # total-footprint pricing against the whole hierarchy: a
+                # sequence may be admitted onto capacity that is partly
+                # host-side (it will rotate through the cold tier), but
+                # never onto capacity that does not exist — that is what
+                # keeps admitted-but-cold sequences waiting their turn
+                # instead of deadlocking the hot free list
+                n_free = min(n_free, self.scheduler.price_admission(
+                    pages_per_seq=self.pages_per_slot,
+                    hbm_free=self.pool.n_free,
+                    host_free=self.pool.host.n_free,
+                    reserve=self.pool.cow_debt))
             entries = self.scheduler.select(n_free, live=len(self.slot_req),
                                             tick=self._tick)
             if not entries:
@@ -457,7 +667,12 @@ class ServeEngine:
             if self.prefix_share:
                 shared, shared_rw = self._share_plan(req)
             n_fresh = self.pages_per_slot - len(shared) - len(shared_rw)
-            if not self.pool.can_admit(n_fresh, len(shared_rw)):
+            # price shares by their true fork-debt delta: a writable share
+            # of a page with read-only holders (or an RO share of a
+            # writable-shared page) costs more than its share count
+            debt = (self.pool.share_price(shared)
+                    + self.pool.share_price(shared_rw, writable=True))
+            if not self.pool.can_admit(n_fresh, debt):
                 return False
             fresh = self.pool.alloc(n_fresh)
             if shared:
@@ -473,6 +688,11 @@ class ServeEngine:
             if newly_ro:
                 self.executor.set_pages_ro(newly_ro, True)
                 self._ro_pages.update(newly_ro)
+            if self.tiered:
+                if fresh:
+                    self.executor.set_pages_hot(fresh, True)
+                self._active.add(slot)
+                self._hot_since[slot] = self._tick
             phys_arg = jnp.asarray(phys, jnp.int32)
             ok_arg = jnp.asarray(write_ok)
         else:
@@ -558,6 +778,130 @@ class ServeEngine:
                 self.executor.set_pages_ro([p], False)
                 self._ro_pages.discard(p)
 
+    def _tier_tick(self) -> None:
+        """One tier-rotation step, run at the top of every tick.
+
+        Promotions are **scheduled a tick ahead** (``_promote_next``, via
+        :meth:`KVPoolManager.queue_promote`) and executed here as prefetch
+        edges of a single :func:`~repro.serve.paged.tier_step_plan` replay
+        together with this tick's demote puts — the planned overlap the
+        plan's phase table proves.  The sequence:
+
+        1. demote the oldest-hot victims until the HBM free list can back
+           the scheduled promotions, one fresh admission (if any request is
+           pending and the hierarchy has room), and the COW fork reserve —
+           payload snapshot, host-slot alloc, planned puts, then release
+           (COW refcounts drop normally: sharing dissolves on demotion);
+        2. promote the scheduled slots that now fit: planned gets land in
+           fresh hot pages, the page-table row and position counter are
+           restored (:meth:`Executor.map_slot`), and the cold copy is
+           retired through ``memhandle_release`` — the epoch bump that
+           makes any straggler handle to it stale;
+        3. recompute the active set and schedule the next promotions
+           (oldest-cold first, every ``tier_quantum`` ticks or immediately
+           when nothing is active)."""
+        pool, ex, tier = self.pool, self.executor, self.tier
+        pps = self.pages_per_slot
+        # promotions scheduled last tick (slots may have finished meanwhile)
+        enter = [s for s in self._promote_next if s in self._cold]
+        self._promote_next = []
+        # demotion headroom also covers one fresh admission this tick
+        admit_head = 0
+        if (self.scheduler.pending_count and any(self.slot_free)
+                and self.scheduler.price_admission(
+                    pages_per_seq=pps, hbm_free=pool.n_free,
+                    host_free=pool.host.n_free,
+                    reserve=pool.cow_debt) > 0):
+            admit_head = pps
+        target = pps * len(enter) + admit_head + pool.cow_debt
+        projected = pool.n_free
+        host_room = pool.host.n_free
+        leave: list[int] = []
+        hot_live = sorted(
+            (s for s in self.slot_req
+             if s in self._active and s in self.slot_pages),
+            key=lambda s: self._hot_since.get(s, 0))
+        for s in hot_live:
+            if projected >= target or host_room < pps:
+                break
+            # only sole-owner pages actually return to the free list; a
+            # shared page's co-holders keep it resident
+            projected += sum(1 for p in self.slot_pages[s]
+                             if pool.refcount_of(p) == 1)
+            host_room -= pps
+            leave.append(s)
+        demote_pages: list[int] = []
+        for s in leave:
+            demote_pages.extend(self.slot_pages[s])
+        payloads = (ex.gather_page_payloads(demote_pages)
+                    if demote_pages else None)
+        host_slots = pool.alloc_cold(len(demote_pages)) if demote_pages else []
+        for hp, hs in zip(demote_pages, host_slots):
+            pool.queue_demote(hp, hs)
+        # which scheduled promotions fit after this demotion round
+        avail = projected - admit_head - pool.cow_debt
+        promote: list[int] = []
+        for s in enter:
+            if avail >= pps:
+                promote.append(s)
+                avail -= pps
+            else:
+                self._promote_next.append(s)     # stays queued (in-flight)
+        promote_hosts = [h for s in promote for h in self._cold[s]["host"]]
+        # one planned tier step: promote gets (prefetch edges, dedicated
+        # stream) issued ahead of the demote puts, one completion epoch
+        tier.alloc(host_slots)
+        promoted = tier.step(promote_hosts, host_slots, payloads)
+        # commit demotions: park, release (COW machinery runs normally),
+        # clear residency bits on pages that actually freed
+        cursor = 0
+        for s in leave:
+            pages = self.slot_pages.pop(s)
+            ex.park(s)
+            dropped = pool.release(pages)
+            ro_clear = [p for p in dropped if p in self._ro_pages]
+            if ro_clear:
+                ex.set_pages_ro(ro_clear, False)
+                self._ro_pages.difference_update(ro_clear)
+            freed = [p for p in dropped if pool.refcount_of(p) == 0]
+            if freed:
+                ex.set_pages_hot(freed, False)
+            self._cold[s] = {"host": host_slots[cursor:cursor + pps]}
+            cursor += pps
+            self._active.discard(s)
+            self._hot_since.pop(s, None)
+        pool.drain_demotes()
+        # commit promotions: payloads land in fresh hot pages, identity
+        # (table row + position) restored, cold copies retired (epoch bump)
+        if promote:
+            cursor = 0
+            for s in promote:
+                hs = self._cold.pop(s)["host"]
+                fresh = pool.alloc(pps)
+                ex.scatter_page_payloads(fresh,
+                                         promoted[cursor:cursor + pps])
+                ex.set_pages_hot(fresh, True)
+                ex.map_slot(s, fresh, self.slot_pos[s] - 1)
+                self.slot_pages[s] = fresh
+                tier.free(hs)
+                pool.drain_promotes(hs)
+                pool.free_cold(hs)
+                self._hot_since[s] = self._tick
+                cursor += pps
+        self._active = {s for s in self.slot_req if s in self.slot_pages}
+        # schedule the next promotion round a tick ahead: oldest-cold
+        # first, on the rotation quantum (or immediately if nothing is
+        # active — cold slots must never wait on an empty machine)
+        if self._cold and (self._tick % self.tier_quantum == 0
+                           or not self._active):
+            k = max(1, (pool.n_pages // max(pps, 1)) // 2)
+            cand = [s for s in self._cold
+                    if s not in self._promote_next][:k]
+            if cand:
+                self._promote_next.extend(cand)
+                pool.queue_promote(
+                    [h for s in cand for h in self._cold[s]["host"]])
+
     def _release(self, slot: int) -> None:
         self.slot_free[slot] = True
         del self.slot_req[slot]
@@ -574,6 +918,17 @@ class ServeEngine:
             if ro_clear:
                 self.executor.set_pages_ro(ro_clear, False)
                 self._ro_pages.difference_update(ro_clear)
+        if self.paged_kv and self.tiered:
+            self._active.discard(slot)
+            self._hot_since.pop(slot, None)
+            if slot in self._promote_next:
+                self._promote_next.remove(slot)
+            if slot in self._cold:
+                # a cold slot released outright (e.g. cancelled): retire its
+                # host copy — the epoch bump makes any straggler stale
+                hs = self._cold.pop(slot)["host"]
+                self.tier.free(hs)
+                self.pool.free_cold(hs)
 
 
 __all__ = ["ServeEngine", "Executor", "Request", "Completion"]

@@ -132,6 +132,26 @@ class Scheduler:
         self.admitted -= 1
         self._queue.insert(0, entry)
 
+    # -- tiered capacity pricing ----------------------------------------------
+    @staticmethod
+    def price_admission(*, pages_per_seq: int, hbm_free: int,
+                        host_free: int, reserve: int = 0) -> int:
+        """How many more sequences the **whole hierarchy** can hold.
+
+        Tiered admission is priced in two halves: a sequence's *total*
+        footprint (``pages_per_seq``) against HBM + host capacity — this
+        method — while its *decode-set* pages are priced against HBM only
+        (:meth:`repro.serve.paged.KVPoolManager.can_admit` at the moment it
+        is activated).  Admitting against total capacity is what lets the
+        host tier multiply concurrent sequences; activating against HBM
+        only is what makes an admitted-but-cold sequence *wait its turn*
+        (requeue / stay cold) instead of deadlocking the hot free list.
+        ``reserve`` holds back pages promised elsewhere (the COW fork
+        debt)."""
+        if pages_per_seq <= 0:
+            return hbm_free + host_free
+        return max(hbm_free + host_free - reserve, 0) // pages_per_seq
+
     # -- disagg ticket admission ---------------------------------------------
     def ticket_window(self, live: int) -> int:
         """How many fetch_op admission tickets a decode lane may claim this

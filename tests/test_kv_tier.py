@@ -1,0 +1,461 @@
+"""Tiered KV-cache tests: pool tiers, prefetch edges, stale cold pages,
+and bit-identical decode with host-memory spill.
+
+The tier hierarchy (``docs/serving_disagg.md``) splits the page pool into a
+tier-generic refcounted core (:class:`repro.serve.paged.PageTier`), an HBM
+hot tier, and a host-memory cold tier backed by a dynamic window with
+memhandle slots — the P5 epoch machinery is what guarantees a
+demoted-then-freed page is never read.  Promotions ride **prefetch edges**
+of the decode-tick plan, overlapped with the demote puts on dedicated
+streams, which the plan's phase table proves.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.rma.plan import PlanError, RmaPlan
+from repro.serve.paged import (
+    HostKVTier,
+    KVPoolManager,
+    PagedKVWindow,
+    PageSpec,
+    PageTier,
+    tier_step_plan,
+)
+from repro.serve.scheduler import Scheduler
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # sweep falls back to a seeded random driver
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: alloc_page double-alloc guard (symmetric with free_page)
+# ---------------------------------------------------------------------------
+
+def test_alloc_page_double_alloc_raises_with_page_id():
+    spec = PageSpec(page_tokens=4, kv_heads=1, head_dim=2, n_pages=3)
+    pool = PagedKVWindow.create(spec, "x", 1, jnp.float32)
+    pool = pool.alloc_page(1)
+    with pytest.raises(ValueError, match=r"alloc_page\(1\)"):
+        pool.alloc_page(1)
+    # free then re-alloc is the legitimate cycle
+    pool = pool.free_page(1)
+    pool = pool.alloc_page(1)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: conservation sweep over random pool-op sequences
+# ---------------------------------------------------------------------------
+
+def _drive_pool(ops):
+    """Replay a random op sequence against a tiered pool, asserting the
+    conservation invariants after every step.  ``ops`` is a list of
+    (kind, arg) pairs with kind in alloc/share/cow/release; illegal ops
+    (guarded by the pool) are skipped."""
+    pool = KVPoolManager(8, host_pages=4)
+    held: list[int] = []        # one entry per outstanding reference
+    for kind, arg in ops:
+        if kind == "alloc":
+            n = 1 + arg % 3
+            # the engine's admission discipline: fresh pages are priced
+            # against the COW fork reserve, never raw free count
+            if pool.can_admit(n):
+                held.extend(pool.alloc(n))
+        elif kind == "share" and held:
+            p = held[arg % len(held)]
+            writable = bool(arg % 2)
+            if pool.can_admit(0, pool.share_price([p], writable=writable)):
+                pool.share_pages([p], writable=writable)
+                held.append(p)
+        elif kind == "cow" and held:
+            # engine discipline: writes hit solely-owned or writable-shared
+            # pages only (RO shares are never cow-written — the executor
+            # reroutes them through the parking page)
+            i = arg % len(held)
+            p = held[i]
+            if pool.refcount_of(p) == 1 or p in pool.hbm._cow:
+                new, forked = pool.cow_write(p)
+                if forked:
+                    held[i] = new
+        elif kind == "release" and held:
+            i = arg % len(held)
+            pool.release([held.pop(i)])
+        pool.check_conservation()
+        live = sum(1 for r in pool.hbm._ref if r > 0)
+        assert live + pool.n_free == pool.n_pages
+        assert sum(pool.hbm._ref) == len(held)
+        assert pool.cow_debt <= pool.n_free
+    # drain everything: the pool must come back empty
+    while held:
+        pool.release([held.pop()])
+    pool.check_conservation()
+    assert pool.n_free == pool.n_pages
+
+
+_OP_KINDS = ("alloc", "share", "cow", "release")
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(_OP_KINDS),
+                              st.integers(0, 31)), max_size=60))
+    def test_pool_conservation_sweep(ops):
+        _drive_pool(ops)
+else:
+    def test_pool_conservation_sweep():
+        rng = np.random.RandomState(0)
+        for _ in range(60):
+            ops = [(_OP_KINDS[rng.randint(4)], int(rng.randint(32)))
+                   for _ in range(rng.randint(1, 60))]
+            _drive_pool(ops)
+
+
+# ---------------------------------------------------------------------------
+# tier-generic core + residency state machine
+# ---------------------------------------------------------------------------
+
+def test_page_tier_is_the_old_flat_pool():
+    """A KVPoolManager without host pages behaves exactly like the
+    pre-hierarchy flat pool: FIFO free list, same counters, same guards."""
+    p = KVPoolManager(4)
+    assert p.alloc(2) == [0, 1]
+    p.release([0])
+    assert p.alloc(2) == [2, 3]
+    assert p.alloc(1) == [0]            # FIFO: freed page reused last
+    with pytest.raises(RuntimeError, match="exhausted"):
+        p.alloc(1)
+    with pytest.raises(ValueError, match=r"share_pages\(1\)"):
+        p.release([1])
+        p.share_pages([1])
+    with pytest.raises(ValueError, match=r"release\(1\).*double free"):
+        p.release([1])
+    st = p.stats()
+    assert "host_pages" not in st       # flat pools don't report tier keys
+
+
+def test_residency_lifecycle_demote_promote():
+    pool = KVPoolManager(4, host_pages=4)
+    pages = pool.alloc(2)
+    assert all(pool.residency("hbm", p) == "hot" for p in pages)
+    cold = pool.alloc_cold(2)
+    for hp, hs in zip(pages, cold):
+        pool.queue_demote(hp, hs)
+        assert pool.residency("hbm", hp) == "in-flight"
+        assert pool.residency("host", hs) == "in-flight"
+    pool.drain_demotes()
+    assert all(pool.residency("host", s) == "cold" for s in cold)
+    pool.release(pages)                 # HBM side retired after the copy
+    assert pool.residency("hbm", pages[0]) is None
+    pool.queue_promote(cold)
+    assert all(pool.residency("host", s) == "in-flight" for s in cold)
+    assert pool.drain_promotes(cold) == cold
+    pool.free_cold(cold)
+    pool.check_conservation()
+    assert pool.demotions == 2 and pool.promotions == 2
+
+
+def test_assert_resident_rejects_cold_decode_set():
+    pool = KVPoolManager(4, host_pages=4)
+    pages = pool.alloc(2)
+    pool.assert_resident(pages)         # hot: fine
+    hs = pool.alloc_cold(1)
+    pool.queue_demote(pages[0], hs[0])
+    with pytest.raises(RuntimeError, match="not resident"):
+        pool.assert_resident(pages)
+
+
+def test_share_price_accounts_for_mixed_sharers():
+    """The sweep's catch, pinned: a writable share of a page with existing
+    read-only holders drags the owner into forking too (debt +2, not +1),
+    and an RO share of an all-writable page costs its last writer the
+    write-in-place (debt +1, not 0)."""
+    t = PageTier("hbm", 8)
+    [p] = t.alloc(1)
+    t.share_pages([p])
+    t.share_pages([p])                    # two read-only holders
+    assert t.share_price([p], writable=True) == 2
+    t.share_pages([p], writable=True)
+    assert t.cow_debt == 2
+    [q] = t.alloc(1)
+    assert t.share_price([q], writable=True) == 1   # classic all-writable
+    t.share_pages([q], writable=True)
+    assert t.cow_debt == 3
+    assert t.share_price([q]) == 1
+    t.check_conservation()
+
+
+def test_price_admission_prices_hierarchy_not_hbm():
+    price = Scheduler.price_admission
+    # 4 pages/seq, 4 HBM free, 12 host free: hierarchy holds 4 sequences
+    assert price(pages_per_seq=4, hbm_free=4, host_free=12) == 4
+    # the COW reserve is held back from the shared budget
+    assert price(pages_per_seq=4, hbm_free=4, host_free=12, reserve=13) == 0
+    assert price(pages_per_seq=4, hbm_free=2, host_free=0) == 0
+
+
+# ---------------------------------------------------------------------------
+# prefetch edges: plan-level overlap, proven via the phase table
+# ---------------------------------------------------------------------------
+
+def _tier_table(pool_pages=4, promote=(0, 1), demote=(2,), elems=8):
+    c = tier_step_plan(pool_pages, promote, demote, elems, jnp.float32)
+    return c, c.phase_table()
+
+
+def test_prefetch_ops_lead_and_wait_lands_before_consumer():
+    _, table = _tier_table()
+    names = [n for n, _ in table]
+    # promotes issue first (prefetch edges on the dedicated stream), the
+    # demote overlaps them, and the promotion's completion epoch (the
+    # prefetch-wait) lands before anything could consume the gathered rows
+    assert names[0] == "prefetch:promote[0]"
+    assert names[1] == "prefetch:promote[1]"
+    assert "demote[2]" in names
+    pw = names.index("prefetch-wait[host/3]")
+    assert pw > names.index("demote[2]")       # demote issued while waiting
+    assert all(n.startswith(("prefetch:", "demote")) for n in names[:pw])
+
+
+def test_prefetch_ops_ride_the_dedicated_stream():
+    c, _ = _tier_table()
+    streams = {s.op.label: s.stream for s in c.steps
+               if s.kind == "op" and s.op is not None
+               and s.op.kind != "compute"}
+    assert streams["promote[0]"] == streams["promote[1]"] == 3
+    assert streams["demote[2]"] != 3
+
+
+def test_prefetch_on_compute_rejected():
+    plan = RmaPlan("bad")
+    plan.window("w", dtype=jnp.float32)
+    plan.bind("x", (4,), jnp.float32)
+    plan.put("w", "x", [(0, 0)], offset=0)
+    g = plan.get("w", [(0, 0)], offset=0, size=4)
+    b = plan.compute(lambda env: env[g] + 1, reads=(g,))
+    c = plan.compute(lambda env: env[b] * 2, reads=(b,))
+    plan.prefetch(b, c)
+    with pytest.raises(PlanError, match="only transport"):
+        plan.compile()
+
+
+def test_plain_plans_render_identically_without_prefetch():
+    plan = RmaPlan("plain")
+    plan.window("w", dtype=jnp.float32, max_streams=2, exit_epoch=True)
+    plan.bind("x", (4,), jnp.float32)
+    plan.put("w", "x", [(0, 0)], offset=0, stream=0, label="a")
+    plan.get("w", [(0, 0)], offset=0, size=4, stream=1, label="b")
+    table = plan.compile().phase_table()
+    assert all("prefetch" not in n for n, _ in table)
+
+
+def test_get_handle_bills_two_phases():
+    c, table = _tier_table(promote=(0,), demote=())
+    assert dict(table)["prefetch:promote[0]"] == 2
+    assert c.phases == sum(p for _, p in table)
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: demote -> free -> stale read (rma + interpret backends)
+# ---------------------------------------------------------------------------
+
+def test_demoted_then_freed_page_never_read_rma():
+    """Meshless rma variant: a cold page retired through memhandle_release
+    comes back zeroed and counted on a later (stale) promote — never the
+    reused bytes.  The mdev twin drives the same plan on 8 devices."""
+    tier = HostKVTier(4, 16, jnp.float32)
+    tier.alloc([0, 1])
+    tier.step((), (0, 1), jnp.stack([jnp.full((16,), 5.0),
+                                     jnp.full((16,), 7.0)]))
+    stale_handles = tier.pool.handles    # snapshot while both are live
+    tier.free([1])                       # epoch bump: slot 1 handles die
+    # a promote through the stale snapshot: slot 0 still round-trips, the
+    # freed slot 1 must come back zeroed and counted — never 7s
+    compiled = tier_step_plan(4, (0, 1), (), 16, jnp.float32)
+    win = jax.tree_util.tree_map(lambda x: x[None], tier.pool.window)
+
+    def run(w, h):
+        res = compiled.execute({"host": w}, {"handles": h})
+        return res.outputs["promoted"], res.err_count
+
+    out, errs = jax.vmap(run, axis_name="x")(win, stale_handles[None])
+    assert jnp.allclose(out[0, 0], 5.0)          # live slot 0: real bytes
+    assert jnp.allclose(out[0, 1], 0.0)          # stale slot 1: zeroed
+    assert int(errs.reshape(())) == 1            # and counted
+    # slot reuse re-arms cleanly: a fresh handle serves the new tenant
+    tier.alloc([1])
+    tier.step((), (1,), jnp.full((1, 16), 9.0))
+    assert jnp.allclose(tier.step((1,), (), None)[0], 9.0)
+
+
+def test_demoted_then_freed_page_never_read_interpret():
+    """Interpret-backend variant: same plan, host-array registration
+    tables — the stale handle zero-masks and counts identically."""
+    elems = 8
+    compiled = tier_step_plan(4, (0, 1), (), elems, jnp.float32)
+    buf = jnp.arange(4 * elems, dtype=jnp.float32)   # distinct page bytes
+    handles = jnp.zeros((4, 4), jnp.int32)
+    handles = handles.at[0].set(jnp.array([3, 0 * elems, elems, 0]))
+    handles = handles.at[1].set(jnp.array([3, 1 * elems, elems, 1]))
+    regs = jnp.zeros((4, 3), jnp.int32)
+    regs = regs.at[0].set(jnp.array([3, 0 * elems, elems]))   # slot 0 live
+    # slot 1 released: regs row stays zero -> epoch mismatch, dead slot
+    res = compiled.interpret({"host": buf[None]},
+                             {"handles": handles[None]},
+                             regs={"host": regs[None]})
+    out = res.outputs["promoted"]
+    assert jnp.array_equal(out[0, 0], buf[:elems])
+    assert jnp.allclose(out[0, 1], 0.0)
+    assert int(res.err_count[0]) == 1
+
+
+def test_interpret_without_regs_still_rejects_handle_plans():
+    compiled = tier_step_plan(4, (0,), (), 8, jnp.float32)
+    with pytest.raises(NotImplementedError, match="memory-handle"):
+        compiled.interpret({"host": jnp.zeros((1, 32), jnp.float32)},
+                           {"handles": jnp.zeros((1, 4, 4), jnp.int32)})
+
+
+def test_interpret_matches_rma_on_handle_roundtrip():
+    """Cross-backend conformance for the handle ops: the interpret model
+    (host arrays + regs tables) reproduces the substrate's get_handle
+    semantics bit-for-bit on a live slot."""
+    elems = 8
+    tier = HostKVTier(2, elems, jnp.float32)
+    tier.alloc([0])
+    payload = jnp.arange(1, elems + 1, dtype=jnp.float32)
+    tier.step((), (0,), payload[None])
+    rma_out = tier.step((0,), (), None)
+    assert jnp.array_equal(rma_out[0], payload)
+
+    # mirror the registration state host-side: regs row [epoch, off, size]
+    # per live slot, reconstructed from the live handles themselves
+    handles = np.asarray(tier.pool.handles)
+    regs = np.zeros((2, 3), np.int32)
+    row = handles[0]
+    regs[int(row[3])] = row[:3]
+    buf = np.zeros((2 * elems,), np.float32)
+    buf[:elems] = np.asarray(payload)    # slot 0's bytes, already demoted
+    compiled = tier_step_plan(2, (0,), (), elems, jnp.float32)
+    res = compiled.interpret(
+        {"host": jnp.asarray(buf)[None]},
+        {"handles": jnp.asarray(handles)[None]},
+        regs={"host": jnp.asarray(regs)[None]})
+    assert jnp.array_equal(res.outputs["promoted"][0, 0], rma_out[0])
+    assert int(res.err_count[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine-level: bit-identical decode with cold spill + capacity math
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.configs.tiny import tiny_config
+    from repro.models import build_model
+
+    cfg = tiny_config("qwen3-4b")
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _run_engine(m, params, reqs, **kw):
+    from repro.serve.engine import Request, ServeEngine
+
+    eng = ServeEngine(m, params, n_slots=4, max_seq=64, **kw)
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens))
+    done = {c.rid: c.tokens for c in eng.run(max_ticks=600, strict=True)}
+    return done, eng
+
+
+@pytest.mark.parametrize("page_tokens", [8, 16])
+def test_tiered_decode_bit_identical(model_and_params, page_tokens):
+    """Greedy decode with cold-spill enabled matches the all-HBM paged
+    engine and dense, while actually exercising the tiers (more live
+    sequences than HBM pages can back, demotions and promotions > 0)."""
+    from repro.serve.engine import Request
+
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(3)
+    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=5 + 2 * i),
+                    max_new_tokens=6) for i in range(6)]
+    pps = 64 // page_tokens
+    dense, _ = _run_engine(m, params, reqs)
+    hbm, e_hbm = _run_engine(m, params, reqs, paged_kv=True,
+                             page_tokens=page_tokens, kv_pages=2 * pps)
+    tier, e_tier = _run_engine(m, params, reqs, paged_kv=True,
+                               page_tokens=page_tokens,
+                               kv_pages=(2 * pps, 4 * pps))
+    assert hbm == dense
+    assert tier == dense
+    s = e_tier.stats()
+    assert s["demotions"] > 0 and s["promotions"] > 0
+    assert s["tier_stale_drops"] == 0
+    assert s["max_live"] >= 2 * e_hbm.stats()["max_live"]
+    # the hierarchy drained clean
+    assert e_tier.pool.n_free == e_tier.pool.n_pages
+    assert e_tier.pool.host.n_free == e_tier.pool.host.capacity
+    e_tier.pool.check_conservation()
+
+
+def test_tiered_decode_with_cow_prefix_sharing(model_and_params):
+    """COW prefix sharing stacked on top of tiering: forked prefixes decode
+    bit-identically to dense while slots rotate through the cold tier
+    (sharing dissolves at demotion — the cold copy is private)."""
+    from repro.serve.engine import Request
+
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(7)
+    base = rng.randint(0, cfg.vocab, size=16)
+    reqs = []
+    for i in range(4):
+        tail = rng.randint(0, cfg.vocab, size=3 * i)
+        prompt = np.concatenate([base, tail]) if i else base.copy()
+        reqs.append(Request(rid=10 + i, prompt=prompt, max_new_tokens=5))
+    dense, _ = _run_engine(m, params, reqs)
+    for dtype_pages in [(8, 16)]:
+        tier, e = _run_engine(m, params, reqs, paged_kv=True,
+                              page_tokens=16, prefix_share=True,
+                              kv_pages=dtype_pages)
+        assert tier == dense
+        s = e.stats()
+        assert s["pages_shared"] > 0
+        assert s["demotions"] > 0
+        assert s["tier_stale_drops"] == 0
+        e.pool.check_conservation()
+
+
+def test_tiered_admission_requeues_instead_of_deadlocking(model_and_params):
+    """More submissions than the whole hierarchy holds: admission is priced
+    against HBM+host totals, excess requests wait in the queue, and the
+    engine still drains everything (admitted-but-cold sequences never pin
+    the hot free list)."""
+    from repro.serve.engine import Request
+
+    cfg, m, params = model_and_params
+    rng = np.random.RandomState(11)
+    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=4),
+                    max_new_tokens=4) for i in range(8)]
+    done, e = _run_engine(m, params, reqs, paged_kv=True, page_tokens=16,
+                          kv_pages=(4, 8))     # hierarchy: 3 sequences max
+    assert sorted(done) == list(range(8))
+    assert all(len(t) == 4 for t in done.values())
+    assert e.stats()["tier_stale_drops"] == 0
+    e.pool.check_conservation()
+
+
+def test_kv_pages_tuple_validation(model_and_params):
+    from repro.serve.engine import ServeEngine
+
+    cfg, m, params = model_and_params
+    with pytest.raises(ValueError, match="kv_pages"):
+        ServeEngine(m, params, n_slots=2, max_seq=64, paged_kv=True,
+                    page_tokens=16, kv_pages=(2, 8))   # hbm < pages_per_slot
+    with pytest.raises(ValueError, match="host"):
+        ServeEngine(m, params, n_slots=2, max_seq=64, paged_kv=True,
+                    page_tokens=16, kv_pages=(4, 2))   # host < pages_per_slot
