@@ -30,6 +30,9 @@ Sections:
                      phase splits + wall-clock across g×l factorizations
   backend_matrix   — plan lowering targets (rma / gspmd / interpret) per
                      macro pattern; calibrates ``compile(backend="auto")``
+  elastic_recovery — the elastic runtime: mid-stream worker eviction vs a
+                     fault-free run (bit-identical drain, recovery ticks)
+                     + batched KV-page migration priced O(pages moved)
   roofline         — §Roofline summary from the dry-run artifacts (if present)
 
 ``--summary`` skips running and merges every existing BENCH_*.json under
@@ -57,6 +60,7 @@ MODULES = [
     "benchmarks.plan_overhead",
     "benchmarks.hier_collectives",
     "benchmarks.backend_matrix",
+    "benchmarks.elastic_recovery",
 ]
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")

@@ -103,6 +103,14 @@ class CheckpointManager:
         ``shardings``: optional matching tree of NamedShardings — arrays are
         placed onto the *current* mesh (elastic restore)."""
         d = os.path.join(self.dir, str(step))
+        if not os.path.exists(os.path.join(d, "manifest.json")):
+            steps = sorted(
+                int(s) for s in os.listdir(self.dir)
+                if re.fullmatch(r"\d+", s)
+                and os.path.exists(os.path.join(self.dir, s, "manifest.json")))
+            raise FileNotFoundError(
+                f"checkpoint step {step} not found in {self.dir} "
+                f"(available steps: {steps if steps else 'none'})")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         flat_like, treedef = jax.tree_util.tree_flatten(like)

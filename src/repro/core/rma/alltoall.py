@@ -369,7 +369,9 @@ def lower_all_to_all(plan, data_window: str, hdr_window: str, source, counts,
                             chunks=chunks)
 
 
-_A2A_PLANS: dict[tuple, object] = {}
+from repro.core.rma.plan import register_plan_cache as _register_plan_cache
+
+_A2A_PLANS: dict[tuple, object] = _register_plan_cache("moe_alltoall", {})
 
 
 def all_to_all_plan(axis: str, n: int, shape, dtype, *, chunks: int = 1,

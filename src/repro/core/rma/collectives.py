@@ -476,7 +476,10 @@ def lower_ring_all_reduce(plan, window: str, source, axis: str, n: int, *,
                                   op=op)
 
 
-_RING_PLANS: dict[tuple, "object"] = {}
+from repro.core.rma.plan import register_plan_cache as _register_plan_cache
+
+_RING_PLANS: dict[tuple, "object"] = _register_plan_cache(
+    "ring_collectives", {})
 
 
 def all_reduce_plan(axis: str, n: int, shape, dtype, *, order: bool = True,

@@ -1205,6 +1205,70 @@ class CompiledPlan:
 
 
 # ---------------------------------------------------------------------------
+# Plan-cache registry — the elastic runtime's recompilation surface
+# ---------------------------------------------------------------------------
+
+#: Every build-once compiled-plan cache in the process, by name.  Consumers
+#: (ring collectives, the MoE all-to-all, the paged-KV transfer and tier
+#: plans) register their module-level dicts here at import time, so a
+#: topology change can drop exactly the affected entries and let the next
+#: call rebuild them (~1.4 ms each) instead of replaying a schedule planned
+#: for a mesh that no longer exists.
+_PLAN_CACHES: dict[str, dict] = {}
+
+
+def register_plan_cache(name: str, cache: dict) -> dict:
+    """Register a build-once compiled-plan cache for elastic invalidation.
+
+    ``cache`` is the consumer's own module-level dict (held by reference,
+    never copied); returns it so the call can wrap the assignment."""
+    _PLAN_CACHES[name] = cache
+    return cache
+
+
+def plan_cache_stats() -> dict[str, int]:
+    """Entry count per registered cache — the recompile path's before/after
+    evidence (``RecoveryReport`` snapshots it around an invalidation)."""
+    return {name: len(cache) for name, cache in _PLAN_CACHES.items()}
+
+
+def invalidate_plan_caches(predicate: Callable[[tuple], bool],
+                           ) -> dict[str, list]:
+    """Drop every cached compiled plan whose key matches ``predicate``.
+
+    Returns ``{cache_name: [dropped keys]}`` (only non-empty caches appear)
+    so callers can report — and tests assert — exactly what was
+    invalidated.  Unmatched entries are untouched: invalidation is
+    O(affected plans), never a wholesale flush."""
+    dropped: dict[str, list] = {}
+    for name, cache in _PLAN_CACHES.items():
+        hits = [k for k in cache if predicate(k)]
+        for k in hits:
+            del cache[k]
+        if hits:
+            dropped[name] = hits
+    return dropped
+
+
+def invalidate_topology(fingerprint: tuple) -> dict[str, list]:
+    """Drop every cached plan built for topology ``fingerprint``.
+
+    ``fingerprint`` is ``Topology.fingerprint()`` — the ``("topo", g, l)``
+    tuple every consumer embeds in its cache key.  A ``None`` fingerprint
+    (the undeclared-flat case) is rejected: ``None`` also appears in keys
+    for unrelated fields (e.g. an undeclared accumulate op), so matching it
+    would over-invalidate; the elastic controller always *declares* its
+    topology precisely so eviction has an exact key to target."""
+    if fingerprint is None:
+        raise ValueError(
+            "invalidate_topology(None): the undeclared-flat fingerprint is "
+            "ambiguous in cache keys — declare a Topology (e.g. "
+            "Topology.flat(n)) so its fingerprint can be matched exactly")
+    return invalidate_plan_caches(
+        lambda key: any(el == fingerprint for el in key))
+
+
+# ---------------------------------------------------------------------------
 # Legacy-wrapper deprecation bookkeeping (satellite: warn exactly once)
 # ---------------------------------------------------------------------------
 
@@ -1234,4 +1298,8 @@ __all__ = [
     "PlanError",
     "OpRef",
     "warn_legacy_once",
+    "register_plan_cache",
+    "plan_cache_stats",
+    "invalidate_plan_caches",
+    "invalidate_topology",
 ]

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from typing import Callable
 
 
@@ -49,13 +49,19 @@ class StragglerMonitor:
         self.offenders: dict[str, int] = defaultdict(int)
         self._t0: float | None = None
         self._warmup_samples: list[float] = []
+        # recent healthy (source, duration) samples — what reset(source=)
+        # re-seeds the baseline from once the named source's are excluded
+        self._recent: deque[tuple[str, float]] = deque(maxlen=32)
 
     # -- context-manager style per-step timing ------------------------------
     def start(self) -> None:
         self._t0 = time.perf_counter()
 
     def stop(self, step: int, source: str = "local") -> StragglerEvent | None:
-        assert self._t0 is not None, "start() not called"
+        if self._t0 is None:
+            raise RuntimeError(
+                "StragglerMonitor.stop() without a matching start() — "
+                "call start() at the top of the step being timed")
         dt = time.perf_counter() - self._t0
         self._t0 = None
         return self.observe(step, dt, source)
@@ -70,6 +76,7 @@ class StragglerMonitor:
             # median of what has been seen — an outlier warmup step (compile
             # spike, slow first allocation) cannot seed or drag the EMA
             self._warmup_samples.append(duration)
+            self._recent.append((source, duration))
             self.ema = statistics.median(self._warmup_samples)
             return None
         if self.ema is None:
@@ -88,7 +95,36 @@ class StragglerMonitor:
         else:
             # straggler steps do not poison the EMA
             self.ema = (1 - self.alpha) * self.ema + self.alpha * duration
+            self._recent.append((source, duration))
         return event
+
+    def reset(self, source: str | None = None) -> None:
+        """Clear escalation state.
+
+        With ``source``, clears only that source — the **rejoin** path: a
+        worker re-admitted after quarantine must not inherit its old
+        offender count (one more slow step would immediately re-escalate)
+        nor keep biasing the baseline with its pre-eviction samples.  Its
+        events and recent samples are dropped and the EMA is re-seeded from
+        the median of the *other* sources' recent healthy steps, so the
+        rejoined worker is judged against the surviving mesh's pace.
+
+        Without ``source``, resets the whole monitor to its initial state
+        (fresh warmup)."""
+        if source is None:
+            self.ema = None
+            self.seen = 0
+            self.events.clear()
+            self.offenders.clear()
+            self._warmup_samples.clear()
+            self._recent.clear()
+            return
+        self.offenders.pop(source, None)
+        self.events = [e for e in self.events if e.source != source]
+        kept = [(s, d) for s, d in self._recent if s != source]
+        self._recent = deque(kept, maxlen=self._recent.maxlen)
+        if kept:
+            self.ema = statistics.median(d for _, d in kept)
 
     def chronic_offenders(self) -> list[str]:
         return [s for s, n in self.offenders.items()

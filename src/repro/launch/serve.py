@@ -87,6 +87,15 @@ def main(argv=None):
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="with --prefix-share: give every request the same "
                          "random prefix of this many tokens")
+    ap.add_argument("--inject", default=None, metavar="SPEC",
+                    help="elastic mode: drive the engine through "
+                         "repro.ft.elastic with a scripted fault spec, e.g. "
+                         "'slow:1@4x6,dead:1@8' (kind:worker@tick[xmag]; "
+                         "kinds slow/dead/bell/rejoin) or 'random:SEED'")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="with --inject: decode slots are owned "
+                         "n_slots//workers per worker; evicting a worker "
+                         "drains and requeues its slots")
     ap.add_argument("--dry-run", action="store_true",
                     help="with --disagg: run only the round-trip demo")
     args = ap.parse_args(argv)
@@ -116,13 +125,31 @@ def main(argv=None):
         prompt = np.concatenate([shared, rng.randint(0, cfg.vocab, size=tail)])
         eng.submit(Request(rid=rid, prompt=prompt,
                            max_new_tokens=args.max_new))
-    done = eng.run()
+    es = None
+    if args.inject is not None:
+        from repro.ft.elastic import ElasticServing
+        from repro.ft.inject import FaultScript
+        if args.inject.startswith("random:"):
+            script = FaultScript.random(int(args.inject.split(":", 1)[1]),
+                                        n_workers=args.workers)
+        else:
+            script = FaultScript.parse(args.inject)
+        es = ElasticServing(eng, script, n_workers=args.workers)
+        done = es.run()
+    else:
+        done = eng.run()
     dt = time.perf_counter() - t0
     toks = sum(len(c.tokens) for c in done)
     mode = "disagg/paged" if args.disagg else "dense"
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s, {args.slots} slots, {mode} KV, "
           f"{args.policy} admission)")
+    if es is not None:
+        st = es.stats()
+        print(f"[serve] elastic: workers={st['elastic']['workers']} "
+              f"evictions={st['evictions']} "
+              f"faults={st['faults_injected']} "
+              f"offline_slots={st['offline_slots']}")
     if args.disagg:
         print(f"[serve] pool stats: {eng.stats()}")
     for c in sorted(done, key=lambda c: c.rid)[:3]:

@@ -140,12 +140,20 @@ def claim_slot(ctrl: Window, perm, *, n_slots: int, lane: int = 0,
 
 def claim_slots(ctrl: Window, perm, scheduler, *, live: int = 0,
                 lane: int = 0, max_claims: int | None = None,
-                ) -> tuple[Window, list, list]:
+                source: str | None = None) -> tuple[Window, list, list]:
     """Policy-driven decode admission: claim up to the scheduler's ticket
     budget for this tick (:meth:`repro.serve.scheduler.Scheduler.
     ticket_window` — 0 under ``static`` policy while sequences are live,
     the free-slot count otherwise) via remote fetch_op, mapping each ticket
     through :meth:`~repro.serve.scheduler.Scheduler.slot_for_ticket`.
+
+    ``source`` names the claiming worker: its claim count is registered
+    host-side (:meth:`~repro.serve.scheduler.Scheduler.note_claims`) so
+    the tickets count against later windows until the worker binds them to
+    live sequences (``consume_claims``) — or is evicted, when
+    ``release_claims`` returns them (the elastic path; a leaked claim
+    would stall admission forever).  The ticket *values* stay device-side
+    (they are tracers inside the SPMD region); only the count is tracked.
 
     Returns ``(ctrl, tickets, slots)`` — possibly empty lists when the
     policy grants no admissions."""
@@ -158,6 +166,8 @@ def claim_slots(ctrl: Window, perm, scheduler, *, live: int = 0,
                                   offset=CTRL_TICKET, stream=lane)
         tickets.append(old[0])
         slots.append(scheduler.slot_for_ticket(old[0]))
+    if source is not None:
+        scheduler.note_claims(len(tickets), source=source)
     return ctrl, tickets, slots
 
 

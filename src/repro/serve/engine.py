@@ -484,6 +484,8 @@ class ServeEngine:
                 self._hot_since: dict[int, int] = {}
         self.scheduler = Scheduler(n_slots, policy)
         self.slot_free = [True] * n_slots
+        self._offline: set[int] = set()
+        self.evictions = 0
         self.slot_req: dict[int, Request] = {}
         self.slot_generated: dict[int, list] = {}
         self.slot_pos: dict[int, int] = {}
@@ -544,6 +546,52 @@ class ServeEngine:
                 self._finish_if_ended(slot)
         self._tick += 1
 
+    def evict_slots(self, slots, *, requeue: bool = True) -> int:
+        """Evict the live sequences on ``slots`` — the elastic path when a
+        worker owning them is quarantined.
+
+        Each victim releases its slot through the normal teardown (pages
+        freed / parked, tier and COW bookkeeping run) and, under
+        ``requeue=True``, its scheduler entry goes back to the **front** of
+        the queue with its original arrival intact — re-admission
+        re-prefills from the prompt, so greedy decode reproduces the lost
+        tokens bit-identically and no request is silently dropped.
+        Returns how many sequences were requeued."""
+        n = 0
+        for slot in slots:
+            if slot not in self.slot_req:
+                continue
+            entry = self.slot_entry.get(slot)
+            req = self.slot_req[slot]
+            self._release(slot)
+            self.evictions += 1
+            if requeue:
+                if entry is not None:
+                    self.scheduler.requeue(entry)
+                else:
+                    self.scheduler.submit(req, tick=self._tick)
+                n += 1
+        return n
+
+    def set_slots_offline(self, slots, offline: bool = True) -> None:
+        """Take decode slots out of (or back into) the admission pool — an
+        evicted worker's slots must not take new work, and a rejoined
+        worker's come back.  Offline slots read as not-free, so every
+        admission path (``_admit``, ticket windows via the free count)
+        skips them without special-casing."""
+        for slot in slots:
+            if offline:
+                if slot in self.slot_req:
+                    raise ValueError(
+                        f"slot {slot} still holds a live sequence — "
+                        f"evict_slots() it before taking it offline")
+                self._offline.add(slot)
+                self.slot_free[slot] = False
+            else:
+                self._offline.discard(slot)
+                if slot not in self.slot_req:
+                    self.slot_free[slot] = True
+
     def run(self, max_ticks: int = 10_000, *,
             strict: bool = False) -> list[Completion]:
         """Drive ticks until every submitted request completes or
@@ -589,7 +637,8 @@ class ServeEngine:
                "submitted": self.scheduler.submitted,
                "admitted": self.scheduler.admitted,
                "ticks": self._tick, "incomplete": self._incomplete,
-               "max_live": self.max_live}
+               "max_live": self.max_live, "evictions": self.evictions,
+               "offline_slots": len(self._offline)}
         if self.paged_kv:
             out.update(pages_allocated=self.pool.allocs,
                        pages_freed=self.pool.frees,
@@ -903,7 +952,7 @@ class ServeEngine:
                     [h for s in cand for h in self._cold[s]["host"]])
 
     def _release(self, slot: int) -> None:
-        self.slot_free[slot] = True
+        self.slot_free[slot] = slot not in self._offline
         del self.slot_req[slot]
         del self.slot_generated[slot]
         del self.slot_pos[slot]

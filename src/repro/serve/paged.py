@@ -38,7 +38,10 @@ from repro.core.rma import (
 
 Array = jax.Array
 
-_TRANSFER_PLANS: dict[tuple, object] = {}
+from repro.core.rma.plan import register_plan_cache as _register_plan_cache
+
+_TRANSFER_PLANS: dict[tuple, object] = _register_plan_cache(
+    "kv_transfer", {})
 
 
 def transfer_plan(pool_pages: int, pages: tuple, page_elems: int, dtype,
@@ -737,7 +740,7 @@ class KVPoolManager:
 # The cold tier's window: host-memory pages behind the same P5 machinery
 # ---------------------------------------------------------------------------
 
-_TIER_PLANS: dict[tuple, object] = {}
+_TIER_PLANS: dict[tuple, object] = _register_plan_cache("kv_tier_step", {})
 
 
 def tier_step_plan(pool_pages: int, promote: tuple, demote: tuple,

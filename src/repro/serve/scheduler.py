@@ -69,6 +69,7 @@ class Scheduler:
         self._queue: list[SchedEntry] = []
         self._seq = 0
         self._tenant_admitted: dict[int, int] = {}
+        self._claims: dict[str, int] = {}
         self.submitted = 0
         self.admitted = 0
 
@@ -156,14 +157,49 @@ class Scheduler:
     def ticket_window(self, live: int) -> int:
         """How many fetch_op admission tickets a decode lane may claim this
         tick on the disagg control window — the policy's admission decision
-        expressed as a ticket budget (``claim_slots`` consumes it)."""
+        expressed as a ticket budget (``claim_slots`` consumes it).
+
+        Tickets already claimed but not yet bound to a live sequence
+        (:meth:`note_claims`) count against the window: slots promised to
+        one worker's outstanding claims are not offered to another."""
         if self.policy == "static" and live > 0:
             return 0
-        return max(self.n_slots - live, 0)
+        return max(self.n_slots - live - self.outstanding_claims(), 0)
 
     def slot_for_ticket(self, ticket):
         """Map a claimed admission ticket to a decode slot."""
         return ticket % self.n_slots
+
+    # -- ticket claim bookkeeping (per claiming worker) -----------------------
+    def note_claims(self, n: int, *, source: str = "default") -> None:
+        """Record ``n`` fetch_op tickets claimed by ``source`` and not yet
+        bound to live sequences.  Host-side counts only — the tickets
+        themselves are device values inside the SPMD region."""
+        if n > 0:
+            self._claims[source] = self._claims.get(source, 0) + int(n)
+
+    def consume_claims(self, n: int = 1, *, source: str = "default") -> int:
+        """``source`` bound ``n`` of its claims to admitted sequences;
+        returns how many were actually outstanding (never negative)."""
+        cur = self._claims.get(source, 0)
+        take = min(cur, max(int(n), 0))
+        if cur - take:
+            self._claims[source] = cur - take
+        else:
+            self._claims.pop(source, None)
+        return take
+
+    def release_claims(self, source: str) -> int:
+        """Return **all** of ``source``'s unclaimed tickets to the window —
+        the eviction path: a quarantined worker's outstanding claims would
+        otherwise hold admission slots forever and stall recovery.
+        Returns how many were released."""
+        return self._claims.pop(source, 0)
+
+    def outstanding_claims(self, source: str | None = None) -> int:
+        if source is not None:
+            return self._claims.get(source, 0)
+        return sum(self._claims.values())
 
     # -- health ----------------------------------------------------------------
     def stats(self) -> dict:
@@ -173,6 +209,7 @@ class Scheduler:
             "submitted": self.submitted,
             "admitted": self.admitted,
             "tenants": dict(self._tenant_admitted),
+            "outstanding_claims": dict(self._claims),
         }
 
 

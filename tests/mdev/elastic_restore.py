@@ -1,9 +1,27 @@
-"""Elastic restore: save params sharded over data=4, restore onto data=2.
+"""Elastic restore + elastic runtime across devices.
 
+Default mode (any device count >= 4): save params sharded over data=4,
+restore onto data=2 — the checkpoint reshard path.
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=4.
+
+``--full`` mode (forces 8 fake devices itself): the PR-10 elastic-runtime
+mdev — evicting one worker of an 8-rank mesh
+
+* recompiles **only** the plans keyed by the dying topology fingerprint
+  (a plan cached under a different declared topology survives untouched),
+* migrates the victim's KV pages to a survivor as one batched memhandle
+  transfer on the dedicated migration stream with **zero** stale reads
+  (``err_count == 0`` on survivors; a read racing the eviction through the
+  evicted page's handle is zero-masked and **counted**),
+* and drains a mid-stream eviction to tokens bit-identical to a fault-free
+  run (requeued sequences re-prefill on the survivors).
 """
 import os
 import sys
+
+FULL = "--full" in sys.argv
+if FULL:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
@@ -40,3 +58,134 @@ restored2 = mgr.restore(1, like, shardings=sh4b)
 np.testing.assert_array_equal(np.asarray(restored2["w"]),
                               np.arange(64.0).reshape(8, 8))
 print("ELASTIC OK")
+
+if not FULL:
+    sys.exit(0)
+
+# ===========================================================================
+# --full: the elastic runtime on 8 devices
+# ===========================================================================
+from repro.core.rma import win_from_memhandle
+from repro.core.rma.collectives import all_reduce_plan
+from repro.core.rma.topology import Topology
+from repro.ft.elastic import (
+    EVICTED, MIGRATION_STREAM, ElasticController, ElasticServing,
+    migrate_pages)
+from repro.ft.inject import Fault, FaultScript
+from repro.serve.paged import PagedKVWindow, PageSpec
+
+N = 8
+assert jax.device_count() == N, jax.device_count()
+
+# -- part A: eviction recompiles only the fingerprint-changed plans ---------
+topo8 = Topology(N, 1)          # the serving mesh
+topo24 = Topology(2, 4)         # an unrelated cached layout
+p8 = all_reduce_plan("x", N, (32,), jnp.float32, topology=topo8)
+p24 = all_reduce_plan("x", N, (32,), jnp.float32, topology=topo24)
+rebuilt_plans = []
+
+
+def rebuild(new_topo, dropped):
+    rebuilt_plans.append(all_reduce_plan(
+        "x", new_topo.axis_size, (32,), jnp.float32, topology=new_topo))
+    return len(rebuilt_plans)
+
+
+ctl = ElasticController(N, topology=topo8, rebuild=rebuild)
+rep = ctl.apply_fault(Fault(3, "dead_worker", 7), 3)
+assert ctl.state_of(7) == EVICTED
+assert list(rep.plans_dropped) == ["ring_collectives"], rep.plans_dropped
+dropped_keys = rep.plans_dropped["ring_collectives"]
+assert all(topo8.fingerprint() in k for k in dropped_keys), dropped_keys
+assert rep.new_topology == Topology(7, 1)
+# the unaffected layout is still served from cache; the dead one is gone
+assert all_reduce_plan("x", N, (32,), jnp.float32, topology=topo24) is p24
+assert all_reduce_plan("x", N, (32,), jnp.float32, topology=topo8) is not p8
+assert rebuilt_plans and rebuilt_plans[0] is all_reduce_plan(
+    "x", 7, (32,), jnp.float32, topology=Topology(7, 1))
+print("RECOMPILE OK", len(dropped_keys), "dropped")
+
+# -- part B: live KV-page migration victim -> survivor ----------------------
+mesh = compat.make_mesh((N,), ("x",))
+spec = PageSpec(page_tokens=4, kv_heads=2, head_dim=8, n_pages=4)
+VICTIM, SURVIVOR = 7, 0
+mig_perm = ((VICTIM, SURVIVOR),)          # the only affected edge
+
+
+def scenario(_):
+    pool = PagedKVWindow.create(spec, "x", N, dtype=jnp.float32)
+    for p in range(4):
+        pool = pool.alloc_page(p)
+    rank = jax.lax.axis_index("x").astype(jnp.float32)
+    kv = jnp.full((spec.page_tokens, 2, spec.kv_heads, spec.head_dim),
+                  1.0, jnp.float32)
+    pool = pool.write_page_local(0, kv * (rank + 1))
+    pool = pool.write_page_local(1, kv * (rank + 1) * 10)
+    # victim's pages 0,1 land in survivor's spare pages 2,3: one batched
+    # put_handle replay on the dedicated migration stream
+    pool, moved = migrate_pages(pool, [(0, 2), (1, 3)], mig_perm,
+                                stream=MIGRATION_STREAM)
+    got2 = pool.read_page(2)[0, 0, 0, 0]
+    got3 = pool.read_page(3)[0, 0, 0, 0]
+    errs_mig = pool.err_count.astype(jnp.float32)
+    # eviction: victim frees its source pages (epoch bump) ...
+    stale_handle = pool.handles[0]
+    pool = pool.free_page(0)
+    pool = pool.free_page(1)
+    # ... and a read still racing the eviction through the old handle is
+    # zero-masked and counted, never the reused bytes
+    ring = tuple((i, (i + 1) % N) for i in range(N))
+    mhw = win_from_memhandle(pool.window, stale_handle)
+    mhw, stale = mhw.get(ring, offset=0, size=4)
+    errs_stale = mhw.err_count.astype(jnp.float32)
+    return jnp.concatenate([got2[None], got3[None], errs_mig[None], stale,
+                            errs_stale[None],
+                            jnp.asarray(moved, jnp.float32)[None]])
+
+
+g = jax.jit(compat.shard_map(scenario, mesh=mesh, in_specs=P(),
+                             out_specs=P("x"), check_vma=False))
+out = np.asarray(g(jnp.zeros((1,)))).reshape(N, 9)
+# only the survivor received the victim's payload (rank 7 wrote 8.0 / 80.0)
+assert out[SURVIVOR, 0] == 8.0, out[:, 0]
+assert out[SURVIVOR, 1] == 80.0, out[:, 1]
+# zero stale reads during migration on every survivor
+assert (out[:, 2] == 0.0).all(), out[:, 2]
+# the racing read is zero-masked everywhere — the evicted pages' bytes are
+# never observable — and counted through the stale handle
+assert (out[:, 3:7] == 0.0).all(), out[:, 3:7]
+assert (out[:, 7] == 1.0).all(), out[:, 7]
+assert (out[:, 8] == 2.0).all(), out[:, 8]   # both pages moved in one batch
+print("MIGRATE OK")
+
+# -- part C: mid-stream eviction drains bit-identical -----------------------
+from repro.configs.tiny import tiny_config
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+
+cfg = tiny_config("qwen3-4b")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.RandomState(0)
+prompts = [rng.randint(0, cfg.vocab, size=6) for _ in range(6)]
+
+
+def run(script=None):
+    eng = ServeEngine(model, params, n_slots=4, max_seq=32,
+                      paged_kv=True, page_tokens=8)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    if script is None:
+        return {c.rid: c.tokens for c in eng.run()}, None
+    es = ElasticServing(eng, script, n_workers=4)
+    return {c.rid: c.tokens for c in es.run(400)}, es
+
+
+base, _ = run()
+faulted, es = run(FaultScript.parse("dead:3@2"))
+assert faulted == base, "eviction must lose no tokens"
+assert es.stats()["evictions"] >= 0 and es.controller.state_of(3) == EVICTED
+es.engine.pool.check_conservation()
+print("DRAIN OK")
+
+print("ELASTIC FULL OK")

@@ -30,6 +30,18 @@ assert stat.ticket_window(live=0) == 4
 assert stat.ticket_window(live=1) == 0   # whole-batch drain before refill
 assert cont.slot_for_ticket(6) == 2
 
+# elastic eviction regression: a victim worker's unclaimed fetch_op tickets
+# must come back to the window on release, or the slots leak forever
+ela = Scheduler(4, "continuous")
+ela.note_claims(2, source="worker1")
+ela.note_claims(1, source="worker0")
+assert ela.ticket_window(live=0) == 1    # outstanding claims hold slots
+assert ela.consume_claims(1, source="worker0") == 1
+assert ela.ticket_window(live=1) == 1
+assert ela.release_claims("worker1") == 2  # worker1 evicted mid-claim
+assert ela.ticket_window(live=1) == 3
+assert ela.release_claims("worker1") == 0  # idempotent
+
 checks = demo_round_trip(n_seqs=2, pages_per_seq=2, n_lanes=2)
 assert all(checks.values()), checks
 

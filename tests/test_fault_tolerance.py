@@ -71,6 +71,25 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
         mgr.restore(1, {"w": jnp.zeros((2, 2))})
 
 
+def test_restore_missing_step_names_step_and_directory(tmp_path):
+    """Restoring a step that was never written (or was retired by
+    retention) must fail with a FileNotFoundError naming the step, the
+    directory, and the steps that *are* available — not an opaque OSError
+    from a missing manifest path."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(10, _state(jax.random.PRNGKey(0)), blocking=True)
+    mgr.save(20, _state(jax.random.PRNGKey(1)), blocking=True)
+    with pytest.raises(FileNotFoundError) as ei:
+        mgr.restore(99, _state(jax.random.PRNGKey(0)))
+    msg = str(ei.value)
+    assert "step 99" in msg and str(tmp_path) in msg
+    assert "[10, 20]" in msg
+    # an empty manager says so too
+    empty = CheckpointManager(str(tmp_path / "empty"))
+    with pytest.raises(FileNotFoundError, match="available steps: none"):
+        empty.restore(0, _state(jax.random.PRNGKey(0)))
+
+
 def test_restart_resumes_bitwise_identical(tmp_path):
     """Train 30 steps with a simulated preemption at 20; resume must produce
     the exact losses of an uninterrupted run (deterministic data + state)."""
@@ -120,6 +139,37 @@ def test_straggler_detection_and_escalation():
     assert escalated and escalated[0].source == "host7"
     # EMA not poisoned by stragglers
     assert mon.ema < 1.5
+
+
+def test_straggler_stop_without_start_raises_runtime_error():
+    """``stop()`` with no matching ``start()`` is a caller bug that must
+    survive ``python -O``: a RuntimeError, not a bare assert."""
+    mon = StragglerMonitor()
+    with pytest.raises(RuntimeError, match="without a matching start"):
+        mon.stop(0)
+    # and it still works as a context pair afterwards
+    mon.start()
+    mon.stop(0)
+
+
+def test_straggler_reset_source_forgets_offender():
+    """The elastic rejoin path: ``reset(source=)`` clears one worker's
+    strike history and re-seeds the EMA from the remaining healthy pace,
+    so a rejoined worker is not instantly re-quarantined by stale state."""
+    mon = StragglerMonitor(threshold=2.0, warmup_steps=2, escalate_after=2)
+    for s in range(6):
+        mon.observe(s, 1.0, source="w0")
+        mon.observe(s, 1.0, source="w1")
+    for s in range(6, 10):
+        mon.observe(s, 8.0, source="w1")
+    assert mon.chronic_offenders() == ["w1"]
+    mon.reset(source="w1")
+    assert mon.chronic_offenders() == []
+    assert all(e.source != "w1" for e in mon.events)
+    assert mon.ema == pytest.approx(1.0)
+    # a full reset returns the monitor to cold start (warmup again)
+    mon.reset()
+    assert mon.observe(0, 50.0, source="w0") is None
 
 
 def test_straggler_warmup_tolerant():
